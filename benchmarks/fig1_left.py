@@ -1,0 +1,24 @@
+"""Paper Fig. 1 (left): runtime of a 1024-dim DAXPY offload vs #clusters,
+baseline (sequential dispatch + polling) vs extended (multicast + credit
+counter). Prints CSV: clusters, t_baseline_cycles, t_multicast_cycles."""
+
+from repro.core import simulator as sim
+
+
+def rows():
+    out = []
+    for m in sim.PAPER_M_GRID:
+        tb = sim.offload_runtime(m, 1024, multicast=False)
+        tm = sim.offload_runtime(m, 1024, multicast=True)
+        out.append((m, tb, tm))
+    return out
+
+
+def main():
+    print("clusters,baseline_cycles,multicast_cycles,speedup")
+    for m, tb, tm in rows():
+        print(f"{m},{tb},{tm},{tb/tm:.4f}")
+
+
+if __name__ == "__main__":
+    main()

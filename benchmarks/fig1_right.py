@@ -1,0 +1,26 @@
+"""Paper Fig. 1 (right): speedup of the extended design over the baseline
+for problem sizes N in {1024..8192} and cluster counts M in {1..32}.
+Prints CSV rows (n, m, speedup); the maximum — 47.9% at (1024, 32) — is the
+paper's headline number."""
+
+from repro.core import simulator as sim
+
+
+def grid():
+    return {(n, m): sim.speedup(m, n)
+            for n in sim.PAPER_N_GRID_SPEEDUP
+            for m in sim.PAPER_M_GRID}
+
+
+def main():
+    g = grid()
+    print("n,m,speedup")
+    for (n, m), s in sorted(g.items()):
+        print(f"{n},{m},{s:.4f}")
+    (nb, mb), best = max(g.items(), key=lambda kv: kv[1])
+    print(f"# max speedup {100*(best-1):.1f}% at N={nb}, M={mb} "
+          f"(paper: 47.9% at N=1024, M=32)")
+
+
+if __name__ == "__main__":
+    main()

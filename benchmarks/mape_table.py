@@ -1,0 +1,36 @@
+"""Paper Eq. 2 validation table: MAPE of the runtime model per problem size.
+
+Two models are scored against the simulated "measurements":
+  * the paper's published Eq. 1 coefficients (367, 1/4, 2.6/8),
+  * coefficients fitted by least squares on the measurement grid.
+Both must come out below 1% (the paper's claim)."""
+
+from repro.core import runtime_model as rm
+from repro.core import simulator as sim
+
+
+def table():
+    samples = [
+        (m, n, float(sim.offload_runtime(m, n, multicast=True)))
+        for m in sim.PAPER_M_GRID for n in sim.PAPER_N_GRID_MODEL
+    ]
+    fitted = rm.fit(samples)
+    return {
+        "paper_eq1": rm.mape_by_n(rm.PAPER_MODEL, samples),
+        "fitted": rm.mape_by_n(fitted, samples),
+        "fitted_coeffs": (fitted.alpha, fitted.beta, fitted.gamma),
+    }
+
+
+def main():
+    t = table()
+    print("n,mape_paper_eq1_pct,mape_fitted_pct")
+    for n in sorted(t["paper_eq1"]):
+        print(f"{n},{t['paper_eq1'][n]:.4f},{t['fitted'][n]:.4f}")
+    a, b, g = t["fitted_coeffs"]
+    print(f"# fitted: t = {a:.1f} + {b:.4f}*N + {g:.4f}*N/M "
+          f"(paper Eq.1: 367 + 0.25*N + 0.325*N/M)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""§Roofline report: combine dry-run JSONs with analytic cell costs.
+
+Per (arch x shape) on the single-pod mesh (256 chips):
+    compute term    = FLOPs / (chips * 197 TFLOP/s)
+    memory term     = HBM bytes / (chips * 819 GB/s)
+    collective term = per-device collective operand bytes / 50 GB/s
+                      (parsed from the partitioned HLO, scan-trip corrected;
+                      equivalent to global_bytes / (chips * link_bw))
+
+FLOPs/bytes magnitudes are analytic (exact for our model code) because XLA's
+cost_analysis counts while-loop bodies once (documented in
+runtime/analytics.py; validated in tests/test_analytics.py). MODEL_FLOPS =
+6*N_active*D for training, 2*N_active*D per generated/scored token for
+serving.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report \
+           --dryrun results/dryrun --out results/roofline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPE_NAMES, shape_applicable
+from repro.core.planner import TPU_V5E
+from repro.runtime.analytics import cell_cost
+
+CHIPS = 256
+
+
+def _what_would_help(dom: str, arch: str, shape: str) -> str:
+    if dom == "collective":
+        return ("reduce gathered weight traffic: larger per-device shards "
+                "(lower FSDP fan-out), overlap collectives with compute, "
+                "or int8-compress gradients")
+    if dom == "memory":
+        return ("cut HBM traffic: fuse optimizer update (single pass), "
+                "keep KV cache in lower precision, larger arithmetic "
+                "intensity per pass")
+    return ("raise MXU utilization: bigger per-device matmul tiles "
+            "(less model-parallel splitting for this size), fuse small ops")
+
+
+def analyze(dryrun_dir: Path, mesh: str = "single") -> list[dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPE_NAMES:
+            ok, why = shape_applicable(cfg, shape)
+            rec_path = dryrun_dir / f"{arch}__{shape}__{mesh}.json"
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "skipped": True,
+                             "reason": why})
+                continue
+            rec = json.loads(rec_path.read_text()) if rec_path.exists() \
+                else {}
+            cost = cell_cost(cfg, shape)
+            cc = rec.get("collectives", {})
+            # Ring-model wire bytes when available (all-reduce = 2x payload).
+            coll_dev = cc.get("effective_bytes_total",
+                              cc.get("per_device_bytes_total", 0.0))
+            t_comp = cost.flops / (CHIPS * TPU_V5E.peak_flops)
+            t_mem = cost.hbm_bytes / (CHIPS * TPU_V5E.hbm_bw)
+            t_coll = coll_dev / TPU_V5E.ici_bw
+            terms = {"compute": t_comp, "memory": t_mem,
+                     "collective": t_coll}
+            dom = max(terms, key=terms.get)
+            bound = max(terms.values())
+            rows.append({
+                "arch": arch, "shape": shape, "skipped": False,
+                "ok": bool(rec.get("ok")),
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll,
+                "dominant": dom,
+                "bound_s": bound,
+                "flops": cost.flops,
+                "hbm_bytes": cost.hbm_bytes,
+                "coll_bytes_per_device": coll_dev,
+                "model_flops": cost.model_flops,
+                "useful_ratio": cost.model_flops / max(cost.flops, 1),
+                # MFU the step achieves if it runs exactly at the binding
+                # roofline term — the §Perf score for compute-style cells.
+                "mfu_at_bound": cost.model_flops
+                / (max(bound, 1e-30) * CHIPS * TPU_V5E.peak_flops),
+                "peak_bytes_per_device": rec.get("memory", {})
+                .get("peak_bytes"),
+                "compile_s": rec.get("compile_s"),
+                "fix": _what_would_help(dom, arch, shape),
+            })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MFU@bound | useful FLOP ratio | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — |")
+            continue
+        pk = r.get("peak_bytes_per_device")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['mfu_at_bound']:.3f} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{pk / 2**30 if pk else float('nan'):.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = analyze(Path(args.dryrun), args.mesh)
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

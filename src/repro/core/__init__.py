@@ -1,0 +1,43 @@
+"""The paper's primary contribution, as a composable JAX layer.
+
+Colagrande & Benini, "Optimizing Offload Performance in Heterogeneous MPSoCs"
+(2024): hardware/software co-design of the host->accelerator offload path
+(multicast dispatch + credit-counter completion), an Amdahl-style runtime
+model with <1% MAPE, and the offload-decision problem derived from it.
+
+Submodules:
+  simulator     — cycle model of the Manticore offload path (baseline vs
+                  extended design); reproduces the paper's §III numbers.
+  runtime_model — t̂(M,N) = alpha + beta*N + gamma*N/M; fitting + MAPE (Eq. 2).
+  decision      — M_min under a deadline (Eq. 3), argmin-M, host-vs-offload.
+  dispatch      — Sequential (baseline) vs Multicast job dispatch over JAX
+                  devices.
+  sync          — Polling (baseline) vs CreditCounter completion.
+  planner       — the model generalized with roofline terms for TPU pods;
+                  drives sharding-extent decisions in repro.launch.
+"""
+
+from . import decision, dispatch, planner, runtime_model, simulator, sync
+from .decision import (OffloadDecision, best_m, breakeven_n,
+                       m_min_for_deadline, should_offload)
+from .dispatch import (DISPATCHERS, MulticastDispatcher, SequentialDispatcher)
+from .planner import TPU_V5E, ChipSpec, JobStats, RooflineTerms, choose_extent, roofline
+from .runtime_model import PAPER_MODEL, OffloadModel, fit, fit_from_simulator, mape, mape_by_n
+from .simulator import (DAXPY, HWParams, KernelSpec, OffloadTrace,
+                        host_runtime, offload_runtime, simulate_offload,
+                        speedup, sweep)
+from .sync import (CreditCounterSync, FaultDetected, PollingSync,
+                   attach_credits, credit_threshold, emit_credits)
+
+__all__ = [
+    "simulator", "runtime_model", "decision", "dispatch", "sync", "planner",
+    "HWParams", "KernelSpec", "DAXPY", "OffloadTrace", "simulate_offload",
+    "offload_runtime", "host_runtime", "speedup", "sweep",
+    "OffloadModel", "PAPER_MODEL", "fit", "fit_from_simulator", "mape",
+    "mape_by_n", "OffloadDecision", "m_min_for_deadline", "best_m",
+    "should_offload", "breakeven_n", "MulticastDispatcher",
+    "SequentialDispatcher", "DISPATCHERS", "CreditCounterSync", "PollingSync",
+    "FaultDetected", "attach_credits", "emit_credits", "credit_threshold",
+    "ChipSpec", "TPU_V5E", "JobStats", "RooflineTerms", "roofline",
+    "choose_extent",
+]

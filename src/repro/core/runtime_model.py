@@ -1,0 +1,141 @@
+"""Analytical offload-runtime model (paper Eq. 1) and its validation (Eq. 2).
+
+    t̂_off(M, N) = alpha + beta * N + gamma * N / M
+
+alpha  : constant offload overhead (dispatch + wakeup + sync + host return),
+beta   : serial per-element term (shared operand-bus bandwidth),
+gamma  : parallel per-element term (per-cluster compute), divided by M.
+
+The paper instantiates (alpha, beta, gamma) = (367, 1/4, 2.6/8) for the DAXPY
+kernel on the extended (multicast + credit-counter) design and validates <1%
+MAPE.  Here the coefficients can also be *fitted* from (M, N, t) samples —
+simulated or measured — by linear least squares, since the model is linear in
+its coefficients with features (1, N, N/M).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OffloadModel:
+    """t̂(M, N) = alpha + beta*N + gamma*N/M  [cycles]."""
+
+    alpha: float
+    beta: float
+    gamma: float
+
+    def predict(self, m: int | np.ndarray, n: int | np.ndarray) -> np.ndarray:
+        m = np.asarray(m, dtype=np.float64)
+        n = np.asarray(n, dtype=np.float64)
+        return self.alpha + self.beta * n + self.gamma * n / m
+
+    def serial_fraction(self, m: int, n: int) -> float:
+        """Amdahl serial fraction: overhead + serial term vs total at M=m."""
+        t = float(self.predict(m, n))
+        return (self.alpha + self.beta * n) / t
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"t̂(M,N) = {self.alpha:.1f} + {self.beta:.4f}*N"
+                f" + {self.gamma:.4f}*N/M")
+
+
+#: The paper's published model for the extended design (Eq. 1).
+PAPER_MODEL = OffloadModel(alpha=367.0, beta=0.25, gamma=2.6 / 8.0)
+
+
+def fit(samples: Iterable[tuple[int, int, float]]) -> OffloadModel:
+    """Least-squares fit of (alpha, beta, gamma) from (M, N, t) samples.
+
+    The model is linear in the coefficients: t = [1, N, N/M] @ [a, b, g].
+    """
+    samples = list(samples)
+    if len(samples) < 3:
+        raise ValueError("need >= 3 samples to fit 3 coefficients")
+    a = np.array([[1.0, n, n / m] for m, n, _ in samples], dtype=np.float64)
+    y = np.array([t for _, _, t in samples], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    return OffloadModel(alpha=float(coef[0]), beta=float(coef[1]),
+                        gamma=float(coef[2]))
+
+
+def mape(model: OffloadModel, samples: Iterable[tuple[int, int, float]]) -> float:
+    """Mean absolute percentage error over (M, N, t) samples (paper Eq. 2)."""
+    samples = list(samples)
+    if not samples:
+        raise ValueError("no samples")
+    errs = [
+        abs(t - float(model.predict(m, n))) / t for m, n, t in samples
+    ]
+    return 100.0 * sum(errs) / len(errs)
+
+
+def mape_by_n(
+    model: OffloadModel,
+    samples: Iterable[tuple[int, int, float]],
+) -> dict[int, float]:
+    """Paper Eq. 2: MAPE over all M configurations, reported per problem size."""
+    by_n: dict[int, list[tuple[int, int, float]]] = {}
+    for m, n, t in samples:
+        by_n.setdefault(n, []).append((m, n, t))
+    return {n: mape(model, group) for n, group in sorted(by_n.items())}
+
+
+@dataclass(frozen=True)
+class LinearDispatchModel:
+    """Baseline-design model: the dispatch overhead grows linearly with M.
+
+        t̂_base(M, N) = alpha + delta*M + beta*N + gamma*N/M
+    """
+
+    alpha: float
+    delta: float
+    beta: float
+    gamma: float
+
+    def predict(self, m, n) -> np.ndarray:
+        m = np.asarray(m, dtype=np.float64)
+        n = np.asarray(n, dtype=np.float64)
+        return self.alpha + self.delta * m + self.beta * n + self.gamma * n / m
+
+    def optimal_m(self, n: int) -> float:
+        """Continuous minimizer: d t/dM = delta - gamma*N/M^2 = 0."""
+        return math.sqrt(self.gamma * n / self.delta)
+
+
+def fit_linear_dispatch(
+    samples: Iterable[tuple[int, int, float]],
+) -> LinearDispatchModel:
+    """Fit the 4-coefficient baseline model (features 1, M, N, N/M)."""
+    samples = list(samples)
+    if len(samples) < 4:
+        raise ValueError("need >= 4 samples to fit 4 coefficients")
+    a = np.array([[1.0, m, n, n / m] for m, n, _ in samples], dtype=np.float64)
+    y = np.array([t for _, _, t in samples], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    return LinearDispatchModel(alpha=float(coef[0]), delta=float(coef[1]),
+                               beta=float(coef[2]), gamma=float(coef[3]))
+
+
+def fit_from_simulator(
+    ms: Sequence[int] | None = None,
+    ns: Sequence[int] | None = None,
+    *,
+    multicast: bool = True,
+) -> OffloadModel | LinearDispatchModel:
+    """Convenience: fit the appropriate model from the Manticore simulator."""
+    from . import simulator as sim
+
+    ms = list(ms if ms is not None else sim.PAPER_M_GRID)
+    ns = list(ns if ns is not None else sim.PAPER_N_GRID_MODEL)
+    samples = [
+        (m, n, float(sim.offload_runtime(m, n, multicast=multicast)))
+        for m in ms
+        for n in ns
+    ]
+    return fit(samples) if multicast else fit_linear_dispatch(samples)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+The paper's offloaded job is DAXPY (axpy-family elementwise streaming);
+its framework-level twin is the fused optimizer update. Each kernel ships
+with a pure-jnp oracle in ``ref.py`` and a shape-agnostic wrapper in
+``ops.py``; correctness is validated in ``interpret=True`` mode on CPU,
+performance targets the TPU VPU (128-lane blocks staged through VMEM).
+"""
+
+from . import ops, ref
+from .ops import adamw_update, daxpy, pack_hparams
+
+__all__ = ["ops", "ref", "daxpy", "adamw_update", "pack_hparams"]

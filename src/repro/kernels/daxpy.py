@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for DAXPY — the paper's offloaded kernel.
+
+The paper offloads ``y <- a*x + y`` to M accelerator clusters, each cluster
+streaming its slice through its local scratchpad. The TPU-native re-design
+(see DESIGN.md §2): the "cluster scratchpad" becomes VMEM, the per-cluster
+slice becomes a VMEM-resident block selected by a BlockSpec, and the grid
+dimension plays the role of the cluster loop. Data is laid out 2-D
+``(rows, 128)`` so the trailing dimension matches the VPU lane width and the
+block's leading dimension is a multiple of the 8-row sublane tile (f32).
+
+The kernel is intentionally memory-bound (24 B moved per 2 FLOP) — that is the
+*point* of the paper's experiment: for such kernels the offload overhead, not
+the compute, governs scaling, which is what the offload planner models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128      # TPU vector lane width
+SUBLANE = 8     # f32 sublane tile
+
+
+def _daxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    # One VMEM block per grid step: o = a*x + y, fully vectorized on the VPU.
+    a = a_ref[0, 0]
+    o_ref[...] = a * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def daxpy_2d(
+    a: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a*x + y`` over ``(rows, 128)``-shaped operands.
+
+    ``block_rows`` fixes the VMEM working set: 3 operands * block_rows * 128 *
+    4 B = 393 KiB at the default — comfortably inside the ~16 MiB/core VMEM
+    with room for double buffering.
+    """
+    if x.ndim != 2 or x.shape[1] != LANE:
+        raise ValueError(f"expected (rows, {LANE}), got {x.shape}")
+    if x.shape != y.shape:
+        raise ValueError("x and y must match")
+    rows = x.shape[0]
+    if rows % block_rows:
+        raise ValueError(f"rows ({rows}) must be a multiple of block_rows "
+                         f"({block_rows})")
+    a2 = jnp.asarray(a, dtype=x.dtype).reshape(1, 1)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _daxpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),           # scalar a
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),  # x block
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),  # y block
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(a2, x, y)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused AdamW parameter update.
+
+The optimizer update is the framework's own "fine-grained offloaded job": a
+chain of small elementwise ops (axpy-family, like the paper's DAXPY) over
+every parameter. Unfused, XLA materializes several HBM round-trips per tensor
+(m, v, p each read+written, plus temporaries). This kernel performs the whole
+AdamW step in a single pass per VMEM block:
+
+    m <- b1*m + (1-b1)*g
+    v <- b2*v + (1-b2)*g^2
+    p <- p - lr * ( m_hat / (sqrt(v_hat) + eps) + wd * p )
+
+with bias corrections folded into scalars on the host. Traffic per element:
+read p,g,m,v + write p,m,v = 7 * 4 B = 28 B — the roofline minimum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _adamw_kernel(hp_ref, p_ref, g_ref, m_ref, v_ref,
+                  po_ref, mo_ref, vo_ref):
+    lr = hp_ref[0, 0]
+    b1 = hp_ref[0, 1]
+    b2 = hp_ref[0, 2]
+    eps = hp_ref[0, 3]
+    wd = hp_ref[0, 4]
+    c1 = hp_ref[0, 5]   # 1 / (1 - b1^t)
+    c2 = hp_ref[0, 6]   # 1 / (1 - b2^t)
+
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    m_hat = m * c1
+    v_hat = v * c2
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + wd * p
+    po_ref[...] = (p - lr * update).astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def adamw_2d(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    hp: jax.Array,
+    *,
+    block_rows: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused AdamW over ``(rows, 128)`` operands.
+
+    ``hp`` is the packed hyper-parameter vector
+    ``[lr, b1, b2, eps, wd, 1/(1-b1^t), 1/(1-b2^t), 0]`` (f32, shape (1, 8)).
+    ``m``/``v`` are f32; ``p``/``g`` may be f32 or bf16 (master-weight layout
+    is handled one level up, in repro.optim).
+    """
+    rows = p.shape[0]
+    if p.ndim != 2 or p.shape[1] != LANE:
+        raise ValueError(f"expected (rows, {LANE}), got {p.shape}")
+    if rows % block_rows:
+        raise ValueError("rows must divide block_rows")
+    if hp.shape != (1, 8):
+        raise ValueError("hp must be (1, 8)")
+    grid = (rows // block_rows,)
+    blk = lambda i: (i, 0)  # noqa: E731
+    bspec = pl.BlockSpec((block_rows, LANE), blk)
+    return pl.pallas_call(
+        _adamw_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (0, 0)),
+                  bspec, bspec, bspec, bspec],
+        out_specs=(bspec, bspec, bspec),
+        out_shape=(
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v.shape, jnp.float32),
+        ),
+        interpret=interpret,
+    )(hp, p, g, m, v)
+
+
+def pack_hparams(lr: float, b1: float, b2: float, eps: float, wd: float,
+                 step: jax.Array | int) -> jax.Array:
+    """Fold bias corrections into the scalar block (host-side, once/step)."""
+    step = jnp.asarray(step, jnp.float32)
+    c1 = 1.0 / (1.0 - jnp.asarray(b1, jnp.float32) ** step)
+    c2 = 1.0 / (1.0 - jnp.asarray(b2, jnp.float32) ** step)
+    return jnp.stack([jnp.float32(lr), jnp.float32(b1), jnp.float32(b2),
+                      jnp.float32(eps), jnp.float32(wd), c1, c2,
+                      jnp.float32(0.0)]).reshape(1, 8)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Arbitrary-shape operands are flattened, zero-padded to a whole number of
+``(block_rows, 128)`` VMEM blocks, run through the kernel, and un-padded.
+``interpret=True`` executes the kernel body in Python on CPU (used by the
+test-suite oracle sweeps); on TPU the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import daxpy as _daxpy_mod
+from . import fused_adamw as _adamw_mod
+from .fused_adamw import pack_hparams
+
+LANE = _daxpy_mod.LANE
+
+
+def _to_blocks(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    """Flatten + pad to (rows, LANE) with rows % block_rows == 0."""
+    n = x.size
+    per_block = block_rows * LANE
+    padded = -(-n // per_block) * per_block
+    flat = jnp.ravel(x)
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANE), n
+
+
+def _from_blocks(x2: jax.Array, n: int, shape, dtype) -> jax.Array:
+    return jnp.ravel(x2)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def daxpy(a, x, y, *, block_rows: int = 256, interpret: bool = False):
+    """``a*x + y`` for any-shaped x/y (the paper's offloaded kernel)."""
+    if x.shape != y.shape:
+        raise ValueError("x and y must have equal shapes")
+    x2, n = _to_blocks(x, block_rows)
+    y2, _ = _to_blocks(y, block_rows)
+    o2 = _daxpy_mod.daxpy_2d(a, x2, y2, block_rows=block_rows,
+                             interpret=interpret)
+    return _from_blocks(o2, n, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def adamw_update(p, g, m, v, hp, *, block_rows: int = 128,
+                 interpret: bool = False):
+    """Fused AdamW for any-shaped tensors; returns (p, m, v).
+
+    ``hp`` comes from :func:`pack_hparams` (bias corrections pre-folded).
+    """
+    p2, n = _to_blocks(p, block_rows)
+    g2, _ = _to_blocks(g, block_rows)
+    m2, _ = _to_blocks(m, block_rows)
+    v2, _ = _to_blocks(v, block_rows)
+    po, mo, vo = _adamw_mod.adamw_2d(p2, g2, m2, v2, hp,
+                                     block_rows=block_rows,
+                                     interpret=interpret)
+    return (_from_blocks(po, n, p.shape, p.dtype),
+            _from_blocks(mo, n, m.shape, jnp.float32),
+            _from_blocks(vo, n, v.shape, jnp.float32))
+
+
+__all__ = ["daxpy", "adamw_update", "pack_hparams"]

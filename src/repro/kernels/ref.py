@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def daxpy(a, x, y):
+    """y <- a*x + y, any shape/dtype."""
+    return jnp.asarray(a, x.dtype) * x + y
+
+
+def adamw(p, g, m, v, *, lr, b1, b2, eps, wd, step):
+    """Reference AdamW update with bias correction; returns (p, m, v).
+
+    m/v are f32; p/g may be lower precision (update math in f32).
+    """
+    step = jnp.asarray(step, jnp.float32)
+    g32 = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g32
+    v_new = b2 * v + (1.0 - b2) * g32 * g32
+    c1 = 1.0 / (1.0 - jnp.float32(b1) ** step)
+    c2 = 1.0 / (1.0 - jnp.float32(b2) ** step)
+    update = (m_new * c1) / (jnp.sqrt(v_new * c2) + eps) + wd * p32
+    p_new = (p32 - lr * update).astype(p.dtype)
+    return p_new, m_new, v_new

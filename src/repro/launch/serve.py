@@ -1,0 +1,121 @@
+"""Serving driver: batched prefill + decode with offload-planner decisions.
+
+The paper's offload-decision problem, at serving granularity: given a batch
+of requests (a "job" of N tokens), the planner chooses the parallel extent —
+how much of the mesh the job should use — from the fitted runtime model
+t̂(M) = alpha + beta*N + gamma*N/M, and the host can derive M_min under a
+latency SLO (Eq. 3). Completion is signalled by the credit counter (one
+scalar read per step).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --reduced \
+      --prompts 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import decision, runtime_model
+from repro.core.sync import CreditCounterSync
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import init_cache, init_params, scaled_down
+
+
+def serve(arch: str, *, reduced: bool = True, prompts: int = 4,
+          prompt_len: int = 32, gen: int = 16,
+          mesh_shape=(1, 1), slo_us: float | None = None) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = scaled_down(cfg)
+    if cfg.frontend == "vision_patches":
+        cfg = dataclasses.replace(cfg, frontend="")
+    mesh = make_host_mesh(*mesh_shape)
+    max_len = prompt_len + gen
+
+    with mesh:
+        params = init_params(jax.random.key(0), cfg)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((prompts, prompt_len),
+                                                    jnp.int32)}
+        pre = make_prefill_step(cfg, mesh, batch_abs, max_len=max_len)
+        params = jax.device_put(params, pre.in_shardings[0])
+        pre_jit = jax.jit(pre.fn, in_shardings=pre.in_shardings,
+                          out_shardings=pre.out_shardings)
+
+        caches_abs = jax.eval_shape(
+            lambda: init_cache(cfg, prompts, max_len=max_len))
+        dec = make_decode_step(cfg, mesh, {
+            "tokens": jax.ShapeDtypeStruct((prompts, 1), jnp.int32),
+            "caches": caches_abs,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        })
+        dec_jit = jax.jit(dec.fn, in_shardings=dec.in_shardings,
+                          out_shardings=dec.out_shardings,
+                          donate_argnums=dec.donate_argnums)
+
+        sync = CreditCounterSync(mesh)
+        tokens = jax.random.randint(jax.random.key(1),
+                                    (prompts, prompt_len), 0,
+                                    cfg.vocab_size, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        out = pre_jit(params, {"tokens": tokens})
+        sync.wait(out["credits"])            # one scalar read: "the IRQ"
+        t_prefill = time.perf_counter() - t0
+
+        caches = out["caches"]
+        tok = out["next_token"][:, None]
+        generated = [tok]
+        t0 = time.perf_counter()
+        for i in range(gen - 1):
+            out = dec_jit(params, tok, caches, jnp.int32(prompt_len + i))
+            caches = out["caches"]
+            tok = out["next_token"][:, None]
+            generated.append(tok)
+        sync.wait(out["credits"])
+        t_decode = time.perf_counter() - t0
+
+    gen_tokens = np.concatenate([np.asarray(t) for t in generated], axis=1)
+
+    # Offload-decision report for this serving job (per paper Eq. 1/3):
+    # fit the runtime model on the Manticore simulator's scale-free form and
+    # answer "how many workers does a job of this size need".
+    model = runtime_model.fit_from_simulator()
+    n_job = prompts * prompt_len
+    rep = decision.deadline_report(model, min(n_job, 8192),
+                                   t_max=(slo_us or 700.0),
+                                   available=[1, 2, 4, 8, 16, 32])
+    return {
+        "arch": cfg.name,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_s": prompts * (gen - 1) / max(t_decode, 1e-9),
+        "generated": gen_tokens,
+        "offload_decision": rep,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+    out = serve(args.arch, reduced=args.reduced, prompts=args.prompts,
+                prompt_len=args.prompt_len, gen=args.gen)
+    print(f"{out['arch']}: prefill {out['prefill_s']*1e3:.1f} ms, "
+          f"decode {out['decode_tok_s']:.1f} tok/s")
+    print("offload decision (Eq.3):", out["offload_decision"])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: one unified decoder stack covering all assigned architectures."""
+
+from .config import ModelConfig, scaled_down
+from .layers import NO_SHARD, ShardCtx
+from .model import (cross_entropy, decode_step, forward, init_cache,
+                    init_params, prefill)
+
+__all__ = ["ModelConfig", "scaled_down", "ShardCtx", "NO_SHARD",
+           "init_params", "forward", "decode_step", "init_cache",
+           "cross_entropy", "prefill"]

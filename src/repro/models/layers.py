@@ -1,0 +1,583 @@
+"""Neural-net layers shared by every assigned architecture.
+
+All functions are pure (params are explicit pytrees) and mesh-agnostic:
+sharding hints are applied through an optional ``ShardCtx`` whose
+``constrain`` is a no-op outside a mesh context, so the same code runs in
+single-device smoke tests and in the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+# --------------------------------------------------------------------------- #
+# Sharding context
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Logical-axis handles used for activation sharding constraints."""
+
+    dp: tuple[str, ...] = ()       # data-parallel mesh axes (maybe incl. pod)
+    tp: str | None = None          # tensor/model-parallel mesh axis
+    active: bool = False
+
+    def constrain(self, x, *spec):
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+NO_SHARD = ShardCtx()
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float) -> jax.Array:
+    """Mamba2's output norm: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    w, eps)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings (standard / half / M-RoPE)
+# --------------------------------------------------------------------------- #
+def _rope_angles(positions: jax.Array, dim_half: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, dim_half), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(dim_half, dtype=jnp.float32) / dim_half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate interleaved-as-halves pairs: x (..., 2*dim_half)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[..., None, :] if x.ndim == cos.ndim + 1 else cos
+    sin = sin[..., None, :] if x.ndim == sin.ndim + 1 else sin
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (B, S, 3) for M-RoPE."""
+    d = x.shape[-1]
+    if cfg.rope_variant == "half":
+        # ChatGLM 2D-RoPE: rotary on the first half of the head dim only.
+        rot, keep = x[..., : d // 2], x[..., d // 2:]
+        cos, sin = _rope_angles(positions, d // 4, cfg.rope_theta)
+        return jnp.concatenate([_rotate(rot, cos, sin), keep], axis=-1)
+    if cfg.rope_variant == "mrope":
+        # Qwen2-VL multimodal RoPE: the d/2 frequency slots are split into
+        # (t, h, w) sections, each driven by its own position stream.
+        secs = cfg.mrope_sections or (d // 4, d // 8, d // 8)
+        if sum(secs) != d // 2:
+            raise ValueError("mrope sections must sum to head_dim/2")
+        if positions.ndim == 2:  # text-only: all three streams identical
+            positions = positions[..., None].repeat(3, axis=-1)
+        cos_parts, sin_parts = [], []
+        for i, s in enumerate(secs):
+            c, si = _rope_angles(positions[..., i], s, cfg.rope_theta)
+            cos_parts.append(c)
+            sin_parts.append(si)
+        cos = jnp.concatenate(cos_parts, axis=-1)
+        sin = jnp.concatenate(sin_parts, axis=-1)
+        return _rotate(x, cos, sin)
+    cos, sin = _rope_angles(positions, d // 2, cfg.rope_theta)
+    return _rotate(x, cos, sin)
+
+
+# --------------------------------------------------------------------------- #
+# Attention (GQA, causal, optional sliding window, flash-style chunking)
+# --------------------------------------------------------------------------- #
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B,S,K,D) -> (B,S,H,D) by repeating each KV head H/K times.
+
+    K-major head order matches the GQA convention (q head h reads kv head
+    h // rep). Under tensor parallelism the repeat keeps the head dim
+    shardable by the model axis for any K (the broadcast fuses into the
+    downstream einsum, so no extra HBM traffic materializes).
+    """
+    rep = num_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Skv, K, D)
+    v: jax.Array,            # (B, Skv, K, D)
+    *,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,         # 0 => full causal
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Causal GQA attention with online softmax over KV chunks.
+
+    Peak memory is O(Sq * kv_chunk) per head instead of O(Sq * Skv) — the
+    VMEM-tiling insight of flash attention, expressed as a lax.scan so the
+    same code path serves 4k training and 32k prefill. Block-sparsity for
+    sliding windows is exploited by masking (a banded-gather variant is a
+    §Perf optimization, see EXPERIMENTS.md).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    scale = 1.0 / math.sqrt(d)
+
+    kv_chunk = min(kv_chunk, skv)  # never pad beyond the sequence
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        acc, m, l = carry
+        j, (kj, vj) = inputs
+        kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] <= q_pos[:, None]  # causal
+        mask &= kv_pos[None, :] < skv             # padding
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqs,bshd->bqhd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, D) — one new token
+    k_cache: jax.Array,      # (B, S, K, D)
+    v_cache: jax.Array,      # (B, S, K, D)
+    cache_len: jax.Array,    # scalar int32: #valid positions (incl. new one)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over a (possibly windowed) KV cache."""
+    b, _, h, d = q.shape
+    skv = k_cache.shape[1]
+    kk = repeat_kv(k_cache, h)
+    vv = repeat_kv(v_cache, h)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kk,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    pos = jnp.arange(skv)
+    mask = pos < cache_len
+    if window:
+        mask &= pos > cache_len - 1 - window
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(vv.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Int8 KV-cache quantization (per-vector symmetric scales)
+# --------------------------------------------------------------------------- #
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., D) -> int8 values + f32 scale per vector."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention block (projections + rope + attention)
+# --------------------------------------------------------------------------- #
+def attention_block(
+    x: jax.Array,                  # (B, S, d)
+    p: dict,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    positions: jax.Array,
+    window: int = 0,
+    cache: dict | None = None,     # {"k","v": (B,Smax,K,D), "len": int32}
+) -> tuple[jax.Array, dict | None]:
+    b, s, _ = x.shape
+    hd = cfg.qk_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    q = ctx.constrain(q, ctx.dp, None, ctx.tp, None)
+    k = apply_rope(k, positions, cfg)
+    q = apply_rope(q, positions, cfg)
+
+    quant = "k_scale" in (cache or {})
+
+    def store(name, val, at):
+        arr = cache[name]
+        if quant:
+            qv, sc = quantize_kv(val)
+            arr = jax.lax.dynamic_update_slice(arr, qv, at)
+            scl = jax.lax.dynamic_update_slice(
+                cache[f"{name}_scale"], sc.astype(jnp.float32), at)
+            return arr, scl
+        return jax.lax.dynamic_update_slice(
+            arr, val.astype(arr.dtype), at), None
+
+    def load(name, arr, scl):
+        if quant:
+            return dequantize_kv(arr, scl, x.dtype)
+        return arr
+
+    new_cache = None
+    if cache is None:
+        out = chunked_attention(q, k, v, window=window)
+    elif s > 1:
+        # Prefill: compute full-sequence attention AND populate the cache.
+        slots = cache["k"].shape[1]
+        kk, vv = k, v
+        if slots < s:  # ring buffer (local layers): keep the last `slots`
+            # Ring invariant: token at absolute position p lives in slot
+            # p % slots — holds for the plain copy below iff slots | s.
+            if s % slots:
+                raise ValueError("prefill length must be a multiple of the "
+                                 "ring-buffer window")
+            kk, vv = k[:, s - slots:], v[:, s - slots:]
+        k_cache, k_scl = store("k", kk, (0, 0, 0, 0))
+        v_cache, v_scl = store("v", vv, (0, 0, 0, 0))
+        out = chunked_attention(q, k, v, window=window)
+        new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"] + s}
+        if quant:
+            new_cache.update({"k_scale": k_scl, "v_scale": v_scl})
+    else:
+        idx = cache["len"]
+        slots = cache["k"].shape[1]
+        # Flash-decoding layout: for one query token the parallel axis is
+        # the CACHE (slots live on the model axis), so replicate the tiny q
+        # across model instead of head-sharding it — otherwise heads and
+        # slots contend for the same mesh axis and the partitioner gathers
+        # the full KV cache every step (§Perf cell 3, iteration 5).
+        from repro.runtime.flags import baseline_mode
+        _flashdec = not baseline_mode()
+        if _flashdec:
+            q = ctx.constrain(q, ctx.dp, None, None, None)
+        # Local layers keep a ring buffer of exactly `window` slots: the new
+        # token overwrites the slot that just left the window, so every
+        # resident slot is in-window by construction and no window mask is
+        # needed (only the not-yet-filled mask while len < slots).
+        is_ring = bool(window) and slots <= window
+        write = jax.lax.rem(idx, slots) if is_ring else idx
+        k_cache, k_scl = store("k", k, (0, write, 0, 0))
+        v_cache, v_scl = store("v", v, (0, write, 0, 0))
+        k_use = load("k", k_cache, k_scl)
+        v_use = load("v", v_cache, v_scl)
+        out = decode_attention(q, k_use, v_use, idx + 1,
+                               window=0 if is_ring else window)
+        # Keep the slot-parallel domain through the output projection: the
+        # contraction over cache slots becomes a small psum instead of a
+        # full cache all-gather.
+        if _flashdec:
+            out = ctx.constrain(out, ctx.dp, None, None, None)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+        if quant:
+            new_cache.update({"k_scale": k_scl, "v_scale": v_scl})
+
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    y = out @ p["wo"]
+    return ctx.constrain(y, ctx.dp, None, None), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Dense FFN
+# --------------------------------------------------------------------------- #
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(
+        jax.nn.gelu, approximate=True)}[name]
+
+
+def mlp_block(x: jax.Array, p: dict, cfg: ModelConfig, ctx: ShardCtx,
+              ) -> jax.Array:
+    if cfg.gated_mlp:
+        h = _act(cfg.act)(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = _act(cfg.act)(x @ p["w_in"])
+    h = ctx.constrain(h, ctx.dp, None, ctx.tp)
+    return ctx.constrain(h @ p["w_out"], ctx.dp, None, None)
+
+
+# --------------------------------------------------------------------------- #
+# Mixture of Experts (top-k, capacity-based, scatter dispatch)
+# --------------------------------------------------------------------------- #
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig, ctx: ShardCtx,
+              ) -> jax.Array:
+    """Top-k MoE with expert parallelism.
+
+    Tokens are split into ``cfg.moe_groups`` routing groups (sharded over all
+    mesh axes); each group routes independently with a per-group capacity.
+    Dispatch/combine use scatter/gather (no (T,E,C) one-hot materialization);
+    the group->expert resharding between the scatter and the expert matmul is
+    where the partitioner inserts the expert-parallel all-to-all. This is the
+    paper's offload pattern in miniature: fine-grained jobs (token batches)
+    dispatched to many "clusters" (experts) — the dispatch cost is the
+    all-to-all the §Perf loop works on.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    g = cfg.moe_groups
+    tokens = b * s
+    if tokens % g:
+        raise ValueError(f"tokens ({tokens}) must divide moe_groups ({g})")
+    tg = tokens // g
+    cap = max(int(math.ceil(tg * k / e * cfg.capacity_factor)), k)
+    xg = x.reshape(g, tg, d)
+    xg = ctx.constrain(xg, (*ctx.dp, *((ctx.tp,) if ctx.tp else ())),
+                       None, None)
+
+    # Router einsum stays in the activation dtype: a f32-preferred einsum
+    # here makes the *backward* d(xg) a full-width f32 tensor that is
+    # all-reduced per layer over the model axis (8 GiB/layer on qwen3-30b —
+    # §Perf iteration 7). Only the tiny (G,Tg,K) top-k math runs in f32.
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        p["w_router"].astype(xg.dtype))
+    top_logits, top_ids = jax.lax.top_k(logits, k)        # (G,Tg,K)
+    gates = jax.nn.softmax(top_logits.astype(jnp.float32), axis=-1)
+
+    def route_group(xt, ids, gt):
+        # xt (Tg,d) ids/gt (Tg,K)
+        idsf = ids.reshape(-1)                            # (Tg*K,)
+        oh = jax.nn.one_hot(idsf, e, dtype=jnp.int32)     # (Tg*K, E)
+        pos = jnp.cumsum(oh, axis=0) - oh                 # rank within expert
+        posf = jnp.take_along_axis(pos, idsf[:, None], axis=1)[:, 0]
+        keep = posf < cap
+        dst = jnp.where(keep, idsf * cap + posf, e * cap)  # overflow slot
+        xrep = jnp.repeat(xt, k, axis=0)                  # token copied k ways
+        buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dst].add(xrep)
+        return buf[:-1].reshape(e, cap, d), dst, keep
+
+    buf, dst, keep = jax.vmap(route_group)(xg, top_ids, gates)
+    # Pin the scatter OUTPUT to the same (group-sharded) domain as its
+    # inputs: the dispatch scatter is then fully local. Without this, XLA
+    # fuses the EP reshard into the scatter and lowers it as partial
+    # scatters + a full-size f32 all-reduce over the model axis (64 GiB/step
+    # on qwen3-30b — see EXPERIMENTS.md §Perf iteration 2).
+    from repro.runtime.flags import baseline_mode
+    all_axes = (*ctx.dp, *((ctx.tp,) if ctx.tp else ()))
+    if not baseline_mode():
+        buf = ctx.constrain(buf, all_axes, None, None, None)
+    # (G, E, C, d): reshard groups->dp only, experts->tp  (the EP all-to-all)
+    buf = ctx.constrain(buf, ctx.dp, ctx.tp, None, None)
+
+    # Keep the whole expert FFN chain in the expert-sharded domain (E on the
+    # model axis): the backward then produces expert-sharded weight grads
+    # (reduced over the data axis only) instead of falling back to
+    # replicated grads + full-size model-axis all-reduces.
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    h = _act(cfg.act)(h) * jnp.einsum("gecd,edf->gecf", buf, p["w_in"])
+    h = ctx.constrain(h, ctx.dp, ctx.tp, None, None)
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    y_e = ctx.constrain(y_e, ctx.dp, ctx.tp, None, None)
+    # Reshard back to group-sharded for the (local) combine gather.
+    y_e = ctx.constrain(
+        y_e, (*ctx.dp, *((ctx.tp,) if ctx.tp else ())), None, None, None)
+
+    def combine_group(ye, dst_g, keep_g, gt):
+        yf = ye.reshape(e * cap, d)
+        gathered = yf[jnp.minimum(dst_g, e * cap - 1)]
+        gathered *= (keep_g[:, None]).astype(yf.dtype)
+        gathered *= gt.reshape(-1)[:, None].astype(yf.dtype)
+        return gathered.reshape(tg, k, d).sum(axis=1)
+
+    y = jax.vmap(combine_group)(y_e, dst, keep, gates)
+    y = y.reshape(b, s, d)
+    return ctx.constrain(y, ctx.dp, None, None)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 (state-space duality, chunked)
+# --------------------------------------------------------------------------- #
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., Q) -> (..., Q, Q) lower-triangular segment sums."""
+    q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, T, H, P) — already multiplied by dt
+    dt_a: jax.Array,  # (B, T, H)    — dt * A (negative)
+    bmat: jax.Array,  # (B, T, N)
+    cmat: jax.Array,  # (B, T, N)
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """SSD "chunked dual" form (Mamba2): quadratic within chunks, linear
+    recurrence across chunk states. Returns (y (B,T,H,P), final_state)."""
+    b, t, h, pdim = x.shape
+    n = bmat.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T ({t}) must divide chunk ({chunk})")
+    c = t // chunk
+    xr = x.reshape(b, c, chunk, h, pdim)
+    ar = dt_a.reshape(b, c, chunk, h).astype(jnp.float32)
+    br = bmat.reshape(b, c, chunk, n)
+    cr = cmat.reshape(b, c, chunk, n)
+
+    a_cum = jnp.cumsum(ar, axis=2)                       # (B,C,Q,H)
+    # Intra-chunk (quadratic) term.
+    l = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))       # (B,C,H,Q,Q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cr, br,
+                    preferred_element_type=jnp.float32)  # (B,C,Q,Q)
+    w = cb[:, :, None] * l                               # (B,C,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(x.dtype), xr)
+
+    # Per-chunk input state.
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,C,Q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn", br,
+                         decay_to_end.astype(br.dtype), xr)
+
+    # Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])            # (B,C,H)
+
+    def scan_body(state, inp):
+        s_c, dec = inp                                   # (B,H,P,N), (B,H)
+        new = s_c + dec[..., None, None].astype(s_c.dtype) * state
+        return new, state                                # emit state *before*
+
+    s0 = (init_state.astype(x.dtype) if init_state is not None
+          else jnp.zeros((b, h, pdim, n), x.dtype))
+    final_state, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,C,H,P,N)
+
+    in_decay = jnp.exp(a_cum)                            # (B,C,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cr,
+                         in_decay.astype(cr.dtype), prev_states)
+    y = (y_intra + y_inter).reshape(b, t, h, pdim)
+    return y, final_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None,
+                 ) -> tuple[jax.Array, jax.Array | None]:
+    """Depthwise causal conv, width W: x (B,T,C), w (W,C)."""
+    width = w.shape[0]
+    if state is not None:                                # decode: T == 1
+        window = jnp.concatenate([state, x], axis=1)     # (B,W,C)
+        y = jnp.einsum("bwc,wc->bc", window, w)[:, None]
+        return y, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return y, None
+
+
+def mamba_block(
+    x: jax.Array,              # (B, S, d)
+    p: dict,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    cache: dict | None = None,  # {"ssm": (B,H,P,N), "conv": (B,W-1,C)}
+) -> tuple[jax.Array, dict | None]:
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_num_heads
+    pdim = di // h
+
+    # Separate projections so each shards cleanly: z/x cols on the model
+    # axis (d_inner divisible), B/C/dt small and replicated.
+    z = ctx.constrain(x @ p["w_z"], ctx.dp, None, ctx.tp)
+    xin = ctx.constrain(x @ p["w_x"], ctx.dp, None, ctx.tp)
+    bc = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_state = cache["conv"] if (cache is not None and s == 1) else None
+    conv_out, new_conv = _causal_conv(conv_in, p["w_conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))         # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    xh = xin.reshape(b, s, h, pdim)
+    x_dt = xh * dt[..., None].astype(x.dtype)
+    dt_a = dt * a                                        # (B,S,H)
+
+    if cache is None or s > 1:
+        y, final_state = ssd_chunked(
+            x_dt, dt_a, bmat, cmat, chunk=min(cfg.ssm_chunk, s),
+            init_state=(cache["ssm"] if cache is not None else None))
+        new_cache = None
+        if cache is not None:  # prefill: persist SSM + conv tails
+            w = p["w_conv"].shape[0]
+            new_cache = {"ssm": final_state.astype(cache["ssm"].dtype),
+                         "conv": conv_in[:, s - (w - 1):].astype(
+                             cache["conv"].dtype),
+                         "len": cache["len"] + s}
+    else:
+        # Single-token recurrent update: S <- exp(dt*A) S + dt*B (x) ; y = C S
+        s_prev = cache["ssm"]
+        da = jnp.exp(dt_a[:, 0])                         # (B,H)
+        outer = jnp.einsum("bhp,bn->bhpn", x_dt[:, 0], bmat[:, 0])
+        s_new = da[..., None, None].astype(s_prev.dtype) * s_prev \
+            + outer.astype(s_prev.dtype)
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], s_new)[:, None]
+        y = y.reshape(b, 1, h, pdim).astype(x.dtype)
+        final_state = s_new
+        new_cache = {"ssm": s_new, "conv": new_conv}
+
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = gated_rms_norm(y, z, p["w_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if cache is None:
+        new_cache = None
+    return ctx.constrain(out, ctx.dp, None, None), new_cache

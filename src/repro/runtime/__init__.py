@@ -1,0 +1,7 @@
+"""Distributed runtime: sharding rules, fault tolerance, step loop."""
+
+from .sharding import (batch_specs, cache_specs, make_shard_ctx, opt_specs,
+                       param_specs, to_shardings)
+
+__all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
+           "make_shard_ctx", "to_shardings"]

@@ -1,0 +1,122 @@
+"""Fault tolerance: supervised step loop with credit-counter health checks,
+checkpoint/restart, straggler detection and preemption handling.
+
+The credit counter (repro.core.sync) is the detection mechanism: every step
+returns a replicated scalar that equals the device count iff every device
+finished its shard with finite outputs. ``credits < threshold`` means a
+poisoned (NaN/Inf) shard or a dead device — the supervisor rolls back to the
+last checkpoint and skips the offending batch (the standard large-run
+recovery playbook).
+
+Straggler mitigation: per-step wall time is tracked with an EMA; a step
+slower than ``straggler_factor`` x EMA is logged as a straggler event — on a
+real pod this triggers hot-spare swap / re-sharding; here the event log is
+the observable contract (asserted in tests).
+
+Preemption: SIGTERM/SIGINT set a flag; the loop checkpoints and exits
+cleanly with a resumable state.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.ckpt import CheckpointManager
+from repro.core.sync import FaultDetected
+
+
+@dataclass
+class SupervisorConfig:
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    ema_alpha: float = 0.2
+    max_restarts: int = 3
+    handle_signals: bool = False
+
+
+@dataclass
+class SupervisorReport:
+    steps_done: int = 0
+    restarts: int = 0
+    faults: list = field(default_factory=list)
+    stragglers: list = field(default_factory=list)
+    preempted: bool = False
+    final_metrics: dict = field(default_factory=dict)
+
+
+class StepSupervisor:
+    """Runs (state, batch) -> (state, metrics) steps under supervision."""
+
+    def __init__(self, step_fn: Callable, ckpt: CheckpointManager,
+                 cfg: SupervisorConfig = SupervisorConfig(), *,
+                 credit_threshold: int | None = None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.credit_threshold = credit_threshold
+        self._preempt = False
+        if cfg.handle_signals:
+            signal.signal(signal.SIGTERM, self._on_signal)
+            signal.signal(signal.SIGINT, self._on_signal)
+
+    def _on_signal(self, *_):
+        self._preempt = True
+
+    def _check_credits(self, metrics: dict) -> None:
+        credits = metrics.get("credits")
+        if credits is None or self.credit_threshold is None:
+            return
+        got = int(credits)  # blocks on ONE scalar — the "interrupt"
+        if got != self.credit_threshold:
+            raise FaultDetected(
+                f"credits {got} != threshold {self.credit_threshold}")
+
+    def run(self, state: Any, batches, num_steps: int, *,
+            start_step: int = 0,
+            shardings: Any = None) -> tuple[Any, SupervisorReport]:
+        rep = SupervisorReport()
+        ema = None
+        step = start_step
+        restarts = 0
+        while step < num_steps:
+            if self._preempt:
+                self.ckpt.save(step, state, {"preempted": True},
+                               blocking=True)
+                rep.preempted = True
+                break
+            batch = next(batches)
+            t0 = time.perf_counter()
+            try:
+                state_new, metrics = self.step_fn(state, batch)
+                self._check_credits(metrics)
+            except FaultDetected as e:
+                rep.faults.append({"step": step, "error": str(e)})
+                restarts += 1
+                rep.restarts = restarts
+                if restarts > self.cfg.max_restarts:
+                    raise
+                # Roll back to the last good checkpoint; skip this batch.
+                try:
+                    state, ck_step, _ = self.ckpt.restore_latest(
+                        state, shardings=shardings)
+                    step = ck_step
+                except FileNotFoundError:
+                    pass  # no checkpoint yet: just skip the poisoned batch
+                continue
+            dt = time.perf_counter() - t0
+            if ema is not None and dt > self.cfg.straggler_factor * ema:
+                rep.stragglers.append({"step": step, "seconds": dt,
+                                       "ema": ema})
+            ema = dt if ema is None else \
+                (1 - self.cfg.ema_alpha) * ema + self.cfg.ema_alpha * dt
+            state = state_new
+            rep.final_metrics = {k: v for k, v in metrics.items()}
+            step += 1
+            rep.steps_done += 1
+            if step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step, state, {"step": step})
+        self.ckpt.wait()
+        return state, rep

@@ -1,0 +1,206 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Layout (see DESIGN.md §4):
+  * tensor parallelism over the ``model`` axis: attention heads / FFN hidden /
+    experts / vocab;
+  * FSDP-style sharding of the other matrix dimension over the data axes
+    (``data``, plus ``pod`` when multi-pod) — ZeRO-3 equivalent, the
+    partitioner materializes gather-on-use;
+  * small 1-D tensors (norms, SSM scalars) are replicated;
+  * KV caches: batch over data, cache slots over model (kv-head counts are
+    often < |model|, slots always shard);
+  * SSM states: batch over data, heads over model.
+
+Rules are name-based over the param tree paths; leaves under "groups" carry a
+leading stacked-group axis (spec gets a None prepended).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, ShardCtx
+
+
+def _key_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def _rule(names: list[str], leaf, cfg: ModelConfig, fsdp, tp) -> P:
+    name = names[-1]
+    d = {n: True for n in names}
+    # 1-D / tiny tensors: replicate.
+    if leaf.ndim <= 1 or name in ("a_log", "dt_bias", "d_skip", "w_norm",
+                                  "norm1", "norm2", "final_norm"):
+        return P()
+    if name == "embed":
+        # (V, d): vocab on model; d replicated — sharding d over data makes
+        # the lookup/head einsums gather full activations (§Perf iter. 4).
+        from repro.runtime.flags import baseline_mode
+        return P(tp, fsdp) if baseline_mode() else P(tp, None)
+    if name == "lm_head":
+        from repro.runtime.flags import baseline_mode
+        return P(fsdp, tp) if baseline_mode() else P(None, tp)
+    if name == "w_router":
+        return P()                             # (d, E): tiny — replicate
+    if "moe" in d:
+        if name in ("w_gate", "w_in"):
+            return P(tp, fsdp, None)           # (E, d, f): experts on model
+        if name == "w_out":
+            return P(tp, None, fsdp)           # (E, f, d)
+    if "mamba" in d:
+        if name in ("w_z", "w_x"):
+            return P(fsdp, tp)                 # (d, d_inner)
+        if name in ("w_bc", "w_dt"):
+            return P(fsdp, None)               # small projections
+        if name == "w_conv":
+            return P(None, None)               # (W, channels): tiny
+        if name == "w_out":
+            return P(tp, fsdp)                 # (di, d)
+    if name in ("wq",):
+        return P(fsdp, tp)                     # (d, H*hd): heads on model
+    if name in ("wk", "wv"):
+        # KV heads shard only when divisible by |model| (else replicate cols;
+        # repeat_kv re-expands to the sharded H layout at use).
+        div = (cfg.num_kv_heads % _axis_size(tp) == 0) if _MESH else True
+        return P(fsdp, tp if div else None)
+    if name == "wo":
+        return P(tp, fsdp)                     # (H*hd, d)
+    if name in ("w_in", "w_gate"):
+        return P(fsdp, tp)                     # (d, f)
+    if name == "w_out":
+        return P(tp, fsdp)                     # (f, d)
+    return P()
+
+
+_MESH: Mesh | None = None
+
+
+def _axis_size(axis) -> int:
+    if _MESH is None or axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(jnp.prod(jnp.array([_MESH.shape[a] for a in axis])))
+    return int(_MESH.shape[axis])
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a param(-shaped) tree."""
+    global _MESH
+    _MESH = mesh
+    fsdp, tp = _axes(mesh)
+
+    def spec(path, leaf):
+        names = _key_names(path)
+        s = _rule(names, leaf, cfg, fsdp, tp)
+        if names and names[0] == "groups":
+            s = P(None, *s)                    # stacked-group leading axis
+        return s
+
+    try:
+        return jax.tree_util.tree_map_with_path(spec, params_shape)
+    finally:
+        _MESH = None
+
+
+def _axes(mesh: Mesh) -> tuple[tuple[str, ...] | str, str]:
+    names = mesh.axis_names
+    fsdp = tuple(n for n in names if n in ("pod", "data"))
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    tp = "model" if "model" in names else None
+    return fsdp, tp
+
+
+def opt_specs(param_spec_tree: Any) -> dict:
+    """Optimizer state mirrors parameter sharding; step is replicated."""
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+
+
+def _fsdp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n
+
+
+def data_spec_for(dim: int, mesh: Mesh):
+    """Data axes if the dim divides them, else replicate (e.g. batch=1)."""
+    fsdp, _ = _axes(mesh)
+    return fsdp if dim % _fsdp_size(mesh) == 0 else None
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Token/embedding batches: batch dim over all data axes (if divisible)."""
+
+    def spec(leaf):
+        if leaf.ndim >= 1:
+            return P(data_spec_for(leaf.shape[0], mesh),
+                     *(None,) * (leaf.ndim - 1))
+        return P()
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Decode caches.
+
+    Attention k/v: (groups?, B, slots, K, hd) — batch over data, slots over
+    model. SSM state: (groups?, B, H, P, N) — batch over data, heads over
+    model. Conv state: (groups?, B, W-1, C) — batch over data, channels over
+    model.
+    """
+    fsdp, tp = _axes(mesh)
+
+    def spec(path, leaf):
+        names = _key_names(path)
+        stacked = names and names[0] == "groups"
+        kind = names[-1]
+        lead = (None,) if stacked else ()
+        bdim = leaf.shape[1] if stacked else leaf.shape[0]
+        dp = fsdp if bdim % _fsdp_size(mesh) == 0 else None
+        if kind in ("k", "v", "k_scale", "v_scale"):
+            s = (*lead, dp, tp, None, None)    # slots over model
+        elif kind == "ssm":
+            heads = leaf.shape[2] if stacked else leaf.shape[1]
+            tp_ok = tp if heads % _axis_size_of(mesh, tp) == 0 else None
+            s = (*lead, dp, tp_ok, None, None)
+        elif kind == "conv":
+            s = (*lead, dp, None, None)
+        else:
+            s = (*lead,) + (None,) * (leaf.ndim - len(lead))
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def _axis_size_of(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    return int(mesh.shape[axis])
+
+
+def make_shard_ctx(mesh: Mesh) -> ShardCtx:
+    fsdp, tp = _axes(mesh)
+    dp = fsdp if isinstance(fsdp, tuple) else ((fsdp,) if fsdp else ())
+    return ShardCtx(dp=dp, tp=tp, active=True)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

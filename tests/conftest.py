@@ -1,0 +1,48 @@
+"""Shared test helpers.
+
+NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+smoke tests must see the real single CPU device. Multi-device behaviour is
+tested in subprocesses via ``run_py`` (each subprocess sets its own
+--xla_force_host_platform_device_count before importing jax).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_py(code: str, *, devices: int | None = None, timeout: int = 600,
+           env_extra: dict | None = None) -> subprocess.CompletedProcess:
+    """Run a python snippet in a fresh process (optionally with N fake devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    # Strip any inherited device-count override (importing
+    # repro.launch.dryrun in-process sets one by design).
+    inherited = " ".join(
+        f for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count"))
+    env["XLA_FLAGS"] = inherited
+    if devices is not None:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices} "
+            + inherited
+        )
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+@pytest.fixture(scope="session")
+def repo_root() -> Path:
+    return REPO

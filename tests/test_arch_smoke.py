@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train-like grad step + one decode step on CPU; asserts output
+shapes and absence of NaNs. Full-size configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.configs.shapes import (SHAPE_NAMES, cell_table, input_specs,
+                                  shape_applicable)
+from repro.models import (ModelConfig, cross_entropy, decode_step, forward,
+                          init_cache, init_params, scaled_down)
+
+
+@pytest.fixture(scope="module")
+def configs():
+    return all_configs()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch, configs):
+    cfg = configs[arch]
+    expected = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_extras(configs):
+    for a in ("qwen3-moe-235b-a22b", "qwen3-moe-30b-a3b"):
+        assert configs[a].num_experts == 128
+        assert configs[a].num_experts_per_tok == 8
+    assert configs["zamba2-1.2b"].ssm_state == 64
+    assert configs["mamba2-370m"].ssm_state == 128
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduced_config(arch, configs):
+    cfg = scaled_down(configs[arch])
+    params = init_params(jax.random.key(0), cfg)
+    b, s = 2, 16
+    use_embeds = cfg.frontend == "vision_patches"
+    if use_embeds:
+        batch = {"embeds": jax.random.normal(
+            jax.random.key(1), (b, s, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"tokens": jax.random.randint(
+            jax.random.key(1), (b, s), 0, cfg.vocab_size)}
+    labels = jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab_size)
+
+    # Forward: shape + finiteness.
+    logits = jax.jit(lambda p: forward(p, cfg, **batch))(params)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"NaN in {arch} forward"
+
+    # One train-style step: grads exist and are finite.
+    def loss_fn(p):
+        return cross_entropy(forward(p, cfg, **batch), labels)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), \
+        f"NaN grad in {arch}"
+
+    # One decode step.
+    cache = init_cache(cfg, b, max_len=32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    lg, cache2 = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.int32(0)))(
+            params, tok, cache)
+    assert lg.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), f"NaN in {arch} decode"
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_are_abstract(arch, configs):
+    cfg = configs[arch]
+    for shape in SHAPE_NAMES:
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            assert "full-attention" in why
+            continue
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_cell_matrix_is_40_cells(configs):
+    rows = cell_table(configs)
+    assert len(rows) == 40
+    skipped = [(a, s) for a, s, ok, _ in rows if not ok]
+    # Exactly the 7 pure full-attention archs skip long_500k.
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable = {a for a, s, ok, _ in rows if s == "long_500k" and ok}
+    assert runnable == {"mamba2-370m", "zamba2-1.2b", "gemma3-12b"}
+
+
+def test_long_500k_specs_for_subquadratic(configs):
+    for arch in ("mamba2-370m", "zamba2-1.2b", "gemma3-12b"):
+        specs = input_specs(configs[arch], "long_500k")
+        assert specs["tokens"].shape == (1, 1)
+        # Ring-buffered local caches stay at the window size.
+        if arch == "gemma3-12b":
+            local_k = specs["caches"]["groups"][0]["k"]
+            assert local_k.shape[2] == 1024  # (groups, B, W, K, D) -> W
+            glob_k = specs["caches"]["groups"][5]["k"]
+            assert glob_k.shape[2] == 524_288
+
+
+def test_param_counts_match_billing_names(configs):
+    """Sanity: analytic param counts land near the names' billions."""
+    expect = {
+        "starcoder2-15b": (14e9, 17e9),
+        "granite-3-8b": (7e9, 9.5e9),
+        "gemma3-12b": (10e9, 14e9),
+        "chatglm3-6b": (5.5e9, 7e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "qwen3-moe-235b-a22b": (220e9, 250e9),
+        "qwen3-moe-30b-a3b": (27e9, 33e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "musicgen-large": (1.5e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs[arch].param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params(configs):
+    cfg = configs["qwen3-moe-235b-a22b"]
+    active = cfg.active_param_count()
+    assert 18e9 <= active <= 26e9, active / 1e9  # "a22b"

@@ -1,0 +1,93 @@
+"""Tests for the offload-decision layer (paper Eq. 3)."""
+
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import decision as dec
+from repro.core import simulator as sim
+from repro.core.runtime_model import PAPER_MODEL, OffloadModel
+
+AVAILABLE = [1, 2, 4, 8, 16, 32]
+
+
+def host(n):
+    return sim.host_runtime(n)
+
+
+def test_eq3_worked_example():
+    # t_max = 700 cycles for N=1024: slack = 700-367-256 = 77;
+    # M_min = ceil(0.325*1024/77) = ceil(4.32) = 5.
+    m = dec.m_min_for_deadline(PAPER_MODEL, 1024, 700.0)
+    assert m == 5
+    assert dec.next_available_m(m, AVAILABLE) == 8
+
+
+def test_eq3_infeasible_when_serial_exceeds_deadline():
+    # alpha + beta*N = 367 + 256 = 623 > 600 -> no M can help.
+    assert dec.m_min_for_deadline(PAPER_MODEL, 1024, 600.0) is None
+
+
+def test_eq3_respects_fabric_limit():
+    # Feasible mathematically but needs more clusters than the fabric has.
+    m_unbounded = dec.m_min_for_deadline(PAPER_MODEL, 1024, 628.0)
+    assert m_unbounded is not None and m_unbounded > 32
+    assert dec.m_min_for_deadline(PAPER_MODEL, 1024, 628.0, m_max=32) is None
+
+
+@given(n=st.integers(min_value=1, max_value=1 << 16),
+       t_max=st.floats(min_value=1, max_value=1e6))
+@settings(max_examples=200)
+def test_eq3_is_tight(n, t_max):
+    """M_min meets the deadline and M_min - 1 violates it."""
+    m = dec.m_min_for_deadline(PAPER_MODEL, n, t_max)
+    assume(m is not None)
+    assert float(PAPER_MODEL.predict(m, n)) <= t_max + 1e-6
+    if m > 1:
+        assert float(PAPER_MODEL.predict(m - 1, n)) > t_max
+
+
+@given(n=st.integers(min_value=1, max_value=1 << 16))
+def test_best_m_is_argmin(n):
+    m = dec.best_m(PAPER_MODEL, n, AVAILABLE)
+    t = {mm: float(PAPER_MODEL.predict(mm, n)) for mm in AVAILABLE}
+    assert t[m] == min(t.values())
+    assert m == 32  # multicast model is monotone in M
+
+
+def test_should_offload_large_job():
+    d = dec.should_offload(PAPER_MODEL, host, 1024, AVAILABLE)
+    assert d.offload and d.m == 32
+    assert d.t_offload < d.t_host
+
+
+def test_should_not_offload_tiny_job():
+    d = dec.should_offload(PAPER_MODEL, host, 16, AVAILABLE)
+    assert not d.offload
+    assert d.t_host < d.t_offload
+
+
+def test_breakeven_exists_and_separates():
+    n_star = dec.breakeven_n(PAPER_MODEL, host, AVAILABLE)
+    assert n_star is not None
+    assert not dec.should_offload(PAPER_MODEL, host, n_star - 1, AVAILABLE).offload
+    assert dec.should_offload(PAPER_MODEL, host, n_star, AVAILABLE).offload
+    # DAXPY on Manticore: offloading pays off around a hundred elements.
+    assert 32 <= n_star <= 512
+
+
+def test_deadline_report_roundtrip():
+    rep = dec.deadline_report(PAPER_MODEL, 1024, 700.0, AVAILABLE)
+    assert rep["feasible"] and rep["m_selected"] == 8
+    assert rep["t_predicted"] <= 700.0
+
+
+@given(n=st.integers(min_value=64, max_value=1 << 14),
+       slack=st.floats(min_value=5.0, max_value=500.0))
+@settings(max_examples=100)
+def test_eq3_matches_paper_closed_form(n, slack):
+    """Eq. 3 as printed: M_min = ceil(2.6*N / (8*(t_max - 367 - N/4)))."""
+    import math
+    t_max = 367 + n / 4 + slack
+    ours = dec.m_min_for_deadline(PAPER_MODEL, n, t_max)
+    paper = math.ceil(2.6 * n / (8 * (t_max - 367 - n / 4)))
+    assert ours == max(1, paper)

@@ -1,0 +1,103 @@
+"""The paper's §III claims, asserted against the calibrated simulator.
+
+Every numeric claim in the paper is pinned here:
+  * up to 47.9% speedup from the multicast+credit-counter extensions,
+  * >300 cycles saved at the 32-cluster configuration (N=1024 DAXPY),
+  * baseline runtime has a global minimum (overhead dominates above ~4
+    clusters); extended runtime decreases monotonically up to 32 clusters,
+  * speedup always > 1 and decreasing with problem size (Fig. 1 right),
+  * Eq. 1 model (367 + N/4 + 2.6N/(8M)) achieves < 1% MAPE on the
+    validation grid (Eq. 2).
+"""
+
+import math
+
+import pytest
+
+from repro.core import runtime_model as rm
+from repro.core import simulator as sim
+
+
+def test_headline_speedup_47_9_percent():
+    s = sim.speedup(32, 1024)
+    # Paper: "as much as 47.9%" — calibrated to 1.4795.
+    assert s == pytest.approx(1.479, abs=0.005)
+
+
+def test_gap_over_300_cycles_at_32_clusters():
+    gap = (sim.offload_runtime(32, 1024, multicast=False)
+           - sim.offload_runtime(32, 1024, multicast=True))
+    assert gap > 300
+
+
+def test_baseline_has_interior_minimum():
+    t = [sim.offload_runtime(m, 1024, multicast=False) for m in sim.PAPER_M_GRID]
+    best = min(range(len(t)), key=t.__getitem__)
+    # Global minimum strictly inside the grid (paper: overhead starts to
+    # dominate above four clusters).
+    assert 0 < best < len(t) - 1
+    assert sim.PAPER_M_GRID[best] in (4, 8)
+
+
+def test_baseline_overhead_dominates_above_four_clusters():
+    hw = sim.HWParams()
+    for m in (8, 16, 32):
+        dispatch_overhead = m * hw.tx_unicast
+        per_cluster_compute = math.ceil(
+            2.6 * math.ceil(math.ceil(1024 / m) / hw.cores_per_cluster))
+        assert dispatch_overhead > per_cluster_compute
+
+
+def test_extended_monotone_decreasing_up_to_32():
+    t = [sim.offload_runtime(m, 1024, multicast=True) for m in sim.PAPER_M_GRID]
+    assert all(a > b for a, b in zip(t, t[1:]))
+
+
+def test_speedup_always_above_one_and_decreasing_in_n():
+    for m in sim.PAPER_M_GRID:
+        sps = [sim.speedup(m, n) for n in sim.PAPER_N_GRID_SPEEDUP]
+        assert all(s > 1.0 for s in sps)
+        assert all(a >= b for a, b in zip(sps, sps[1:]))
+
+
+def test_paper_model_equation_1_constants():
+    pm = rm.PAPER_MODEL
+    assert pm.alpha == 367.0
+    assert pm.beta == 0.25
+    assert pm.gamma == pytest.approx(2.6 / 8.0)
+    # Spot-check the formula itself.
+    assert float(pm.predict(32, 1024)) == pytest.approx(367 + 256 + 10.4)
+
+
+def test_mape_below_one_percent_on_validation_grid():
+    samples = [
+        (m, n, float(sim.offload_runtime(m, n, multicast=True)))
+        for m in sim.PAPER_M_GRID
+        for n in sim.PAPER_N_GRID_MODEL
+    ]
+    per_n = rm.mape_by_n(rm.PAPER_MODEL, samples)
+    assert set(per_n) == set(sim.PAPER_N_GRID_MODEL)
+    for n, err in per_n.items():
+        assert err < 1.0, f"MAPE at N={n} is {err}%"
+
+
+def test_fitted_model_recovers_equation_1():
+    fitted = rm.fit_from_simulator()
+    assert fitted.alpha == pytest.approx(367, abs=3)
+    assert fitted.beta == pytest.approx(0.25, abs=0.005)
+    assert fitted.gamma == pytest.approx(0.325, abs=0.01)
+
+
+def test_simulated_constant_overhead_decomposition():
+    """The extended design's constant must decompose to the paper's 367."""
+    hw = sim.HWParams()
+    const = (hw.host_setup + hw.tx_multicast + hw.cluster_wakeup
+             + hw.credit_irq_latency + hw.host_return_irq)
+    assert const == 367
+
+
+def test_amdahl_serial_fraction_grows_with_m():
+    pm = rm.PAPER_MODEL
+    fr = [pm.serial_fraction(m, 1024) for m in sim.PAPER_M_GRID]
+    assert all(a < b for a, b in zip(fr, fr[1:]))
+    assert fr[-1] > 0.9  # at M=32 the job is overhead/serial dominated

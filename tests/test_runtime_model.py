@@ -1,0 +1,80 @@
+"""Property-based + unit tests for the offload runtime model (Eq. 1/2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import runtime_model as rm
+from repro.core import simulator as sim
+
+coeff = st.floats(min_value=1e-3, max_value=1e4, allow_nan=False,
+                  allow_infinity=False)
+m_s = st.integers(min_value=1, max_value=512)
+n_s = st.integers(min_value=1, max_value=1 << 20)
+
+
+@given(alpha=coeff, beta=coeff, gamma=coeff, m=m_s, n=n_s)
+def test_predict_formula(alpha, beta, gamma, m, n):
+    model = rm.OffloadModel(alpha, beta, gamma)
+    assert float(model.predict(m, n)) == pytest.approx(
+        alpha + beta * n + gamma * n / m, rel=1e-12)
+
+
+@given(alpha=coeff, beta=coeff, gamma=coeff, n=n_s)
+def test_predict_monotone_decreasing_in_m(alpha, beta, gamma, n):
+    model = rm.OffloadModel(alpha, beta, gamma)
+    ts = [float(model.predict(m, n)) for m in (1, 2, 4, 8, 16, 32)]
+    assert all(a >= b for a, b in zip(ts, ts[1:]))
+
+
+@given(alpha=coeff, beta=coeff, gamma=coeff)
+@settings(max_examples=25)
+def test_fit_recovers_exact_coefficients(alpha, beta, gamma):
+    truth = rm.OffloadModel(alpha, beta, gamma)
+    samples = [(m, n, float(truth.predict(m, n)))
+               for m in (1, 2, 4, 8) for n in (64, 256, 1024)]
+    fitted = rm.fit(samples)
+    assert fitted.alpha == pytest.approx(alpha, rel=1e-5, abs=1e-5)
+    assert fitted.beta == pytest.approx(beta, rel=1e-5, abs=1e-8)
+    assert fitted.gamma == pytest.approx(gamma, rel=1e-5, abs=1e-8)
+
+
+def test_fit_requires_enough_samples():
+    with pytest.raises(ValueError):
+        rm.fit([(1, 10, 5.0), (2, 10, 4.0)])
+
+
+def test_mape_zero_on_self():
+    model = rm.OffloadModel(367, 0.25, 0.325)
+    samples = [(m, n, float(model.predict(m, n)))
+               for m in (1, 4, 16) for n in (256, 1024)]
+    assert rm.mape(model, samples) == pytest.approx(0.0, abs=1e-9)
+
+
+@given(scale=st.floats(min_value=0.001, max_value=0.01))
+@settings(max_examples=10)
+def test_mape_scales_with_relative_error(scale):
+    model = rm.OffloadModel(367, 0.25, 0.325)
+    samples = [(m, n, float(model.predict(m, n)) * (1 + scale))
+               for m in (1, 4, 16) for n in (256, 1024)]
+    expected = 100 * scale / (1 + scale)
+    assert rm.mape(model, samples) == pytest.approx(expected, rel=1e-6)
+
+
+def test_linear_dispatch_fit_on_simulator():
+    """The baseline design fits a + d*M + b*N + g*N/M with d near the
+    unicast transaction cost (9 cycles)."""
+    model = rm.fit_from_simulator(multicast=False)
+    assert isinstance(model, rm.LinearDispatchModel)
+    assert model.delta == pytest.approx(sim.HWParams().tx_unicast, abs=0.5)
+    assert model.beta == pytest.approx(0.25, abs=0.01)
+    # Continuous optimum matches the observed discrete minimum (M in [4, 8]).
+    assert 3.0 < model.optimal_m(1024) < 9.0
+
+
+def test_baseline_model_mape_below_one_percent():
+    model = rm.fit_from_simulator(multicast=False)
+    samples = [(m, n, float(sim.offload_runtime(m, n, multicast=False)))
+               for m in sim.PAPER_M_GRID for n in sim.PAPER_N_GRID_MODEL]
+    errs = [abs(t - float(model.predict(m, n))) / t for m, n, t in samples]
+    assert 100 * float(np.mean(errs)) < 1.0

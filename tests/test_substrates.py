@@ -1,0 +1,250 @@
+"""Data pipeline, checkpointing, and fault-tolerance substrate tests."""
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
+                        save_checkpoint)
+from repro.core.sync import FaultDetected
+from repro.data import DataConfig, DataPipeline, packed_batches
+from repro.runtime.fault import StepSupervisor, SupervisorConfig
+
+
+# --------------------------------------------------------------------------- #
+# Data pipeline
+# --------------------------------------------------------------------------- #
+def test_packed_batches_shape_and_vocab():
+    cfg = DataConfig(vocab_size=97, seq_len=64, global_batch=4, seed=3)
+    it = packed_batches(cfg)
+    for _ in range(3):
+        b = next(it)
+        assert b.shape == (4, 64) and b.dtype == np.int32
+        assert b.min() >= 0 and b.max() < 97
+
+
+def test_packed_batches_deterministic():
+    cfg = DataConfig(vocab_size=97, seq_len=32, global_batch=2, seed=7)
+    a = [next(packed_batches(cfg)) for _ in range(1)][0]
+    b = [next(packed_batches(cfg)) for _ in range(1)][0]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_packing_contains_eos_separators():
+    cfg = DataConfig(vocab_size=97, seq_len=512, global_batch=2, seed=1,
+                     mean_doc_len=40)
+    b = next(packed_batches(cfg))
+    assert (b == cfg.eos_id).sum() > 0  # multiple docs per row
+
+
+def test_pipeline_prefetch_and_device_placement():
+    cfg = DataConfig(vocab_size=50, seq_len=16, global_batch=2, seed=0)
+    pipe = DataPipeline(cfg, mesh=None)
+    try:
+        x = next(pipe)
+        assert isinstance(x, jax.Array) and x.shape == (2, 16)
+    finally:
+        pipe.close()
+
+
+# --------------------------------------------------------------------------- #
+# Checkpointing
+# --------------------------------------------------------------------------- #
+def _tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,)), "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 10, t, extra={"note": "hi"})
+    got, step, extra = restore_checkpoint(tmp_path, jax.eval_shape(lambda: t))
+    assert step == 10 and extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_checkpoint(tmp_path, 3, _tree())
+    names = [p.name for p in tmp_path.iterdir()]
+    assert names == ["step_00000003"]
+    assert latest_step(tmp_path) == 3
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"w": jax.ShapeDtypeStruct((3, 3),
+                                                                jnp.float32)})
+
+
+def test_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"w": jnp.full((4,), float(s))})
+    mgr.wait()
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_00000003", "step_00000004"]
+    got, step, _ = mgr.restore_latest({"w": jax.ShapeDtypeStruct((4,),
+                                                                 jnp.float32)})
+    assert step == 4 and float(np.asarray(got["w"])[0]) == 4.0
+
+
+def test_elastic_restore_into_new_mesh_shape():
+    """Checkpoint saved without a mesh restores onto a different device
+    layout (subprocess with 8 virtual devices)."""
+    from conftest import run_py
+    r = run_py("""
+import tempfile, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.ckpt import save_checkpoint, restore_checkpoint
+d = tempfile.mkdtemp()
+tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+save_checkpoint(d, 5, tree)
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+sh = {"w": NamedSharding(mesh, P("data", "model"))}
+got, step, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree),
+                                  shardings=sh)
+assert got["w"].sharding == sh["w"]
+np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+print("OK")
+""", devices=8)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr
+
+
+# --------------------------------------------------------------------------- #
+# Fault-tolerant supervisor
+# --------------------------------------------------------------------------- #
+def _counter_batches():
+    i = 0
+    while True:
+        yield i
+        i += 1
+
+
+def test_supervisor_runs_and_checkpoints(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+
+    def step(state, batch):
+        return state + 1, {"loss": 1.0, "credits": 1}
+
+    sup = StepSupervisor(step, ckpt, SupervisorConfig(ckpt_every=4),
+                         credit_threshold=1)
+    state, rep = sup.run(jnp.int32(0), _counter_batches(), 10)
+    assert rep.steps_done == 10 and int(state) == 10
+    assert latest_step(tmp_path) == 8
+
+
+def test_supervisor_rolls_back_on_fault(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=3)
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        poisoned = batch == 6  # one poisoned batch
+        return state + 1, {"loss": 1.0, "credits": 0 if poisoned else 1}
+
+    sup = StepSupervisor(step, ckpt, SupervisorConfig(ckpt_every=2),
+                         credit_threshold=1)
+    state, rep = sup.run(jnp.int32(0), _counter_batches(), 10)
+    assert rep.steps_done >= 10 - 1
+    assert len(rep.faults) == 1 and rep.faults[0]["error"]
+    assert rep.restarts == 1
+
+
+def test_supervisor_raises_after_max_restarts(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+
+    def step(state, batch):
+        return state, {"credits": 0}  # always poisoned
+
+    sup = StepSupervisor(step, ckpt,
+                         SupervisorConfig(ckpt_every=100, max_restarts=2),
+                         credit_threshold=1)
+    with pytest.raises(FaultDetected):
+        sup.run(jnp.int32(0), _counter_batches(), 5)
+
+
+def test_supervisor_detects_stragglers(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=1)
+    times = iter([0.01] * 6 + [0.2] + [0.01] * 3)
+
+    def step(state, batch):
+        time.sleep(next(times))
+        return state, {"credits": 1}
+
+    sup = StepSupervisor(step, ckpt,
+                         SupervisorConfig(ckpt_every=100,
+                                          straggler_factor=5.0),
+                         credit_threshold=1)
+    _, rep = sup.run(jnp.int32(0), _counter_batches(), 10)
+    assert len(rep.stragglers) == 1
+    assert rep.stragglers[0]["step"] == 6
+
+
+def test_supervisor_preemption_checkpoints_and_exits(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+
+    def step(state, batch):
+        return state + 1, {"credits": 1}
+
+    sup = StepSupervisor(step, ckpt, SupervisorConfig(ckpt_every=1000),
+                         credit_threshold=1)
+
+    def preempt_later():
+        time.sleep(0.05)
+        sup._preempt = True
+
+    threading.Thread(target=preempt_later).start()
+
+    def slow_batches():
+        i = 0
+        while True:
+            time.sleep(0.01)
+            yield i
+            i += 1
+
+    state, rep = sup.run(jnp.int32(0), slow_batches(), 10_000)
+    assert rep.preempted
+    assert latest_step(tmp_path) is not None  # resumable state on disk
+
+
+# --------------------------------------------------------------------------- #
+# Baseline-mode flag (reproducibility of the §Perf baseline)
+# --------------------------------------------------------------------------- #
+def test_baseline_flag_parsing(monkeypatch):
+    from repro.runtime import flags
+    monkeypatch.delenv("REPRO_BASELINE", raising=False)
+    assert not flags.baseline_mode()
+    monkeypatch.setenv("REPRO_BASELINE", "1")
+    assert flags.baseline_mode()
+    monkeypatch.setenv("REPRO_BASELINE", "0")
+    assert not flags.baseline_mode()
+
+
+def test_baseline_mode_changes_lm_head_spec():
+    from conftest import run_py
+    code = """
+import jax
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.configs import get_config
+from repro.models import init_params, scaled_down
+from repro.runtime.sharding import param_specs
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+cfg = scaled_down(get_config("granite-3-8b"))
+p = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+spec = param_specs(p, cfg, mesh)
+print("HEAD", spec["lm_head"])
+"""
+    r_opt = run_py(code, devices=8)
+    r_base = run_py(code, devices=8, env_extra={"REPRO_BASELINE": "1"})
+    assert "HEAD PartitionSpec(None, 'model')" in r_opt.stdout, r_opt.stdout
+    assert "HEAD PartitionSpec('data', 'model')" in r_base.stdout, \
+        r_base.stdout
