@@ -23,12 +23,13 @@ _CHILD = r"""
 import json, time
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.dispatch import MulticastDispatcher, SequentialDispatcher
 from repro.core.sync import CreditCounterSync, PollingSync, attach_credits
+from repro.launch.mesh import make_mesh
 
 devs = len(jax.devices())
-mesh = jax.make_mesh((devs,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((devs,), ("data",))
 x = np.ones((256, 1024), np.float32)          # 1 MiB operand
 sh = NamedSharding(mesh, P())                 # replicated: multicast target
 mc, sq = MulticastDispatcher(), SequentialDispatcher()

@@ -15,9 +15,11 @@ def rows():
 
 
 def main():
+    out = rows()
     print("clusters,baseline_cycles,multicast_cycles,speedup")
-    for m, tb, tm in rows():
+    for m, tb, tm in out:
         print(f"{m},{tb},{tm},{tb/tm:.4f}")
+    return out
 
 
 if __name__ == "__main__":

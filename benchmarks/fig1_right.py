@@ -20,6 +20,7 @@ def main():
     (nb, mb), best = max(g.items(), key=lambda kv: kv[1])
     print(f"# max speedup {100*(best-1):.1f}% at N={nb}, M={mb} "
           f"(paper: 47.9% at N=1024, M=32)")
+    return g
 
 
 if __name__ == "__main__":

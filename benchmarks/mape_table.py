@@ -30,6 +30,7 @@ def main():
     a, b, g = t["fitted_coeffs"]
     print(f"# fitted: t = {a:.1f} + {b:.4f}*N + {g:.4f}*N/M "
           f"(paper Eq.1: 367 + 0.25*N + 0.325*N/M)")
+    return t
 
 
 if __name__ == "__main__":

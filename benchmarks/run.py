@@ -1,12 +1,18 @@
 """Benchmark aggregator: one section per paper table/figure + system benches.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run --fast     # skip measured benches
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --fast          # skip measured
+  PYTHONPATH=src python -m benchmarks.run --json BENCH.json
+
+``--json`` additionally writes machine-readable results — a flat list of
+{section, name, value, unit} records — so the perf trajectory can be
+tracked across PRs (BENCH_*.json files diffed by CI or by hand).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -18,20 +24,35 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess-measured benches")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable records to PATH")
     args = ap.parse_args(argv)
+
+    records: list[dict] = []
+
+    def rec(section_name, name, value, unit):
+        records.append({"section": section_name, "name": name,
+                        "value": float(value), "unit": unit})
 
     t0 = time.time()
     section("Fig. 1 left — DAXPY runtime vs clusters (cycles)")
     from benchmarks import fig1_left
-    fig1_left.main()
+    for m, tb, tm in fig1_left.main():
+        rec("fig1_left", f"speedup_m{m}", tb / tm, "x")
 
     section("Fig. 1 right — speedup grid (multicast/credit vs baseline)")
     from benchmarks import fig1_right
-    fig1_right.main()
+    g = fig1_right.main()
+    best = max(g.values())
+    rec("fig1_right", "max_speedup", best, "x")
+    rec("fig1_right", "mean_speedup", sum(g.values()) / len(g), "x")
 
     section("Eq. 2 — runtime-model MAPE per problem size (%)")
     from benchmarks import mape_table
-    mape_table.main()
+    t = mape_table.main()
+    for label in ("paper_eq1", "fitted"):
+        worst = max(t[label].values())
+        rec("eq2_mape", f"{label}_worst", worst, "pct")
 
     section("Offload decision (Eq. 3) — M_min under deadline")
     from repro.core import decision
@@ -50,6 +71,13 @@ def main(argv=None) -> None:
                                     [1, 2, 4, 8, 16, 32])
         print(f"{n},{d.t_host:.0f},{d.t_offload:.0f},"
               f"{'offload(M=%d)' % d.m if d.offload else 'host'}")
+    n_star = decision.breakeven_n(PAPER_MODEL, host_runtime,
+                                  [1, 2, 4, 8, 16, 32])
+    rec("eq3_decision", "breakeven_n", n_star, "elems")
+
+    section("Serving scheduler (repro.serve) — open-loop synthetic workload")
+    from benchmarks import serve_scheduler
+    records += serve_scheduler.main(fast=args.fast)
 
     if not args.fast:
         section("Measured dispatch/sync scaling on host devices (us)")
@@ -66,7 +94,13 @@ def main(argv=None) -> None:
         print("results/dryrun missing — run: "
               "python -m repro.launch.dryrun --all --mesh both")
 
-    print(f"\n(total {time.time()-t0:.1f}s)")
+    total = time.time() - t0
+    rec("run", "total_seconds", total, "s")
+    print(f"\n(total {total:.1f}s)")
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(records, indent=2) + "\n")
+        print(f"wrote {len(records)} records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,90 @@
+"""Serving-subsystem benchmark: requests/sec + p99 latency + calibration.
+
+Two measurements on the synthetic open-loop workload (Poisson arrivals,
+mixed prompt/gen lengths, per-request Eq.-3 SLOs):
+
+  * scheduler-only (``execute=False``): the full queue / admission /
+    Eq.-3 extent-selection / online-calibration machinery with the
+    simulated fabric — reports virtual-fabric throughput and latency
+    percentiles, plus the *host-side* scheduling overhead (wall seconds per
+    scheduled job, which is the budget the scheduler itself consumes);
+  * engine-attached (default, skipped with fast=True): the same loop
+    driving the real compiled prefill/decode steps on a reduced arch,
+    reporting wall requests/sec of the whole stack.
+
+Prints a human summary and returns machine-readable records
+(section, name, value, unit) for ``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.serve import WorkloadSpec, serve_workload
+
+
+def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
+    m = out["metrics"]
+    s = m.summary()
+    snap = out["calibration"]
+    recs = [
+        (f"{prefix}_throughput", s["throughput_rps"], "req/s-virtual"),
+        (f"{prefix}_latency_p50", s["latency_us"]["p50"], "us"),
+        (f"{prefix}_latency_p99", s["latency_us"]["p99"], "us"),
+        (f"{prefix}_ttft_p99", s["ttft_us"]["p99"], "us"),
+        (f"{prefix}_slo_attainment",
+         s["slo_attainment"] if s["slo_attainment"] is not None else -1.0,
+         "fraction"),
+        (f"{prefix}_rejected", float(s["rejected"]), "requests"),
+        (f"{prefix}_wall_rps", s["completed"] / max(wall_s, 1e-9),
+         "req/s-wall"),
+        (f"{prefix}_calib_mape",
+         snap.window_mape_pct if snap.window_mape_pct is not None else -1.0,
+         "pct"),
+        (f"{prefix}_calib_alpha", snap.alpha, "cycles"),
+        (f"{prefix}_calib_beta", snap.beta, "cycles/elem"),
+        (f"{prefix}_calib_gamma", snap.gamma, "cycles/elem/cluster"),
+    ]
+    return [{"section": "serve_scheduler", "name": n, "value": v, "unit": u}
+            for n, v, u in recs if v is not None]
+
+
+def main(fast: bool = False) -> list[dict]:
+    records: list[dict] = []
+
+    spec = WorkloadSpec(num_requests=512, rate_rps=4e6, seed=7)
+    t0 = time.perf_counter()
+    out = serve_workload(spec, execute=False)
+    dt = time.perf_counter() - t0
+    m = out["metrics"]
+    print("--- scheduler-only (512 requests, simulated fabric) ---")
+    print(m.format_summary())
+    snap = out["calibration"]
+    mape = ("n/a" if snap.window_mape_pct is None
+            else f"{snap.window_mape_pct:.2f}%")
+    print(f"calibrated: a={snap.alpha:.1f} b={snap.beta:.4f} "
+          f"g={snap.gamma:.4f} ({snap.source}), MAPE {mape}")
+    n_jobs = len(out["plans"])
+    print(f"scheduling overhead: {dt / max(n_jobs, 1) * 1e6:.1f} us/job wall "
+          f"({n_jobs} jobs in {dt:.2f}s)")
+    records += _records_from(out, "sim", dt)
+    records.append({"section": "serve_scheduler", "name": "sim_us_per_job",
+                    "value": dt / max(n_jobs, 1) * 1e6, "unit": "us"})
+
+    if not fast:
+        spec = WorkloadSpec(num_requests=24, rate_rps=2e6,
+                            gen_lens=(4, 8), seed=7)
+        t0 = time.perf_counter()
+        out = serve_workload(spec, arch="chatglm3-6b", execute=True,
+                             max_batch=4)
+        dt = time.perf_counter() - t0
+        print("--- engine-attached (24 requests, chatglm3-6b reduced) ---")
+        print(out["metrics"].format_summary())
+        print(f"end-to-end wall: {dt:.1f}s "
+              f"({out['metrics'].completed / dt:.2f} req/s incl. compile)")
+        records += _records_from(out, "engine", dt)
+    return records
+
+
+if __name__ == "__main__":
+    main()

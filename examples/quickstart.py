@@ -48,8 +48,8 @@ def main():
 
     # 4. The same mechanisms at the JAX layer.
     print("\n== JAX layer: multicast dispatch + credit-counter sync ==")
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     x = jnp.ones((128, 128))
     placed = MulticastDispatcher().put(x, NamedSharding(mesh, P()))

@@ -22,6 +22,7 @@ local outputs being finite, so ``credits < threshold`` signals a poisoned
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
@@ -88,6 +89,17 @@ class CreditCounterSync:
                 f"credit counter read {got}, expected {self.threshold}: "
                 "a device produced non-finite outputs")
         return got
+
+    def timed_wait(self, credits: jax.Array) -> tuple[int, float]:
+        """wait() plus the measured host-side blocking time in seconds.
+
+        The elapsed time is the step's completion latency as seen by the
+        host — the measurement the serving calibrator
+        (repro.serve.calibrator) refits the runtime model from.
+        """
+        t0 = time.perf_counter()
+        got = self.wait(credits)
+        return got, time.perf_counter() - t0
 
     def host_interactions(self) -> int:
         return 1

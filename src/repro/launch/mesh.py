@@ -9,21 +9,30 @@ parallelism (gradient reduction crosses the pod interconnect once per step).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older releases default to Auto
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions (Auto axis types where supported)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / smoke runs)."""
-    axes = ("data", "model")
-    return jax.make_mesh((data, model), axes,
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

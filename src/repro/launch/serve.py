@@ -1,87 +1,57 @@
-"""Serving driver: batched prefill + decode with offload-planner decisions.
+"""Serving driver: thin CLI over the repro.serve subsystem.
 
-The paper's offload-decision problem, at serving granularity: given a batch
-of requests (a "job" of N tokens), the planner chooses the parallel extent —
-how much of the mesh the job should use — from the fitted runtime model
-t̂(M) = alpha + beta*N + gamma*N/M, and the host can derive M_min under a
-latency SLO (Eq. 3). Completion is signalled by the credit counter (one
-scalar read per step).
+Default mode drives the offload-aware scheduler end-to-end on a synthetic
+open-loop workload (Poisson arrivals, mixed prompt/gen lengths, per-request
+Eq.-3 SLOs): per-batch parallel extent M chosen from the *online-calibrated*
+runtime model, infeasible deadlines rejected at admission, and the
+calibrated (alpha, beta, gamma) reported with their window MAPE against the
+measured step times of the same run.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --reduced \
-      --prompts 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --requests 48 --rate 2e6
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --requests 512
+
+``--one-shot`` keeps the original single-batch driver (one offline offload
+decision per run), used by examples/serve_batch.py and the equivalence test.
+
+  PYTHONPATH=src python -m repro.launch.serve --one-shot \
+      --arch granite-3-8b --prompts 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.core import decision, runtime_model
-from repro.core.sync import CreditCounterSync
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import init_cache, init_params, scaled_down
 
 
 def serve(arch: str, *, reduced: bool = True, prompts: int = 4,
           prompt_len: int = 32, gen: int = 16,
           mesh_shape=(1, 1), slo_us: float | None = None) -> dict:
-    cfg = get_config(arch)
-    if reduced:
-        cfg = scaled_down(cfg)
-    if cfg.frontend == "vision_patches":
-        cfg = dataclasses.replace(cfg, frontend="")
-    mesh = make_host_mesh(*mesh_shape)
-    max_len = prompt_len + gen
+    """One-shot driver: a single batch through the serving engine, with one
+    offline offload decision for the whole job."""
+    from repro.serve.batcher import ServingEngine
 
-    with mesh:
-        params = init_params(jax.random.key(0), cfg)
-        batch_abs = {"tokens": jax.ShapeDtypeStruct((prompts, prompt_len),
-                                                    jnp.int32)}
-        pre = make_prefill_step(cfg, mesh, batch_abs, max_len=max_len)
-        params = jax.device_put(params, pre.in_shardings[0])
-        pre_jit = jax.jit(pre.fn, in_shardings=pre.in_shardings,
-                          out_shardings=pre.out_shardings)
+    engine = ServingEngine(arch, reduced=reduced, max_batch=prompts,
+                           max_len=prompt_len + gen, mesh_shape=mesh_shape)
+    cfg = engine.cfg
+    tokens = np.asarray(jax.random.randint(
+        jax.random.key(1), (prompts, prompt_len), 0, cfg.vocab_size,
+        dtype="int32"))
 
-        caches_abs = jax.eval_shape(
-            lambda: init_cache(cfg, prompts, max_len=max_len))
-        dec = make_decode_step(cfg, mesh, {
-            "tokens": jax.ShapeDtypeStruct((prompts, 1), jnp.int32),
-            "caches": caches_abs,
-            "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
-        })
-        dec_jit = jax.jit(dec.fn, in_shardings=dec.in_shardings,
-                          out_shardings=dec.out_shardings,
-                          donate_argnums=dec.donate_argnums)
+    next_tok, caches, t_prefill = engine.prefill(tokens)
+    tok = next_tok[:, None].astype(np.int32)
+    generated = [tok]
+    t_decode = 0.0
+    for i in range(gen - 1):
+        next_tok, caches, dt = engine.decode(tok, caches, prompt_len + i)
+        t_decode += dt
+        tok = next_tok[:, None].astype(np.int32)
+        generated.append(tok)
 
-        sync = CreditCounterSync(mesh)
-        tokens = jax.random.randint(jax.random.key(1),
-                                    (prompts, prompt_len), 0,
-                                    cfg.vocab_size, dtype=jnp.int32)
-        t0 = time.perf_counter()
-        out = pre_jit(params, {"tokens": tokens})
-        sync.wait(out["credits"])            # one scalar read: "the IRQ"
-        t_prefill = time.perf_counter() - t0
-
-        caches = out["caches"]
-        tok = out["next_token"][:, None]
-        generated = [tok]
-        t0 = time.perf_counter()
-        for i in range(gen - 1):
-            out = dec_jit(params, tok, caches, jnp.int32(prompt_len + i))
-            caches = out["caches"]
-            tok = out["next_token"][:, None]
-            generated.append(tok)
-        sync.wait(out["credits"])
-        t_decode = time.perf_counter() - t0
-
-    gen_tokens = np.concatenate([np.asarray(t) for t in generated], axis=1)
+    gen_tokens = np.concatenate(generated, axis=1)
 
     # Offload-decision report for this serving job (per paper Eq. 1/3):
     # fit the runtime model on the Manticore simulator's scale-free form and
@@ -101,20 +71,95 @@ def serve(arch: str, *, reduced: bool = True, prompts: int = 4,
     }
 
 
+def serve_stream(args) -> dict:
+    """Drive repro.serve on the synthetic open-loop workload (default mode)."""
+    from repro.serve import WorkloadSpec, serve_workload
+
+    spec = WorkloadSpec(
+        num_requests=args.requests,
+        rate_rps=args.rate,
+        slo_fraction=args.slo_fraction,
+        seed=args.seed,
+    )
+    out = serve_workload(spec, arch=args.arch, reduced=args.reduced,
+                         execute=not args.no_execute,
+                         max_batch=args.max_batch, fabric=args.fabric)
+
+    if args.verbose:
+        for adm in out["admissions"]:
+            if not adm.admitted:
+                print(f"[admission] request {adm.rid} REJECTED: {adm.reason}")
+        for i, p in enumerate(out["plans"]):
+            if p.kind == "prefill":
+                dl = f", deadline {p.deadline:.0f}" if p.deadline else ""
+                print(f"[plan {i}] prefill N={p.n_elems}{dl}: {p.reason} "
+                      f"(t_pred {p.t_pred:.0f} cy)")
+    else:
+        rej = [a for a in out["admissions"] if not a.admitted]
+        print(f"admission control: {len(rej)} rejected "
+              f"({', '.join(str(a.rid) for a in rej[:8])}"
+              f"{'...' if len(rej) > 8 else ''})")
+        for a in rej[:3]:
+            print(f"  e.g. request {a.rid}: {a.reason}")
+
+    m_hist: dict = {}
+    for p in out["plans"]:
+        if p.kind == "prefill" and p.offload:
+            m_hist[p.m] = m_hist.get(p.m, 0) + 1
+    print("prefill extent histogram (M -> jobs):",
+          dict(sorted(m_hist.items())))
+    print(out["metrics"].format_summary())
+
+    snap = out["calibration"]
+    print(f"calibrated model [{snap.source}, {snap.n_samples} samples in "
+          f"window, {snap.n_observed} observed]: "
+          f"t̂(M,N) = {snap.alpha:.1f} + {snap.beta:.4f}*N "
+          f"+ {snap.gamma:.4f}*N/M")
+    if snap.window_mape_pct is not None:
+        print(f"calibration MAPE vs measured step times: "
+              f"{snap.window_mape_pct:.2f}%")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--reduced", action="store_true", default=True)
+    # One-shot (legacy) driver.
+    ap.add_argument("--one-shot", action="store_true",
+                    help="original single-batch driver with one offline "
+                         "offload decision")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    # Streaming-scheduler driver (default).
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=2e6,
+                    help="open-loop arrival rate, requests/s of fabric time")
+    ap.add_argument("--slo-fraction", type=float, default=0.7)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-execute", action="store_true",
+                    help="skip the real JAX engine (scheduler machinery only)")
+    ap.add_argument("--fabric", choices=("simulated", "wallclock"),
+                    default="simulated",
+                    help="job timing source: Manticore cycle model, or the "
+                         "engine's measured DispatchStats/credit-counter "
+                         "step times (calibrator then tracks the live host; "
+                         "SLO deadlines are still in fabric cycles, so "
+                         "expect the model to learn they are infeasible)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log every admission decision and prefill plan")
     args = ap.parse_args(argv)
-    out = serve(args.arch, reduced=args.reduced, prompts=args.prompts,
-                prompt_len=args.prompt_len, gen=args.gen)
-    print(f"{out['arch']}: prefill {out['prefill_s']*1e3:.1f} ms, "
-          f"decode {out['decode_tok_s']:.1f} tok/s")
-    print("offload decision (Eq.3):", out["offload_decision"])
-    return out
+
+    if args.one_shot:
+        out = serve(args.arch, reduced=args.reduced, prompts=args.prompts,
+                    prompt_len=args.prompt_len, gen=args.gen)
+        print(f"{out['arch']}: prefill {out['prefill_s']*1e3:.1f} ms, "
+              f"decode {out['decode_tok_s']:.1f} tok/s")
+        print("offload decision (Eq.3):", out["offload_decision"])
+        return out
+    return serve_stream(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,112 @@
+"""Offload-aware serving subsystem (the paper's decision problem, online).
+
+Instead of one offline offload decision per batch driver run
+(repro.launch.serve's one-shot path), this package serves a *stream* of
+generation requests:
+
+    workload.synthetic_workload  -> open-loop Poisson request trace
+    queue.RequestQueue           -> arrival-ordered admission bookkeeping
+    scheduler.OffloadAwareScheduler
+                                 -> Eq.-3 admission control + per-batch
+                                    parallel extent M from the fitted model
+    calibrator.OnlineCalibrator  -> sliding-window least-squares refit of
+                                    (alpha, beta, gamma) from measured step
+                                    timings — the model tracks the live
+                                    system, not hardcoded coefficients
+    batcher.ContinuousBatcher    -> waves of prefill + decode jobs, virtual
+                                    open-loop clock, optional real JAX engine
+    metrics.ServeMetrics         -> throughput / p99 latency / SLO attainment
+
+``serve_workload`` wires the whole stack together; it is what the
+``python -m repro.launch.serve`` CLI and the serve_scheduler benchmark call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .batcher import ContinuousBatcher, ServingEngine
+from .calibrator import CalibrationSnapshot, OnlineCalibrator
+from .fabric import SimulatedFabric, WallClockFabric
+from .metrics import ServeMetrics
+from .queue import Request, RequestQueue, RequestState
+from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
+from .workload import CYCLES_PER_SECOND, WorkloadSpec, synthetic_workload
+
+__all__ = [
+    "AdmissionDecision", "BatchPlan", "CalibrationSnapshot",
+    "ContinuousBatcher", "CYCLES_PER_SECOND", "OffloadAwareScheduler",
+    "OnlineCalibrator", "Request", "RequestQueue", "RequestState",
+    "ServeMetrics", "ServingEngine", "SimulatedFabric", "WallClockFabric",
+    "WorkloadSpec", "serve_workload", "synthetic_workload",
+]
+
+
+def serve_workload(
+    spec: WorkloadSpec | None = None,
+    *,
+    arch: str = "chatglm3-6b",
+    reduced: bool = True,
+    execute: bool = True,
+    max_batch: int = 4,
+    mesh_shape=(1, 1),
+    jitter_pct: float = 1.0,
+    fabric: str = "simulated",
+    calibrator: OnlineCalibrator | None = None,
+    available_m=(1, 2, 4, 8, 16, 32),
+) -> dict:
+    """Run the full serving stack on a synthetic open-loop workload.
+
+    ``execute=False`` skips the real JAX engine (no tokens generated) and
+    exercises only the queue/scheduler/calibrator/clock machinery — the
+    pure-scheduler benchmark mode.
+
+    ``fabric`` picks the timing source the clock/SLOs/calibrator run on:
+    ``"simulated"`` (Manticore cycle model; Eq.-1 coefficients are
+    meaningful across M) or ``"wallclock"`` (the real engine's measured
+    DispatchStats/CreditCounterSync step times — requires ``execute=True``;
+    the calibrator then tracks the live host hardware, where M is a planning
+    label rather than a physical extent).
+    """
+    spec = spec or WorkloadSpec()
+    calibrator = calibrator or OnlineCalibrator()
+    if fabric == "simulated":
+        fabric_src = SimulatedFabric(jitter_pct=jitter_pct, seed=spec.seed)
+        host_model = None  # Manticore host fallback (same cycle domain)
+    elif fabric == "wallclock":
+        if not execute:
+            raise ValueError("fabric='wallclock' needs execute=True: the "
+                             "engine's measurements are the job runtimes")
+        fabric_src = WallClockFabric()
+        # The engine executes every job — there is no host fallback whose
+        # runtime lives in the wall-cycle domain, so never "keep on host"
+        # (comparing wall cycles against simulator cycles is meaningless).
+        host_model = lambda n: float("inf")  # noqa: E731
+    else:
+        raise ValueError(f"unknown fabric {fabric!r}")
+    scheduler = OffloadAwareScheduler(calibrator, available_m=available_m,
+                                      host_model=host_model)
+
+    engine = None
+    if execute:
+        from repro.configs import get_config
+        from repro.models import scaled_down
+        cfg = get_config(arch)
+        if reduced:
+            cfg = scaled_down(cfg)
+        spec = dataclasses.replace(spec, vocab_size=cfg.vocab_size)
+        max_len = max(spec.prompt_lens) + max(spec.gen_lens)
+        engine = ServingEngine(arch, reduced=reduced, max_batch=max_batch,
+                               max_len=max_len, mesh_shape=mesh_shape)
+        if fabric == "wallclock":
+            # Compile outliers must not enter the measured step times the
+            # calibrator fits (see ServingEngine.warmup).
+            engine.warmup(spec.prompt_lens)
+
+    requests = synthetic_workload(spec, with_tokens=execute)
+    batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
+                                engine=engine, max_batch=max_batch)
+    out = batcher.run(requests)
+    out["arch"] = arch
+    out["spec"] = spec
+    return out

@@ -1,0 +1,346 @@
+"""Continuous batcher: turns the request stream into scheduled offload jobs.
+
+The batcher owns the serving loop.  It forms *waves*: up to ``max_batch``
+admitted requests with the same prompt length (one compiled prefill shape
+per length; unused slots are padded — batch rows are independent, so padding
+never perturbs real outputs).  Each wave is served as
+
+    1 prefill job of N = sum(prompt lens)      -> scheduler.plan(..., SLO)
+    + one decode job per generated token step  -> scheduler.plan(N = #active)
+
+Every job goes through the offload-aware scheduler (Eq. 3 extent under the
+tightest member SLO; host-vs-offload for the tiny decode jobs), its measured
+runtime comes from the fabric timing source, advances the open-loop virtual
+clock, and — when the job was offloaded — feeds the online calibrator, so
+scheduling decisions track the live system.
+
+Requests join at wave boundaries (iteration-level batching).  Mid-wave
+joining would need per-slot cache lengths in the decode step — the model's
+``cache_len`` is a batch-wide scalar (see models/model.py) — which is the
+documented next step for this subsystem, not silently faked here.
+
+The real-model engine is optional: ``engine=None`` runs the full
+queue/scheduler/calibrator/clock machinery without touching JAX (used by the
+pure-scheduler benchmarks), while ``ServingEngine`` compiles the repo's
+prefill/decode steps and generates actual tokens, wiring ``DispatchStats``
+and ``CreditCounterSync.timed_wait`` measurements into the metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .calibrator import OnlineCalibrator
+from .fabric import SimulatedFabric, WallClockFabric
+from .metrics import ServeMetrics
+from .queue import Request, RequestQueue, RequestState
+from .scheduler import BatchPlan, OffloadAwareScheduler
+
+
+class ServingEngine:
+    """Compiled prefill/decode steps over fixed request slots."""
+
+    def __init__(self, arch: str, *, reduced: bool = True, max_batch: int = 4,
+                 max_len: int = 64, mesh_shape=(1, 1), param_seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core.dispatch import MulticastDispatcher
+        from repro.core.sync import CreditCounterSync
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.steps import make_decode_step
+        from repro.models import init_cache, init_params, scaled_down
+
+        self._jax, self._jnp = jax, jnp
+        cfg = get_config(arch)
+        if reduced:
+            cfg = scaled_down(cfg)
+        if cfg.frontend == "vision_patches":
+            cfg = dataclasses.replace(cfg, frontend="")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.mesh = make_host_mesh(*mesh_shape)
+        self.dispatcher = MulticastDispatcher()
+        self.sync = CreditCounterSync(self.mesh)
+        self._prefill_jit: dict[int, object] = {}   # prompt_len -> jitted fn
+        self._init_cache = init_cache
+
+        with self.mesh:
+            self.params = init_params(jax.random.key(param_seed), cfg)
+            caches_abs = jax.eval_shape(
+                lambda: init_cache(cfg, max_batch, max_len=max_len))
+            dec = make_decode_step(cfg, self.mesh, {
+                "tokens": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32),
+                "caches": caches_abs,
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+            })
+            self._dec_jit = jax.jit(
+                dec.fn, in_shardings=dec.in_shardings,
+                out_shardings=dec.out_shardings,
+                donate_argnums=dec.donate_argnums)
+            self._tok_sharding = None
+            self._params_placed = False
+
+    def _get_prefill(self, prompt_len: int):
+        if prompt_len not in self._prefill_jit:
+            jax, jnp = self._jax, self._jnp
+            from repro.launch.steps import make_prefill_step
+            batch_abs = {"tokens": jax.ShapeDtypeStruct(
+                (self.max_batch, prompt_len), jnp.int32)}
+            pre = make_prefill_step(self.cfg, self.mesh, batch_abs,
+                                    max_len=self.max_len)
+            if not self._params_placed:
+                self.params = jax.device_put(self.params, pre.in_shardings[0])
+                self._params_placed = True
+            self._tok_sharding = pre.in_shardings[1]["tokens"]
+            self._prefill_jit[prompt_len] = jax.jit(
+                pre.fn, in_shardings=pre.in_shardings,
+                out_shardings=pre.out_shardings)
+        return self._prefill_jit[prompt_len]
+
+    def prefill(self, tokens: np.ndarray,
+                metrics: ServeMetrics | None = None):
+        """tokens (max_batch, L) int32 -> (next_token (B,), caches, wall_s).
+
+        ``wall_s`` is the measured offload time of the step: the
+        DispatchStats seconds of the multicast operand placement (the alpha
+        contribution) plus the CreditCounterSync blocking wait (wakeup +
+        compute + completion) — the measurement a WallClockFabric feeds to
+        the online calibrator.
+        """
+        with self.mesh:
+            fn = self._get_prefill(tokens.shape[1])
+            # Multicast operand placement — one host call.
+            placed, dstats = self.dispatcher.timed_put(
+                tokens, self._tok_sharding)
+            if metrics is not None:
+                metrics.record_dispatch(dstats)
+            out = fn(self.params, {"tokens": placed})
+            _, wait_s = self.sync.timed_wait(out["credits"])
+        return (np.asarray(out["next_token"]), out["caches"],
+                dstats.seconds + wait_s)
+
+    def warmup(self, prompt_lens) -> None:
+        """Compile every prompt-length bucket (and the decode step) upfront.
+
+        Wall-clock calibration needs this: the first execution of each shape
+        includes XLA compilation — an outlier hundreds of times the
+        steady-state step time, which would dominate the least-squares fit
+        (SSE-optimal on outliers is MAPE-terrible, so the calibrator would
+        keep rejecting refits).
+        """
+        from repro.core.sync import FaultDetected
+        for length in sorted(set(prompt_lens)):
+            tokens = np.zeros((self.max_batch, length), np.int32)
+            _, caches, _ = self.prefill(tokens)
+            tok = np.zeros((self.max_batch, 1), np.int32)
+            try:
+                self.decode(tok, caches, length)
+            except FaultDetected:  # pragma: no cover - warmup is best-effort
+                pass
+
+    def decode(self, tok: np.ndarray, caches, pos: int):
+        """tok (max_batch, 1) int32 -> (next_token (B,), caches, wall_s).
+
+        ``wall_s`` is the CreditCounterSync blocking wait on the credit
+        scalar — the host-observed completion latency of the step.
+        """
+        jnp = self._jnp
+        with self.mesh:
+            out = self._dec_jit(self.params, jnp.asarray(tok), caches,
+                                jnp.int32(pos))
+            _, wait_s = self.sync.timed_wait(out["credits"])
+        return np.asarray(out["next_token"]), out["caches"], wait_s
+
+
+class ContinuousBatcher:
+    """The serving loop: queue -> waves -> scheduled jobs -> results."""
+
+    def __init__(self, scheduler: OffloadAwareScheduler,
+                 calibrator: OnlineCalibrator, *,
+                 fabric: SimulatedFabric | WallClockFabric | None = None,
+                 engine: ServingEngine | None = None,
+                 max_batch: int | None = None,
+                 metrics: ServeMetrics | None = None):
+        self.scheduler = scheduler
+        self.calibrator = calibrator
+        self.fabric = fabric or SimulatedFabric()
+        self.engine = engine
+        self.max_batch = (engine.max_batch if engine is not None
+                          else (max_batch or 4))
+        if engine is not None and max_batch not in (None, engine.max_batch):
+            raise ValueError("max_batch conflicts with engine.max_batch")
+        self.metrics = metrics or ServeMetrics()
+
+    # ------------------------------------------------------------------ #
+    def _form_wave(self, queue: RequestQueue, clock: float) -> list[Request]:
+        """Admit newly-arrived requests; take a same-prompt-length batch.
+
+        Wave growth is deadline-aware: admission guarantees each request is
+        feasible *alone*, but batching sums the job size N, so a candidate
+        is only added while the combined job still fits the tightest member
+        SLO at some configured extent (Eq. 3 on the batch).
+        """
+        wave: list[Request] = []
+        wave_n = 0
+        wave_deadline: float | None = None
+        for req in list(queue.arrived(clock)):
+            if req.t_admitted is None:  # admission control runs once
+                verdict = self.scheduler.admit(req)
+                if not verdict.admitted:
+                    queue.reject(req, verdict.reason)
+                    self.metrics.rejected += 1
+                    continue
+                req.t_admitted = clock
+                self.metrics.admitted += 1
+            # Same-prompt-length bucketing: one compiled prefill shape per
+            # wave.  Admitted requests of another length (or beyond the slot
+            # count, or breaking the batch deadline) stay queued for a later
+            # wave.
+            if wave and (req.prompt_len != wave[0].prompt_len
+                         or len(wave) >= self.max_batch):
+                continue
+            cand_n = wave_n + req.n_prompt_elems
+            cand_deadline = wave_deadline
+            if req.slo_cycles is not None:
+                cand_deadline = (req.slo_cycles if cand_deadline is None
+                                 else min(cand_deadline, req.slo_cycles))
+            if wave and not self.scheduler.fits_deadline(cand_n,
+                                                         cand_deadline):
+                continue
+            wave.append(req)
+            wave_n, wave_deadline = cand_n, cand_deadline
+            queue.pop(req)
+            req.state = RequestState.RUNNING
+        return wave
+
+    def _job_runtime(self, plan: BatchPlan, wall_s: float | None) -> float:
+        """Measured runtime (cycles) of one job from the timing source.
+
+        With a WallClockFabric the measurement is the real engine step's
+        host-side duration (DispatchStats + CreditCounterSync.timed_wait),
+        so the calibrator refits from the live system; the simulated fabric
+        stands in for the Manticore RTL measurements otherwise.
+        """
+        if isinstance(self.fabric, WallClockFabric):
+            if wall_s is None:
+                raise RuntimeError("WallClockFabric needs an attached engine "
+                                   "(its measurements ARE the job runtimes)")
+            return self.fabric.record(wall_s)
+        if plan.offload:
+            return self.fabric.offload(plan.m, plan.n_elems)
+        return self.fabric.host(plan.n_elems)
+
+    def _account_job(self, plan: BatchPlan, t_cycles: float) -> None:
+        """Feed counters and — for offloaded jobs — the online calibrator."""
+        if plan.offload:
+            self.calibrator.observe(plan.m, plan.n_elems, t_cycles)
+            if plan.kind == "prefill":
+                self.metrics.prefill_jobs += 1
+            else:
+                self.metrics.decode_jobs += 1
+        else:
+            self.metrics.host_jobs += 1
+        self.metrics.job_cycles.add(t_cycles)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request]) -> dict:
+        """Serve the whole trace; returns requests + metrics + logs."""
+        queue = RequestQueue(requests)
+        m = self.metrics
+        m.submitted += len(requests)
+        clock = queue.next_arrival() or 0.0
+        m.t_start = clock
+
+        while not queue.empty:
+            if not queue.arrived(clock):
+                clock = queue.next_arrival()
+            wave = self._form_wave(queue, clock)
+            if not wave:
+                continue  # everything that had arrived was rejected
+            m.waves += 1
+            clock = self._serve_wave(wave, queue, clock)
+
+        m.t_end = clock
+        return {
+            "requests": sorted(queue.finished + queue.rejected,
+                               key=lambda r: r.rid),
+            "metrics": m,
+            "plans": self.scheduler.plans,
+            "admissions": self.scheduler.admissions,
+            "calibration": self.calibrator.snapshot(),
+        }
+
+    # ------------------------------------------------------------------ #
+    def _serve_wave(self, wave: list[Request], queue: RequestQueue,
+                    clock: float) -> float:
+        prompt_len = wave[0].prompt_len
+        n_job = sum(r.n_prompt_elems for r in wave)
+        slos = [r.slo_cycles for r in wave if r.slo_cycles is not None]
+        deadline = min(slos) if slos else None
+
+        # --- prefill: one offload job for the whole wave ----------------
+        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
+        caches = None
+        next_tok = None
+        wall = None
+        if self.engine is not None:
+            tokens = np.zeros((self.max_batch, prompt_len), np.int32)
+            for slot, r in enumerate(wave):
+                tokens[slot] = r.tokens
+            next_tok, caches, wall = self.engine.prefill(tokens, self.metrics)
+            self.metrics.step_wall_s.add(wall)
+        t_job = self._job_runtime(plan, wall)
+        self._account_job(plan, t_job)
+        clock += t_job
+
+        gen_buf: list[list[int]] = [[] for _ in wave]
+        for slot, r in enumerate(wave):
+            r.t_first_token = clock
+            self.metrics.ttft_cycles.add(r.ttft())
+            if r.slo_cycles is not None:
+                r.slo_met = t_job <= r.slo_cycles
+                if r.slo_met:
+                    self.metrics.slo_met += 1
+                else:
+                    self.metrics.slo_missed += 1
+            if next_tok is not None:
+                gen_buf[slot].append(int(next_tok[slot]))
+
+        # --- decode: one job per token step over the active members -----
+        max_gen = max(r.gen_len for r in wave)
+        done_at = {r.rid: clock for r in wave if r.gen_len <= 1}
+        tok = (next_tok[:, None].astype(np.int32)
+               if next_tok is not None else None)
+        for step in range(max_gen - 1):
+            active = [r for r in wave if r.gen_len > step + 1]
+            if not active:
+                break
+            plan_d = self.scheduler.plan(len(active), deadline=None,
+                                         kind="decode")
+            wall = None
+            if self.engine is not None:
+                next_tok, caches, wall = self.engine.decode(
+                    tok, caches, prompt_len + step)
+                self.metrics.step_wall_s.add(wall)
+                tok = next_tok[:, None].astype(np.int32)
+            t_dec = self._job_runtime(plan_d, wall)
+            self._account_job(plan_d, t_dec)
+            clock += t_dec
+            for slot, r in enumerate(wave):
+                if r.gen_len > step + 1:
+                    if self.engine is not None:
+                        gen_buf[slot].append(int(next_tok[slot]))
+                    if r.gen_len == step + 2:
+                        done_at[r.rid] = clock
+
+        for slot, r in enumerate(wave):
+            if self.engine is not None:
+                r.generated = np.asarray(gen_buf[slot], np.int32)
+            queue.finish(r, done_at[r.rid])
+            self.metrics.completed += 1
+            self.metrics.latency_cycles.add(r.latency())
+        return clock

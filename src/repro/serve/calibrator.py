@@ -1,0 +1,115 @@
+"""Online runtime-model calibration from completed-step timings.
+
+The paper fits (alpha, beta, gamma) of t̂(M, N) = alpha + beta*N + gamma*N/M
+offline, from a measurement grid.  A serving system cannot assume the
+coefficients stay valid — clock scaling, contention, or a different kernel
+mix all shift them — so the scheduler's model is refit *online*: every
+completed offload contributes one (M, N, t) sample (from
+``DispatchStats``/``CreditCounterSync.timed_wait`` timings or the simulated
+fabric), kept in a sliding window, and the model is re-estimated by the same
+linear least squares as the offline path (``runtime_model.fit`` — the model
+is linear in its coefficients with features (1, N, N/M)).
+
+Guard rails:
+
+  * before ``min_samples`` observations — or while the window lacks M / N
+    diversity (the design matrix would be rank-deficient: with a single M
+    the N and N/M columns are collinear) — the calibrator serves its prior,
+  * refits are batched (every ``refit_interval`` observations) so the
+    scheduler's hot path stays O(1),
+  * a fit whose window MAPE (Eq. 2) is worse than the prior's is discarded
+    (the prior keeps serving until the window supports a better model).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from repro.core import runtime_model
+from repro.core.runtime_model import OffloadModel, PAPER_MODEL
+
+
+@dataclass(frozen=True)
+class CalibrationSnapshot:
+    """What the scheduler is currently planning with, and why."""
+
+    alpha: float
+    beta: float
+    gamma: float
+    source: str            # "prior" | "fitted"
+    n_samples: int
+    n_observed: int        # total observations ever (window may have evicted)
+    window_mape_pct: float | None
+
+    def as_dict(self) -> dict:
+        return {"alpha": self.alpha, "beta": self.beta, "gamma": self.gamma,
+                "source": self.source, "n_samples": self.n_samples,
+                "n_observed": self.n_observed,
+                "window_mape_pct": self.window_mape_pct}
+
+
+class OnlineCalibrator:
+    """Sliding-window least-squares refit of the offload-runtime model."""
+
+    def __init__(self, *, prior: OffloadModel = PAPER_MODEL,
+                 window: int = 512, min_samples: int = 12,
+                 refit_interval: int = 8):
+        if window < min_samples:
+            raise ValueError("window smaller than min_samples")
+        self.prior = prior
+        self.min_samples = min_samples
+        self.refit_interval = max(1, refit_interval)
+        self._samples: deque[tuple[int, int, float]] = deque(maxlen=window)
+        self._model: OffloadModel = prior
+        self._source = "prior"
+        self._since_refit = 0
+        self.n_observed = 0
+        self.n_refits = 0
+
+    # ------------------------------------------------------------------ #
+    def observe(self, m: int, n: int, t_cycles: float) -> None:
+        """One completed offload: parallel extent m, job size n, measured t."""
+        if t_cycles <= 0:
+            return  # clock glitch; a non-positive runtime can't be real
+        self._samples.append((int(m), int(n), float(t_cycles)))
+        self.n_observed += 1
+        self._since_refit += 1
+        if self._since_refit >= self.refit_interval:
+            self._refit()
+
+    def _diverse(self) -> bool:
+        ms = {m for m, _, _ in self._samples}
+        ns = {n for _, n, _ in self._samples}
+        return len(ms) >= 2 and len(ns) >= 2
+
+    def _refit(self) -> None:
+        self._since_refit = 0
+        if len(self._samples) < self.min_samples or not self._diverse():
+            return
+        fitted = runtime_model.fit(self._samples)
+        # Accept only a model that explains the window at least as well as
+        # whatever is currently being served (prior included).
+        if (runtime_model.mape(fitted, self._samples)
+                <= runtime_model.mape(self._model, self._samples)):
+            self._model = fitted
+            self._source = "fitted"
+            self.n_refits += 1
+
+    # ------------------------------------------------------------------ #
+    @property
+    def model(self) -> OffloadModel:
+        return self._model
+
+    def window_mape(self) -> float | None:
+        """Eq.-2 MAPE of the served model over the current window."""
+        if not self._samples:
+            return None
+        return runtime_model.mape(self._model, self._samples)
+
+    def snapshot(self) -> CalibrationSnapshot:
+        return CalibrationSnapshot(
+            alpha=self._model.alpha, beta=self._model.beta,
+            gamma=self._model.gamma, source=self._source,
+            n_samples=len(self._samples), n_observed=self.n_observed,
+            window_mape_pct=self.window_mape())

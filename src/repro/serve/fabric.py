@@ -1,0 +1,81 @@
+"""Fabric timing sources: where a scheduled job's measured runtime comes from.
+
+The scheduler plans in the paper's cycle domain (Eq. 1 coefficients are
+cycles), so the serving loop needs a *measured* cycle count per completed job
+to (a) advance the open-loop virtual clock, (b) check SLO attainment, and
+(c) feed the online calibrator.
+
+Two sources:
+
+  * ``SimulatedFabric`` — the Manticore discrete-event model
+    (repro.core.simulator), standing in for the paper's RTL measurements.
+    Optional multiplicative jitter models measurement noise; deterministic
+    per seed.
+  * ``WallClockFabric`` — converts the measured wall-clock seconds of the
+    real JAX step (CreditCounterSync.timed_wait) to cycles at a nominal
+    clock.  Used when the serving engine runs on real devices and the
+    calibrator should track *that* hardware instead of the simulator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import simulator as sim
+
+
+class SimulatedFabric:
+    """Measured job runtimes from the Manticore cycle model."""
+
+    name = "simulated"
+
+    def __init__(self, *, hw: sim.HWParams = sim.HWParams(),
+                 kernel: sim.KernelSpec = sim.DAXPY, multicast: bool = True,
+                 jitter_pct: float = 1.0, seed: int = 0):
+        self.hw = hw
+        self.kernel = kernel
+        self.multicast = multicast
+        self.jitter_pct = jitter_pct
+        self._rng = np.random.default_rng(seed)
+
+    def _jitter(self, t: float) -> float:
+        if not self.jitter_pct:
+            return float(t)
+        scale = 1.0 + self._rng.normal(0.0, self.jitter_pct / 100.0)
+        return float(t) * max(scale, 0.5)
+
+    def offload(self, m: int, n: int) -> float:
+        """Cycles for an offloaded job of n elements on m clusters."""
+        return self._jitter(sim.offload_runtime(
+            m, n, multicast=self.multicast, hw=self.hw, kernel=self.kernel))
+
+    def host(self, n: int) -> float:
+        """Cycles for the host to run the job itself (no offload)."""
+        return self._jitter(sim.host_runtime(n, hw=self.hw,
+                                             kernel=self.kernel))
+
+
+class WallClockFabric:
+    """Measured wall seconds of the real engine step, expressed in cycles."""
+
+    name = "wallclock"
+
+    def __init__(self, *, clock_hz: float = 1e9):
+        self.clock_hz = clock_hz
+        self._last_seconds: float | None = None
+
+    def record(self, seconds: float) -> float:
+        """Feed one measured step duration; returns it in cycles."""
+        self._last_seconds = seconds
+        return seconds * self.clock_hz
+
+    def offload(self, m: int, n: int) -> float:  # pragma: no cover - passthru
+        if self._last_seconds is None:
+            raise RuntimeError("WallClockFabric.offload called before "
+                               "record(); wire timed_wait() into the batcher")
+        return self._last_seconds * self.clock_hz
+
+    def host(self, n: int) -> float:  # pragma: no cover - passthrough
+        return self.offload(1, n)

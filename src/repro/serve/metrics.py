@@ -1,0 +1,149 @@
+"""Serving metrics: throughput, latency percentiles, SLO attainment.
+
+Two time domains, recorded side by side:
+
+  * *fabric cycles* — the virtual open-loop clock the scheduler plans in
+    (Eq.-1 coefficients are cycles; at 1 GHz cycles == ns).  Request
+    latency, TTFT, and SLO attainment live here.
+  * *wall seconds* — measured host-side durations of the real JAX engine
+    steps (DispatchStats.seconds, CreditCounterSync.timed_wait), when an
+    engine is attached.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .workload import CYCLES_PER_SECOND
+
+
+class Recorder:
+    """Streaming collection with percentile summaries."""
+
+    def __init__(self):
+        self._xs: list[float] = []
+
+    def add(self, x: float) -> None:
+        self._xs.append(float(x))
+
+    def __len__(self) -> int:
+        return len(self._xs)
+
+    def percentile(self, p: float) -> float | None:
+        if not self._xs:
+            return None
+        return float(np.percentile(np.asarray(self._xs), p))
+
+    def mean(self) -> float | None:
+        return float(np.mean(self._xs)) if self._xs else None
+
+    def total(self) -> float:
+        return float(np.sum(self._xs)) if self._xs else 0.0
+
+
+@dataclass
+class ServeMetrics:
+    # Counters.
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    waves: int = 0
+    prefill_jobs: int = 0
+    decode_jobs: int = 0
+    host_jobs: int = 0           # jobs the scheduler kept on the host
+    slo_met: int = 0
+    slo_missed: int = 0
+    # Fabric-cycle recorders.
+    latency_cycles: Recorder = field(default_factory=Recorder)
+    ttft_cycles: Recorder = field(default_factory=Recorder)
+    job_cycles: Recorder = field(default_factory=Recorder)
+    # Wall-clock recorders (engine-attached runs only).
+    step_wall_s: Recorder = field(default_factory=Recorder)
+    dispatch_wall_s: Recorder = field(default_factory=Recorder)
+    dispatch_bytes: int = 0
+    dispatch_calls: int = 0
+    # Clock span of the run (fabric cycles).
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+    # ------------------------------------------------------------------ #
+    def record_dispatch(self, stats) -> None:
+        """Accumulate one DispatchStats from the engine's operand placement."""
+        self.dispatch_wall_s.add(stats.seconds)
+        self.dispatch_bytes += stats.bytes_moved
+        self.dispatch_calls += stats.num_host_calls
+
+    def span_cycles(self) -> float:
+        return max(self.t_end - self.t_start, 1e-9)
+
+    def summary(self) -> dict:
+        span_s = self.span_cycles() / CYCLES_PER_SECOND
+        slo_total = self.slo_met + self.slo_missed
+        return {
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "waves": self.waves,
+            "jobs": {"prefill": self.prefill_jobs,
+                     "decode": self.decode_jobs,
+                     "host": self.host_jobs},
+            "throughput_rps": self.completed / span_s,
+            "latency_us": {
+                "p50": _us(self.latency_cycles.percentile(50)),
+                "p99": _us(self.latency_cycles.percentile(99)),
+            },
+            "ttft_us": {
+                "p50": _us(self.ttft_cycles.percentile(50)),
+                "p99": _us(self.ttft_cycles.percentile(99)),
+            },
+            "slo_attainment": (self.slo_met / slo_total
+                               if slo_total else None),
+            "wall": {
+                "steps": len(self.step_wall_s),
+                "step_p50_ms": _ms(self.step_wall_s.percentile(50)),
+                "step_total_s": self.step_wall_s.total(),
+                "dispatch_total_s": self.dispatch_wall_s.total(),
+                "dispatch_bytes": self.dispatch_bytes,
+                "dispatch_calls": self.dispatch_calls,
+            },
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        lines = [
+            f"requests: {s['submitted']} submitted, {s['admitted']} admitted,"
+            f" {s['rejected']} rejected, {s['completed']} completed",
+            f"jobs: {s['jobs']['prefill']} prefill + {s['jobs']['decode']} "
+            f"decode offloads, {s['jobs']['host']} kept on host "
+            f"({s['waves']} waves)",
+            f"throughput: {s['throughput_rps']:.0f} req/s (virtual fabric)",
+            f"latency: p50 {_fmt(s['latency_us']['p50'])} us, "
+            f"p99 {_fmt(s['latency_us']['p99'])} us; "
+            f"ttft p99 {_fmt(s['ttft_us']['p99'])} us",
+        ]
+        if s["slo_attainment"] is not None:
+            lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
+                         f"({self.slo_met}/{self.slo_met + self.slo_missed})")
+        if s["wall"]["steps"]:
+            lines.append(
+                f"engine wall: {s['wall']['steps']} steps, "
+                f"p50 {_fmt(s['wall']['step_p50_ms'])} ms/step, "
+                f"dispatch {s['wall']['dispatch_calls']} calls / "
+                f"{s['wall']['dispatch_bytes'] / 2**20:.1f} MiB")
+        return "\n".join(lines)
+
+
+def _us(cycles: float | None) -> float | None:
+    return None if cycles is None else cycles / 1e3   # 1 GHz: cycles == ns
+
+
+def _ms(seconds: float | None) -> float | None:
+    return None if seconds is None else seconds * 1e3
+
+
+def _fmt(x: float | None) -> str:
+    return "n/a" if x is None else f"{x:.1f}"

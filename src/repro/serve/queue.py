@@ -1,0 +1,106 @@
+"""Request queue for the offload-aware serving subsystem.
+
+A ``Request`` is one generation job: a prompt of ``prompt_len`` tokens plus
+``gen_len`` tokens to decode, arriving at ``arrival`` (fabric cycles on the
+open-loop virtual clock; at the paper's 1 GHz, cycles == ns).  A request may
+carry a per-request SLO: an execution-time constraint ``slo_cycles`` on its
+prefill offload — exactly the paper's Eq.-3 deadline t_max for a job of
+N = prompt_len elements.  Admission control (repro.serve.scheduler) rejects
+requests whose deadline no parallel extent can meet.
+
+The queue is arrival-ordered and exposes the two views the batcher needs:
+requests that have *arrived* by the current virtual time, and the next
+arrival when the system is idle.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"          # waiting for admission + batching
+    REJECTED = "rejected"      # admission control: SLO infeasible
+    RUNNING = "running"        # member of the active wave
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float                     # fabric cycles (virtual open-loop clock)
+    prompt_len: int
+    gen_len: int
+    slo_cycles: float | None = None    # Eq.-3 deadline for the prefill offload
+    tokens: np.ndarray | None = None   # (prompt_len,) int32 prompt ids
+    state: RequestState = RequestState.QUEUED
+    reject_reason: str | None = None
+    # Filled in by the batcher as the request progresses (fabric cycles).
+    t_admitted: float | None = None
+    t_first_token: float | None = None
+    t_done: float | None = None
+    generated: np.ndarray | None = None
+    slo_met: bool | None = None
+
+    @property
+    def n_prompt_elems(self) -> int:
+        """Job size N of the prefill offload (the Eq.-1 problem size)."""
+        return self.prompt_len
+
+    def latency(self) -> float | None:
+        """Sojourn time in cycles: arrival -> last generated token."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.arrival
+
+    def ttft(self) -> float | None:
+        """Time to first token in cycles (arrival -> prefill complete)."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+
+class RequestQueue:
+    """Arrival-ordered queue with admission bookkeeping."""
+
+    def __init__(self, requests: list[Request] | None = None):
+        self._waiting: list[Request] = sorted(
+            requests or [], key=lambda r: (r.arrival, r.rid))
+        self.rejected: list[Request] = []
+        self.finished: list[Request] = []
+
+    def push(self, req: Request) -> None:
+        self._waiting.append(req)
+        self._waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def empty(self) -> bool:
+        return not self._waiting
+
+    def next_arrival(self) -> float | None:
+        return self._waiting[0].arrival if self._waiting else None
+
+    def arrived(self, now: float) -> list[Request]:
+        """Requests that have arrived by virtual time ``now`` (not popped)."""
+        return [r for r in self._waiting if r.arrival <= now]
+
+    def pop(self, req: Request) -> Request:
+        self._waiting.remove(req)
+        return req
+
+    def reject(self, req: Request, reason: str) -> None:
+        self._waiting.remove(req)
+        req.state = RequestState.REJECTED
+        req.reject_reason = reason
+        self.rejected.append(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        req.state = RequestState.DONE
+        req.t_done = now
+        self.finished.append(req)

@@ -1,0 +1,148 @@
+"""Offload-aware batch scheduler: Eq.-3 admission control + extent selection.
+
+Per batch the scheduler answers the paper's offload-decision problem with
+the *calibrated* runtime model (repro.serve.calibrator):
+
+  * with a deadline (tightest SLO among the batch members): M_min from
+    Eq. 3 via ``decision.m_min_for_deadline``, rounded up to the next
+    configured cluster count (hardware allocates in fixed quanta);
+  * without one: ``decision.should_offload`` — tiny jobs run on the host
+    (below the break-even size the offload constant dominates), large ones
+    get the runtime-minimizing extent.
+
+Admission control runs the same Eq.-3 inversion per request *before* it may
+queue: a deadline below the serial floor (slack = t_max - alpha - beta*N
+<= 0), or needing more clusters than the fabric has, is infeasible for every
+batch the request could ever join — reject it immediately instead of letting
+it occupy a slot and miss.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.core import decision, simulator
+
+from .calibrator import OnlineCalibrator
+from .queue import Request
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    rid: int
+    admitted: bool
+    m_min: int | None
+    reason: str
+
+
+@dataclass(frozen=True)
+class BatchPlan:
+    """One scheduled job: the batch the engine will run as a unit."""
+
+    kind: str                  # "prefill" | "decode"
+    n_elems: int               # job size N (tokens in this job)
+    offload: bool
+    m: int | None              # chosen parallel extent (None => host)
+    m_min: int | None          # Eq.-3 minimum for the deadline, if any
+    deadline: float | None     # tightest member SLO, cycles
+    t_pred: float              # model-predicted runtime, cycles
+    slo_at_risk: bool          # deadline present but infeasible for batch N
+    reason: str
+
+
+class OffloadAwareScheduler:
+    """Per-batch extent selection + per-request admission, model-calibrated."""
+
+    def __init__(self, calibrator: OnlineCalibrator, *,
+                 available_m: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                 host_model: Callable[[int], float] | None = None):
+        if not available_m:
+            raise ValueError("no cluster configurations available")
+        self.calibrator = calibrator
+        self.available_m = sorted(available_m)
+        self.host_model = host_model or simulator.host_runtime
+        self.admissions: list[AdmissionDecision] = []
+        self.plans: list[BatchPlan] = []
+
+    @property
+    def m_max(self) -> int:
+        return self.available_m[-1]
+
+    # ------------------------------------------------------------------ #
+    def admit(self, req: Request) -> AdmissionDecision:
+        """Eq.-3 feasibility of the request's own prefill deadline."""
+        model = self.calibrator.model
+        if req.slo_cycles is None:
+            d = AdmissionDecision(req.rid, True, None, "no SLO")
+        else:
+            n = req.n_prompt_elems
+            m_min = decision.m_min_for_deadline(model, n, req.slo_cycles,
+                                                m_max=self.m_max)
+            if m_min is None:
+                slack = req.slo_cycles - model.alpha - model.beta * n
+                why = ("serial floor exceeds deadline "
+                       f"(slack {slack:.0f} <= 0)" if slack <= 0 else
+                       f"needs more than {self.m_max} clusters")
+                d = AdmissionDecision(req.rid, False, None,
+                                      f"infeasible SLO for N={n}: {why}")
+            else:
+                d = AdmissionDecision(
+                    req.rid, True, m_min,
+                    f"feasible with M >= {m_min} for N={n}")
+        self.admissions.append(d)
+        return d
+
+    def fits_deadline(self, n_elems: int, deadline: float | None) -> bool:
+        """Can *some* configured extent run an n_elems job within deadline?
+
+        The batcher uses this while growing a wave: batching adds the
+        candidate's tokens to the job size N, so a batch can become
+        infeasible even though every member passed per-request admission.
+        """
+        if deadline is None:
+            return True
+        # m_min_for_deadline already caps at m_max == max(available_m), so a
+        # non-None result is always coverable by some configured extent.
+        return decision.m_min_for_deadline(self.calibrator.model, n_elems,
+                                           deadline,
+                                           m_max=self.m_max) is not None
+
+    # ------------------------------------------------------------------ #
+    def plan(self, n_elems: int, *, deadline: float | None = None,
+             kind: str = "prefill") -> BatchPlan:
+        """Choose the parallel extent for one batch-job of ``n_elems``."""
+        model = self.calibrator.model
+        if deadline is not None:
+            m_min = decision.m_min_for_deadline(model, n_elems, deadline,
+                                                m_max=self.m_max)
+            m = (decision.next_available_m(m_min, self.available_m)
+                 if m_min is not None else None)
+            if m is not None:
+                plan = BatchPlan(
+                    kind=kind, n_elems=n_elems, offload=True, m=m,
+                    m_min=m_min, deadline=deadline,
+                    t_pred=float(model.predict(m, n_elems)),
+                    slo_at_risk=False,
+                    reason=f"Eq.3: M_min={m_min} -> M={m}")
+            else:
+                # The *batch* deadline is infeasible (batching raised N past
+                # what admission checked per request).  Best effort: run at
+                # the full fabric and flag the SLO as at risk.
+                m = self.m_max
+                plan = BatchPlan(
+                    kind=kind, n_elems=n_elems, offload=True, m=m,
+                    m_min=None, deadline=deadline,
+                    t_pred=float(model.predict(m, n_elems)),
+                    slo_at_risk=True,
+                    reason=f"batch deadline infeasible; best effort M={m}")
+        else:
+            d = decision.should_offload(model, self.host_model, n_elems,
+                                        self.available_m)
+            plan = BatchPlan(
+                kind=kind, n_elems=n_elems, offload=d.offload, m=d.m,
+                m_min=None, deadline=None,
+                t_pred=(d.t_offload if d.offload else d.t_host),
+                slo_at_risk=False, reason=d.reason)
+        self.plans.append(plan)
+        return plan

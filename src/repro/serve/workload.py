@@ -1,0 +1,78 @@
+"""Synthetic open-loop workload generator for the serving subsystem.
+
+Open-loop means arrivals are independent of service: a Poisson process at
+``rate_rps`` requests per (virtual) second, so bursts queue up exactly as
+they would under real traffic.  Prompt and generation lengths are drawn from
+small discrete mixes (matching the shape grid the arch configs are exercised
+with), and a configurable fraction of requests carries an Eq.-3 execution
+deadline on its prefill offload.
+
+Deadlines are sampled *model-aware*: for a target parallel extent M drawn
+from the available cluster configurations, the deadline is set a bit above
+t̂(M, N) — so meeting it genuinely requires allocating ≳ M clusters, and the
+scheduler's choices spread over the whole M grid (which is also what gives
+the online calibrator a well-conditioned (1, N, N/M) design matrix).  A
+second fraction of requests gets an *infeasible* deadline (below the serial
+floor alpha + beta*N) to exercise admission control.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.runtime_model import OffloadModel, PAPER_MODEL
+
+from .queue import Request
+
+#: Cycles per virtual second at the paper's 1 GHz clock (cycles == ns).
+CYCLES_PER_SECOND = 1e9
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    num_requests: int = 64
+    rate_rps: float = 400_000.0        # open-loop arrival rate (requests/s)
+    prompt_lens: tuple[int, ...] = (256, 512, 768, 1024)
+    gen_lens: tuple[int, ...] = (4, 8, 16)
+    slo_fraction: float = 0.7          # fraction carrying an Eq.-3 deadline
+    infeasible_fraction: float = 0.1   # of those, deliberately infeasible
+    slack_factor: tuple[float, float] = (1.02, 1.25)  # deadline / t̂(M_target)
+    m_grid: tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    vocab_size: int = 128              # prompt token id range
+    seed: int = 0
+
+
+def synthetic_workload(
+    spec: WorkloadSpec = WorkloadSpec(),
+    *,
+    model: OffloadModel = PAPER_MODEL,
+    with_tokens: bool = True,
+) -> list[Request]:
+    """Generate the open-loop request trace (deterministic per seed)."""
+    rng = np.random.default_rng(spec.seed)
+    inter = rng.exponential(1.0 / spec.rate_rps, size=spec.num_requests)
+    arrivals = np.cumsum(inter) * CYCLES_PER_SECOND
+
+    reqs: list[Request] = []
+    for i in range(spec.num_requests):
+        n = int(rng.choice(spec.prompt_lens))
+        gen = int(rng.choice(spec.gen_lens))
+        slo = None
+        if rng.random() < spec.slo_fraction:
+            serial_floor = model.alpha + model.beta * n
+            if rng.random() < spec.infeasible_fraction:
+                # Below the serial floor: no M can meet it (Eq. 3 slack <= 0).
+                slo = serial_floor * float(rng.uniform(0.5, 0.95))
+            else:
+                m_target = int(rng.choice(spec.m_grid))
+                slack = float(rng.uniform(*spec.slack_factor))
+                slo = float(model.predict(m_target, n)) * slack
+        tokens = None
+        if with_tokens:
+            tokens = rng.integers(0, spec.vocab_size, size=(n,),
+                                  dtype=np.int32)
+        reqs.append(Request(rid=i, arrival=float(arrivals[i]), prompt_len=n,
+                            gen_len=gen, slo_cycles=slo, tokens=tokens))
+    return reqs

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.launch.dryrun import cost_analysis_dict
 from repro.models import ModelConfig, forward, init_params
 from repro.runtime import analytics
 
@@ -15,7 +16,7 @@ def compiled_flops(cfg, b, s):
     tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
     lo = jax.jit(lambda p, t: forward(p, cfg, tokens=t, unroll_groups=True,
                                       )).lower(params, tok)
-    return lo.compile().cost_analysis().get("flops", 0.0)
+    return cost_analysis_dict(lo.compile()).get("flops", 0.0)
 
 
 def analytic_flops(cfg, b, s):
@@ -58,11 +59,13 @@ def test_scan_undercounts_vs_unrolled():
                       head_dim=32, dtype="float32")
     params = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
     tok = jax.ShapeDtypeStruct((2, 128), jnp.int32)
-    scanned = jax.jit(lambda p, t: forward(p, cfg, tokens=t)).lower(
-        params, tok).compile().cost_analysis()["flops"]
-    unrolled = jax.jit(lambda p, t: forward(p, cfg, tokens=t,
-                                            unroll_groups=True)).lower(
-        params, tok).compile().cost_analysis()["flops"]
+    scanned = cost_analysis_dict(
+        jax.jit(lambda p, t: forward(p, cfg, tokens=t)).lower(
+            params, tok).compile())["flops"]
+    unrolled = cost_analysis_dict(
+        jax.jit(lambda p, t: forward(p, cfg, tokens=t,
+                                     unroll_groups=True)).lower(
+            params, tok).compile())["flops"]
     assert unrolled > 3 * scanned  # 8 layers in the scan counted once
 
 

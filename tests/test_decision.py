@@ -1,6 +1,9 @@
 """Tests for the offload-decision layer (paper Eq. 3)."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import decision as dec

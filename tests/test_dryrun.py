@@ -68,16 +68,15 @@ def test_miniature_dryrun_cell_end_to_end():
     from conftest import run_py
     r = run_py("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.configs.shapes import config_for_shape
+from repro.launch.mesh import make_mesh
 from repro.launch.steps import bundle_for
 from repro.launch.dryrun import parse_collectives
 from repro.models import scaled_down
 import dataclasses
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = scaled_down(get_config("qwen3-moe-30b-a3b"))
 cfg = dataclasses.replace(cfg, num_heads=4, num_kv_heads=2, moe_groups=8)
 specs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
@@ -88,7 +87,8 @@ with mesh:
                        donate_argnums=bundle.donate_argnums
                        ).lower(*bundle.abstract_args).compile()
 ma = compiled.memory_analysis()
-assert ma.peak_memory_in_bytes > 0
+from repro.launch.dryrun import peak_memory_bytes
+assert peak_memory_bytes(ma) > 0
 colls = parse_collectives(compiled.as_text())
 kinds = set(colls["per_device_bytes_by_kind"])
 assert colls["per_device_bytes_total"] > 0
@@ -102,13 +102,12 @@ def test_decode_bundle_compiles_with_kv_quant():
     from conftest import run_py
     r = run_py("""
 import jax, jax.numpy as jnp, dataclasses
-from jax.sharding import AxisType
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 from repro.launch.steps import make_decode_step
 from repro.models import init_cache, scaled_down
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(scaled_down(get_config("granite-3-8b")),
                           kv_quant=True, num_heads=4, num_kv_heads=2)
 caches = jax.eval_shape(lambda: init_cache(cfg, 4, max_len=64))
@@ -121,6 +120,7 @@ with mesh:
                        out_shardings=bundle.out_shardings,
                        donate_argnums=bundle.donate_argnums
                        ).lower(*bundle.abstract_args).compile()
-print("OK", compiled.memory_analysis().peak_memory_in_bytes > 0)
+from repro.launch.dryrun import peak_memory_bytes
+print("OK", peak_memory_bytes(compiled.memory_analysis()) > 0)
 """, devices=8)
     assert r.returncode == 0 and "OK True" in r.stdout, r.stderr[-3000:]

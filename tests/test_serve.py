@@ -1,0 +1,228 @@
+"""Tests for the offload-aware serving subsystem (repro.serve)."""
+
+import numpy as np
+import pytest
+
+from repro.core import decision
+from repro.core.runtime_model import OffloadModel, PAPER_MODEL
+from repro.serve import (ContinuousBatcher, OffloadAwareScheduler,
+                         OnlineCalibrator, Request, SimulatedFabric,
+                         WorkloadSpec, serve_workload, synthetic_workload)
+
+AVAILABLE = (1, 2, 4, 8, 16, 32)
+
+
+def fresh_scheduler(**kw):
+    return OffloadAwareScheduler(OnlineCalibrator(), available_m=AVAILABLE,
+                                 **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler: Eq.-3 consistency + admission control
+# --------------------------------------------------------------------------- #
+def test_plan_picks_m_min_consistent_extent():
+    # Paper worked example: N=1024, t_max=700 -> M_min=5 -> next quantum 8.
+    sched = fresh_scheduler()
+    plan = sched.plan(1024, deadline=700.0)
+    assert plan.offload and plan.m_min == 5 and plan.m == 8
+    assert plan.m == decision.next_available_m(
+        decision.m_min_for_deadline(PAPER_MODEL, 1024, 700.0), AVAILABLE)
+    assert plan.t_pred <= 700.0 and not plan.slo_at_risk
+
+
+def test_plan_without_deadline_keeps_tiny_jobs_on_host():
+    sched = fresh_scheduler()
+    tiny = sched.plan(16)
+    big = sched.plan(8192)
+    assert not tiny.offload and tiny.m is None
+    assert big.offload and big.m == 32  # multicast model: monotone in M
+
+
+def test_admission_rejects_slack_leq_zero():
+    # alpha + beta*N = 623 > 600: no M can help (Eq. 3 infeasible).
+    sched = fresh_scheduler()
+    req = Request(rid=0, arrival=0.0, prompt_len=1024, gen_len=4,
+                  slo_cycles=600.0)
+    verdict = sched.admit(req)
+    assert not verdict.admitted
+    assert "slack" in verdict.reason
+
+
+def test_admission_rejects_beyond_fabric_limit():
+    # Feasible mathematically but needs more clusters than the fabric has.
+    sched = fresh_scheduler()
+    req = Request(rid=0, arrival=0.0, prompt_len=1024, gen_len=4,
+                  slo_cycles=628.0)
+    assert decision.m_min_for_deadline(PAPER_MODEL, 1024, 628.0) > 32
+    verdict = sched.admit(req)
+    assert not verdict.admitted
+    assert "clusters" in verdict.reason
+
+
+def test_admission_accepts_feasible_deadline():
+    sched = fresh_scheduler()
+    req = Request(rid=0, arrival=0.0, prompt_len=1024, gen_len=4,
+                  slo_cycles=700.0)
+    verdict = sched.admit(req)
+    assert verdict.admitted and verdict.m_min == 5
+
+
+# --------------------------------------------------------------------------- #
+# Calibrator: online least-squares refit
+# --------------------------------------------------------------------------- #
+def _observe_grid(cal, truth, noise_pct=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    for m in (1, 2, 4, 8, 16, 32):
+        for n in (256, 512, 768, 1024):
+            t = float(truth.predict(m, n))
+            if noise_pct:
+                t *= 1.0 + rng.normal(0.0, noise_pct / 100.0)
+            cal.observe(m, n, t)
+
+
+def test_calibrator_converges_to_known_coefficients():
+    truth = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=12,
+                           refit_interval=4)
+    _observe_grid(cal, truth)
+    snap = cal.snapshot()
+    assert snap.source == "fitted"
+    assert abs(snap.alpha - 400.0) < 1e-6
+    assert abs(snap.beta - 0.3) < 1e-9
+    assert abs(snap.gamma - 0.5) < 1e-9
+    assert snap.window_mape_pct < 1e-6
+
+
+def test_calibrator_converges_under_noise():
+    truth = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=12,
+                           refit_interval=4)
+    _observe_grid(cal, truth, noise_pct=1.0)
+    snap = cal.snapshot()
+    assert snap.source == "fitted"
+    assert abs(snap.alpha - 400.0) / 400.0 < 0.05
+    assert snap.window_mape_pct <= 5.0
+
+
+def test_calibrator_serves_prior_without_m_diversity():
+    # A single M makes the (1, N, N/M) design rank-deficient: keep the prior.
+    truth = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=4,
+                           refit_interval=1)
+    for n in (256, 512, 768, 1024, 2048, 4096):
+        cal.observe(8, n, float(truth.predict(8, n)))
+    assert cal.snapshot().source == "prior"
+    assert cal.model is PAPER_MODEL
+
+
+def test_calibrator_sliding_window_tracks_drift():
+    old = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
+    new = OffloadModel(alpha=800.0, beta=0.6, gamma=1.0)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, window=24, min_samples=12,
+                           refit_interval=4)
+    _observe_grid(cal, old)
+    _observe_grid(cal, new)   # evicts every old sample (window=24)
+    snap = cal.snapshot()
+    assert abs(snap.alpha - 800.0) < 1e-6
+    assert abs(snap.gamma - 1.0) < 1e-9
+
+
+# --------------------------------------------------------------------------- #
+# Workload generator
+# --------------------------------------------------------------------------- #
+def test_workload_deterministic_and_mixed():
+    spec = WorkloadSpec(num_requests=64, seed=3)
+    a = synthetic_workload(spec)
+    b = synthetic_workload(spec)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert [r.slo_cycles for r in a] == [r.slo_cycles for r in b]
+    assert all(np.array_equal(x.tokens, y.tokens) for x, y in zip(a, b))
+    assert len({r.prompt_len for r in a}) > 1
+    arr = np.array([r.arrival for r in a])
+    assert (np.diff(arr) > 0).all()  # strictly increasing arrivals
+    # Some requests carry deadlines; some of those are infeasible by design.
+    with_slo = [r for r in a if r.slo_cycles is not None]
+    assert with_slo
+    infeasible = [
+        r for r in with_slo
+        if decision.m_min_for_deadline(PAPER_MODEL, r.prompt_len,
+                                       r.slo_cycles, m_max=32) is None]
+    assert infeasible
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end (dry: no JAX engine)
+# --------------------------------------------------------------------------- #
+def test_dry_serving_loop_end_to_end():
+    out = serve_workload(WorkloadSpec(num_requests=80, seed=11),
+                         execute=False)
+    m = out["metrics"]
+    assert m.completed + m.rejected == m.submitted == 80
+    assert m.rejected > 0                       # admission control fired
+    snap = out["calibration"]
+    assert snap.source == "fitted"
+    assert snap.window_mape_pct <= 5.0          # acceptance criterion
+    # Every non-at-risk prefill plan with a deadline is Eq.-3 consistent.
+    checked = 0
+    for p in out["plans"]:
+        if p.kind == "prefill" and p.deadline and not p.slo_at_risk:
+            assert p.m >= p.m_min and p.m in AVAILABLE
+            checked += 1
+    assert checked > 0
+    # Rejected requests were never scheduled.
+    rejected_ids = {r.rid for r in out["requests"]
+                    if r.reject_reason is not None}
+    finished_ids = {r.rid for r in out["requests"] if r.t_done is not None}
+    assert rejected_ids.isdisjoint(finished_ids)
+
+
+def test_batcher_respects_wave_deadline_feasibility():
+    """Batched job size must stay feasible for the tightest member SLO."""
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=AVAILABLE)
+    fabric = SimulatedFabric(jitter_pct=0.0)
+    batcher = ContinuousBatcher(sched, cal, fabric=fabric, max_batch=8)
+    # Four simultaneous requests; deadline only feasible for N <= ~2048.
+    t_max = float(PAPER_MODEL.predict(32, 2048))
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=1024, gen_len=1,
+                    slo_cycles=t_max) for i in range(4)]
+    out = batcher.run(reqs)
+    for p in out["plans"]:
+        if p.kind == "prefill":
+            assert not p.slo_at_risk
+            assert p.n_elems <= 2048    # waves capped at 2 requests
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end (real engine): batcher preserves per-request outputs
+# --------------------------------------------------------------------------- #
+def test_batcher_matches_one_shot_serve():
+    import jax
+    from repro.configs import get_config
+    from repro.launch.serve import serve
+    from repro.models import scaled_down
+    from repro.serve import ServingEngine
+
+    arch, prompts, prompt_len, gen = "chatglm3-6b", 2, 8, 4
+    one_shot = serve(arch, reduced=True, prompts=prompts,
+                     prompt_len=prompt_len, gen=gen)
+
+    cfg = scaled_down(get_config(arch))
+    tokens = np.asarray(jax.random.randint(
+        jax.random.key(1), (prompts, prompt_len), 0, cfg.vocab_size,
+        dtype="int32"))  # the one-shot driver's prompt batch
+
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=AVAILABLE)
+    engine = ServingEngine(arch, reduced=True, max_batch=prompts,
+                           max_len=prompt_len + gen)
+    batcher = ContinuousBatcher(sched, cal,
+                                fabric=SimulatedFabric(jitter_pct=0.0),
+                                engine=engine)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=prompt_len, gen_len=gen,
+                    tokens=tokens[i]) for i in range(prompts)]
+    out = batcher.run(reqs)
+
+    assert out["metrics"].waves == 1  # both fit one wave: same batching
+    got = np.stack([r.generated for r in out["requests"]])
+    np.testing.assert_array_equal(got, one_shot["generated"])

@@ -102,12 +102,13 @@ def test_elastic_restore_into_new_mesh_shape():
     from conftest import run_py
     r = run_py("""
 import tempfile, jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ckpt import save_checkpoint, restore_checkpoint
+from repro.launch.mesh import make_mesh
 d = tempfile.mkdtemp()
 tree = {"w": jnp.arange(64.0).reshape(8, 8)}
 save_checkpoint(d, 5, tree)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 sh = {"w": NamedSharding(mesh, P("data", "model"))}
 got, step, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree),
                                   shardings=sh)
@@ -232,12 +233,12 @@ def test_baseline_mode_changes_lm_head_spec():
     from conftest import run_py
     code = """
 import jax
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 from repro.models import init_params, scaled_down
 from repro.runtime.sharding import param_specs
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = scaled_down(get_config("granite-3-8b"))
 p = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
 spec = param_specs(p, cfg, mesh)
