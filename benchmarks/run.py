@@ -75,6 +75,10 @@ def main(argv=None) -> None:
                                   [1, 2, 4, 8, 16, 32])
     rec("eq3_decision", "breakeven_n", n_star, "elems")
 
+    section("Co-design explorer (repro.dse) — design-space sweep + refits")
+    from benchmarks import dse_sweep
+    records += dse_sweep.main(fast=args.fast)
+
     section("Serving scheduler (repro.serve) — open-loop synthetic workload")
     from benchmarks import serve_scheduler
     records += serve_scheduler.main(fast=args.fast)

@@ -4,9 +4,10 @@
 
 Walks through: (1) the Manticore offload simulator and the 47.9% headline,
 (2) fitting the Eq. 1 runtime model and checking MAPE, (3) the Eq. 3 offload
-decision, (4) the same mechanisms at the JAX layer — multicast dispatch and
-the credit-counter sync on real devices, (5) a tiny model forward through the
-unified LM stack.
+decision, (4) the co-design explorer — sweep dispatch x sync, refit per
+design, read the Pareto front, (5) the same mechanisms at the JAX layer —
+multicast dispatch and the credit-counter sync on real devices, (6) a tiny
+model forward through the unified LM stack.
 """
 
 import jax
@@ -15,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import (PAPER_MODEL, CreditCounterSync, MulticastDispatcher,
                         attach_credits, decision, fit_from_simulator,
                         mape_by_n, simulator as sim)
+from repro.dse import PAPER_SPACE, front, run_sweep
 from repro.models import ModelConfig, forward, init_params
 
 
@@ -46,7 +48,17 @@ def main():
                                 [1, 2, 4, 8, 16, 32])
     print(f"  N=64: {d.reason}")
 
-    # 4. The same mechanisms at the JAX layer.
+    # 4. Co-design explorer: sweep dispatch x sync, one Eq.-1 refit each.
+    print("\n== Co-design explorer (repro.dse) ==")
+    results = run_sweep(PAPER_SPACE)
+    for r in results:
+        print(f"  {r.point.name:<24} refit MAPE {r.mape_pct:.2f}% | "
+              f"speedup vs baseline at (32, 1024): "
+              f"{r.speedup_vs_baseline[(32, 1024)]:.3f}")
+    fr = front(results)
+    print(f"  Pareto front (t_ref, cost): {[r.point.name for r in fr]}")
+
+    # 5. The same mechanisms at the JAX layer.
     print("\n== JAX layer: multicast dispatch + credit-counter sync ==")
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((jax.device_count(),), ("data",))
@@ -61,7 +73,7 @@ def main():
     print(f"  credit counter read {sync.wait(credits)} == threshold "
           f"{sync.threshold} (one scalar read = the 'interrupt')")
 
-    # 5. A tiny model from the unified stack.
+    # 6. A tiny model from the unified stack.
     print("\n== Unified LM stack (tiny hybrid config) ==")
     cfg = ModelConfig(name="demo", family="hybrid", num_layers=4, d_model=64,
                       d_ff=128, vocab_size=128, num_heads=4, num_kv_heads=2,

@@ -23,15 +23,16 @@ from .decision import (OffloadDecision, best_m, breakeven_n,
 from .dispatch import (DISPATCHERS, MulticastDispatcher, SequentialDispatcher)
 from .planner import TPU_V5E, ChipSpec, JobStats, RooflineTerms, choose_extent, roofline
 from .runtime_model import PAPER_MODEL, OffloadModel, fit, fit_from_simulator, mape, mape_by_n
-from .simulator import (DAXPY, HWParams, KernelSpec, OffloadTrace,
-                        host_runtime, offload_runtime, simulate_offload,
-                        speedup, sweep)
+from .simulator import (DAXPY, DISPATCH_MODES, SYNC_MODES, HWParams,
+                        KernelSpec, OffloadTrace, host_runtime,
+                        offload_runtime, simulate_offload, speedup, sweep)
 from .sync import (CreditCounterSync, FaultDetected, PollingSync,
                    attach_credits, credit_threshold, emit_credits)
 
 __all__ = [
     "simulator", "runtime_model", "decision", "dispatch", "sync", "planner",
-    "HWParams", "KernelSpec", "DAXPY", "OffloadTrace", "simulate_offload",
+    "HWParams", "KernelSpec", "DAXPY", "DISPATCH_MODES", "SYNC_MODES",
+    "OffloadTrace", "simulate_offload",
     "offload_runtime", "host_runtime", "speedup", "sweep",
     "OffloadModel", "PAPER_MODEL", "fit", "fit_from_simulator", "mape",
     "mape_by_n", "OffloadDecision", "m_min_for_deadline", "best_m",

@@ -5,6 +5,13 @@ Reproduces the paper's RTL measurements (QuestaSim, 1 GHz => cycles == ns):
   * baseline design: sequential per-cluster dispatch + host-side polling,
   * extended design: multicast dispatch + credit-counter completion unit.
 
+The two hardware features are independent axes (see DESIGN.md §3): dispatch
+(``"unicast"`` | ``"multicast"``) and completion sync (``"poll"`` |
+``"credit"``) can be combined freely, which is what the design-space explorer
+(``repro.dse``) sweeps.  The legacy ``multicast`` boolean selects both ends of
+the respective axes at once and remains the API of the paper's two published
+design points.
+
 The model is event-based per cluster (dispatch arrival, wakeup, shared-bus DMA
 grant, compute, completion signal) rather than a closed-form formula, so that
 integer work-splitting (``ceil``) produces the same kind of smooth-model error
@@ -54,14 +61,44 @@ class HWParams:
 
 @dataclass(frozen=True)
 class KernelSpec:
-    """A data-parallel kernel, as seen by the offload runtime."""
+    """A data-parallel kernel, as seen by the offload runtime.
+
+    ``host_cycles_per_elem`` overrides the host-fallback per-element cost for
+    kernels whose scalar-core cost differs from ``HWParams``' default (e.g.
+    the fused optimizer update with its rsqrt/div); ``None`` keeps the
+    hardware default.
+    """
 
     name: str = "daxpy"
     bytes_per_elem: int = 24       # daxpy: read x,y (16 B) + write y (8 B)
     cycles_per_elem: float = 2.6   # per worker core, inner-loop issue rate
+    host_cycles_per_elem: float | None = None
 
 
 DAXPY = KernelSpec()
+
+#: Independent hardware axes of the offload path (DESIGN.md §3).
+DISPATCH_MODES = ("unicast", "multicast")
+SYNC_MODES = ("poll", "credit")
+
+
+def _resolve_modes(multicast: bool | None, dispatch: str | None,
+                   sync: str | None) -> tuple[str, str]:
+    """Map the legacy ``multicast`` flag / explicit modes to (dispatch, sync)."""
+    if dispatch is None:
+        if multicast is None:
+            raise TypeError("specify multicast=, or dispatch= and sync=")
+        dispatch = "multicast" if multicast else "unicast"
+    if sync is None:
+        if multicast is None:
+            raise TypeError("specify multicast=, or dispatch= and sync=")
+        sync = "credit" if multicast else "poll"
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(f"dispatch must be one of {DISPATCH_MODES}, "
+                         f"got {dispatch!r}")
+    if sync not in SYNC_MODES:
+        raise ValueError(f"sync must be one of {SYNC_MODES}, got {sync!r}")
+    return dispatch, sync
 
 
 @dataclass
@@ -96,7 +133,9 @@ def simulate_offload(
     m_clusters: int,
     n_elems: int,
     *,
-    multicast: bool,
+    multicast: bool | None = None,
+    dispatch: str | None = None,
+    sync: str | None = None,
     hw: HWParams = HWParams(),
     kernel: KernelSpec = DAXPY,
 ) -> OffloadTrace:
@@ -104,8 +143,11 @@ def simulate_offload(
 
     ``multicast=True`` models the paper's extended design (multicast dispatch +
     credit-counter completion); ``False`` models the baseline (sequential
-    dispatch + polling).
+    dispatch + polling).  ``dispatch``/``sync`` select the two axes
+    independently for design-space exploration (DESIGN.md §3); when given,
+    they take precedence over ``multicast``.
     """
+    dispatch, sync = _resolve_modes(multicast, dispatch, sync)
     if m_clusters < 1:
         raise ValueError("need at least one cluster")
     if n_elems < 1:
@@ -115,7 +157,7 @@ def simulate_offload(
     work = _split_work(n_elems, m_clusters)
 
     # --- Phase 1: dispatch -------------------------------------------------
-    if multicast:
+    if dispatch == "multicast":
         # One multicast transaction delivers descriptor+args to every cluster.
         tr.dispatch_done = hw.host_setup + hw.tx_multicast
         arrival = [tr.dispatch_done] * m_clusters
@@ -150,7 +192,7 @@ def simulate_offload(
     tr.makespan = max(tr.compute_done)
 
     # --- Phase 4: completion synchronization -------------------------------
-    if multicast:
+    if sync == "credit":
         # Credit counter: last increment trips the threshold; IRQ to host.
         tr.sync_done = tr.makespan + hw.credit_irq_latency
         tr.total = tr.sync_done + hw.host_return_irq
@@ -172,21 +214,26 @@ def offload_runtime(
     m_clusters: int,
     n_elems: int,
     *,
-    multicast: bool,
+    multicast: bool | None = None,
+    dispatch: str | None = None,
+    sync: str | None = None,
     hw: HWParams = HWParams(),
     kernel: KernelSpec = DAXPY,
 ) -> int:
     """Total cycles for one offload (convenience wrapper)."""
     return simulate_offload(
-        m_clusters, n_elems, multicast=multicast, hw=hw, kernel=kernel
+        m_clusters, n_elems, multicast=multicast, dispatch=dispatch,
+        sync=sync, hw=hw, kernel=kernel
     ).total
 
 
 def host_runtime(n_elems: int, *, hw: HWParams = HWParams(),
                  kernel: KernelSpec = DAXPY) -> int:
     """Cycles for the host (CVA6) to run the kernel itself — no offload."""
-    del kernel  # host model is per-element, kernel-agnostic here
-    return hw.host_loop_setup + math.ceil(hw.host_cycles_per_elem * n_elems)
+    per_elem = (kernel.host_cycles_per_elem
+                if kernel.host_cycles_per_elem is not None
+                else hw.host_cycles_per_elem)
+    return hw.host_loop_setup + math.ceil(per_elem * n_elems)
 
 
 def speedup(m_clusters: int, n_elems: int, *, hw: HWParams = HWParams(),
@@ -203,13 +250,16 @@ def sweep(
     ms: list[int],
     ns: list[int],
     *,
-    multicast: bool,
+    multicast: bool | None = None,
+    dispatch: str | None = None,
+    sync: str | None = None,
     hw: HWParams = HWParams(),
     kernel: KernelSpec = DAXPY,
 ) -> dict[tuple[int, int], int]:
     """Runtime for every (M, N) pair — the paper's measurement grid."""
     return {
-        (m, n): offload_runtime(m, n, multicast=multicast, hw=hw, kernel=kernel)
+        (m, n): offload_runtime(m, n, multicast=multicast, dispatch=dispatch,
+                                sync=sync, hw=hw, kernel=kernel)
         for m in ms
         for n in ns
     }

@@ -1,0 +1,34 @@
+"""Design-space exploration over the offload path (DESIGN.md §3).
+
+The paper publishes two design points — baseline (sequential dispatch +
+polling) and extended (multicast + credit counter) — and a 47.9% co-design
+speedup between them.  This package generalizes that comparison into a sweep:
+
+    space.DesignSpace    — declarative axes: HWParams fields, dispatch mode,
+                           sync mode, kernel (registry in repro.kernels.ops)
+    runner.run_sweep     — parallel simulate-every-point runner; each design
+                           gets its own Eq.-1 least-squares refit + MAPE
+    pareto               — (runtime, cost) Pareto front, ranking, Eq.-3
+                           deadline-feasible regions
+
+Drivers: ``python -m repro.launch.dse`` (CLI), ``examples/codesign_sweep.py``
+(end to end), and the ``dse`` section of ``benchmarks/run.py --json``.  A
+swept design's refitted model can be served directly:
+``repro.serve.serve_workload(design=point)`` schedules with that design's
+coefficients instead of the paper's.
+"""
+
+from .pareto import (deadline_region, design_objectives, dominates,
+                     feasible_ms, front, pareto_front, rank, summarize)
+from .runner import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignResult,
+                     baseline_grid, design_cost, evaluate_design,
+                     refit_design, run_sweep)
+from .space import PAPER_SPACE, DesignPoint, DesignSpace
+
+__all__ = [
+    "DesignPoint", "DesignSpace", "PAPER_SPACE",
+    "DesignResult", "run_sweep", "evaluate_design", "refit_design",
+    "baseline_grid", "design_cost", "DEFAULT_M_GRID", "DEFAULT_N_GRID",
+    "dominates", "pareto_front", "front", "rank", "design_objectives",
+    "feasible_ms", "deadline_region", "summarize",
+]

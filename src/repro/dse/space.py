@@ -1,0 +1,165 @@
+"""Declarative hardware/software design space for the offload path.
+
+A :class:`DesignSpace` names the axes the explorer may vary (DESIGN.md §3):
+
+  * any field of :class:`repro.core.simulator.HWParams` (bus width, wakeup
+    latency, cores per cluster, ...), given as ``{"field": [values, ...]}``;
+  * the dispatch axis (``"unicast"`` | ``"multicast"``);
+  * the completion-sync axis (``"poll"`` | ``"credit"``);
+  * the kernel, by registry name (``repro.kernels.ops.KERNELS``).
+
+``grid()`` enumerates the full cross product; ``sample(k, seed)`` draws a
+uniform random subset of the same product for spaces too large to sweep
+exhaustively.  Each concrete combination is a :class:`DesignPoint` — a frozen,
+picklable value the parallel sweep runner farms out to worker processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Iterator, Mapping, Sequence
+
+from repro.core.simulator import DISPATCH_MODES, SYNC_MODES, HWParams
+
+_HW_FIELDS = {f.name for f in dataclasses.fields(HWParams)}
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One concrete hardware/software co-design to simulate."""
+
+    dispatch: str
+    sync: str
+    kernel_name: str = "daxpy"
+    hw: HWParams = HWParams()
+    #: (field, value) pairs where ``hw`` differs from the default HWParams —
+    #: derived, so the point's name always matches what it simulates.
+    hw_overrides: tuple[tuple[str, object], ...] = dataclasses.field(
+        init=False)
+
+    def __post_init__(self):
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
+        if self.sync not in SYNC_MODES:
+            raise ValueError(f"sync must be one of {SYNC_MODES}")
+        object.__setattr__(self, "hw_overrides", tuple(
+            (f.name, getattr(self.hw, f.name))
+            for f in dataclasses.fields(HWParams)
+            if getattr(self.hw, f.name) != f.default))
+
+    @property
+    def name(self) -> str:
+        tags = [self.kernel_name, f"{self.dispatch}+{self.sync}"]
+        tags += [f"{k}={v}" for k, v in self.hw_overrides]
+        return " ".join(tags)
+
+    @property
+    def is_paper_baseline(self) -> bool:
+        """The paper's baseline design point: sequential dispatch + polling."""
+        return (self.dispatch, self.sync) == ("unicast", "poll")
+
+    @property
+    def is_paper_extended(self) -> bool:
+        """The paper's extended design point: multicast + credit counter."""
+        return (self.dispatch, self.sync) == ("multicast", "credit")
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "dispatch": self.dispatch,
+            "sync": self.sync,
+            "kernel": self.kernel_name,
+            "hw_overrides": dict(self.hw_overrides),
+        }
+
+
+@dataclass(frozen=True)
+class DesignSpace:
+    """The axes of a sweep; ``grid()``/``sample()`` yield DesignPoints."""
+
+    hw_axes: Mapping[str, Sequence] = field(default_factory=dict)
+    dispatch: Sequence[str] = DISPATCH_MODES
+    sync: Sequence[str] = SYNC_MODES
+    kernels: Sequence[str] = ("daxpy",)
+    base_hw: HWParams = HWParams()
+
+    def __post_init__(self):
+        unknown = set(self.hw_axes) - _HW_FIELDS
+        if unknown:
+            raise ValueError(f"unknown HWParams field(s) {sorted(unknown)}; "
+                             f"valid: {sorted(_HW_FIELDS)}")
+        bad_d = set(self.dispatch) - set(DISPATCH_MODES)
+        bad_s = set(self.sync) - set(SYNC_MODES)
+        if bad_d or bad_s:
+            raise ValueError(f"invalid dispatch {sorted(bad_d)} / "
+                             f"sync {sorted(bad_s)} modes")
+        if not self.kernels:
+            raise ValueError("need at least one kernel")
+        # Normalize every axis to distinct values (order-preserving), so
+        # size/grid/sample agree on the number of distinct designs.
+        object.__setattr__(self, "hw_axes",
+                           {k: tuple(dict.fromkeys(v))
+                            for k, v in self.hw_axes.items()})
+        object.__setattr__(self, "dispatch",
+                           tuple(dict.fromkeys(self.dispatch)))
+        object.__setattr__(self, "sync", tuple(dict.fromkeys(self.sync)))
+        object.__setattr__(self, "kernels",
+                           tuple(dict.fromkeys(self.kernels)))
+
+    @property
+    def size(self) -> int:
+        n = len(self.dispatch) * len(self.sync) * len(self.kernels)
+        for values in self.hw_axes.values():
+            n *= len(values)
+        return n
+
+    def _make_point(self, dispatch: str, sync: str, kernel: str,
+                    hw_values: tuple) -> DesignPoint:
+        hw = dataclasses.replace(self.base_hw, **dict(zip(self.hw_axes,
+                                                          hw_values)))
+        return DesignPoint(dispatch=dispatch, sync=sync, kernel_name=kernel,
+                           hw=hw)
+
+    def grid(self) -> Iterator[DesignPoint]:
+        """Exhaustive cross product of every axis."""
+        for kernel in self.kernels:
+            for dispatch in self.dispatch:
+                for sync in self.sync:
+                    for hw_values in itertools.product(
+                            *self.hw_axes.values()):
+                        yield self._make_point(dispatch, sync, kernel,
+                                               hw_values)
+
+    def sample(self, k: int, *, seed: int = 0) -> list[DesignPoint]:
+        """``k`` distinct points drawn uniformly from the product space."""
+        k = min(k, self.size)
+        rng = random.Random(seed)
+        seen: set[tuple] = set()
+        points: list[DesignPoint] = []
+        while len(points) < k:
+            combo = (
+                rng.choice(list(self.dispatch)),
+                rng.choice(list(self.sync)),
+                rng.choice(list(self.kernels)),
+                tuple(rng.choice(list(v)) for v in self.hw_axes.values()),
+            )
+            if combo in seen:
+                continue
+            seen.add(combo)
+            points.append(self._make_point(combo[0], combo[1], combo[2],
+                                           combo[3]))
+        return points
+
+    def baseline_point(self, kernel: str | None = None) -> DesignPoint:
+        """The paper-baseline reference all speedups are computed against."""
+        return DesignPoint(dispatch="unicast", sync="poll",
+                           kernel_name=kernel or self.kernels[0],
+                           hw=self.base_hw)
+
+
+#: The dispatch x sync grid over the default hardware — four designs, two of
+#: which are the paper's published baseline and extended points.
+PAPER_SPACE = DesignSpace(kernels=("daxpy",))

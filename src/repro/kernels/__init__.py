@@ -8,6 +8,8 @@ performance targets the TPU VPU (128-lane blocks staged through VMEM).
 """
 
 from . import ops, ref
-from .ops import adamw_update, daxpy, pack_hparams
+from .ops import (KERNELS, adamw_update, daxpy, get_kernel, kernel_names,
+                  pack_hparams, register_kernel)
 
-__all__ = ["ops", "ref", "daxpy", "adamw_update", "pack_hparams"]
+__all__ = ["ops", "ref", "daxpy", "adamw_update", "pack_hparams",
+           "KERNELS", "get_kernel", "register_kernel", "kernel_names"]

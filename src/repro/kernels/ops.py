@@ -1,9 +1,15 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels + the kernel registry.
 
 Arbitrary-shape operands are flattened, zero-padded to a whole number of
 ``(block_rows, 128)`` VMEM blocks, run through the kernel, and un-padded.
 ``interpret=True`` executes the kernel body in Python on CPU (used by the
 test-suite oracle sweeps); on TPU the same code lowers to Mosaic.
+
+The registry (``KERNELS`` / :func:`get_kernel` / :func:`register_kernel`)
+maps kernel names to the offload-runtime view of each kernel — the
+:class:`repro.core.simulator.KernelSpec` traffic/compute coefficients the
+Manticore cycle model and the design-space explorer (``repro.dse``,
+DESIGN.md §3) sweep over.  Coefficient provenance is documented per entry.
 """
 
 from __future__ import annotations
@@ -13,11 +19,59 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.simulator import DAXPY, KernelSpec
+
 from . import daxpy as _daxpy_mod
 from . import fused_adamw as _adamw_mod
 from .fused_adamw import pack_hparams
 
 LANE = _daxpy_mod.LANE
+
+
+# --------------------------------------------------------------------------- #
+# Kernel registry: name -> simulator-facing KernelSpec.
+# --------------------------------------------------------------------------- #
+
+KERNELS: dict[str, KernelSpec] = {
+    # The paper's kernel: read x,y (16 B) + write y (8 B); 2.6 cy/elem/core.
+    "daxpy": DAXPY,
+    # Fused AdamW update: read p,g,m,v (32 B) + write p,m,v (24 B); the
+    # rsqrt/div chain costs ~9 worker cycles per element and is far worse on
+    # the scalar host core.
+    "fused_adamw": KernelSpec(name="fused_adamw", bytes_per_elem=56,
+                              cycles_per_elem=9.0,
+                              host_cycles_per_elem=14.0),
+    # Pure streaming copy: read + write 8 B each; one load+store pair per
+    # element keeps the worker cores nearly idle.
+    "memcpy": KernelSpec(name="memcpy", bytes_per_elem=16,
+                         cycles_per_elem=0.75, host_cycles_per_elem=2.0),
+    # Dot-product style reduction: read two 8 B operands, accumulate in
+    # registers (no streamed writeback).
+    "dot": KernelSpec(name="dot", bytes_per_elem=16, cycles_per_elem=1.0,
+                      host_cycles_per_elem=2.5),
+}
+
+
+def get_kernel(name: str) -> KernelSpec:
+    """Look up a registered kernel by name."""
+    try:
+        return KERNELS[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{sorted(KERNELS)}") from None
+
+
+def register_kernel(spec: KernelSpec, *, overwrite: bool = False) -> KernelSpec:
+    """Add a kernel to the registry (e.g. from an experiment script)."""
+    if spec.name in KERNELS and not overwrite:
+        raise ValueError(f"kernel {spec.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    KERNELS[spec.name] = spec
+    return spec
+
+
+def kernel_names() -> tuple[str, ...]:
+    return tuple(sorted(KERNELS))
 
 
 def _to_blocks(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
@@ -66,4 +120,5 @@ def adamw_update(p, g, m, v, hp, *, block_rows: int = 128,
             _from_blocks(vo, n, v.shape, jnp.float32))
 
 
-__all__ = ["daxpy", "adamw_update", "pack_hparams"]
+__all__ = ["daxpy", "adamw_update", "pack_hparams", "KERNELS", "get_kernel",
+           "register_kernel", "kernel_names"]

@@ -1,0 +1,131 @@
+"""Co-design explorer CLI: sweep the offload design space (DESIGN.md §3).
+
+  PYTHONPATH=src python -m repro.launch.dse                       # paper grid
+  PYTHONPATH=src python -m repro.launch.dse --bus 48,96,192 \\
+      --kernels daxpy,fused_adamw --workers 4 --deadline 700 --deadline-n 1024
+  PYTHONPATH=src python -m repro.launch.dse --sample 16 --seed 1 \\
+      --axis cluster_wakeup=20,40,80 --json DSE.json
+
+Each design point (dispatch x sync x kernel x HWParams overrides) is run
+through the discrete-event simulator over the (M, N) grid, refit to the
+analytical Eq.-1 model (MAPE recorded), scored against the paper baseline,
+and ranked; the (runtime, cost) Pareto front and — with ``--deadline`` — the
+Eq.-3 deadline-feasible region per front design are printed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.dse import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignSpace,
+                       deadline_region, front, run_sweep, summarize)
+
+
+def _ints(csv: str) -> list[int]:
+    return [int(x) for x in csv.split(",") if x]
+
+
+def _axis(spec: str) -> tuple[str, list]:
+    """Parse --axis NAME=v1,v2,... (values as int, else float)."""
+    name, _, values = spec.partition("=")
+    if not values:
+        raise argparse.ArgumentTypeError(
+            f"--axis wants NAME=v1,v2,..., got {spec!r}")
+    parsed = []
+    for v in values.split(","):
+        try:
+            parsed.append(int(v))
+        except ValueError:
+            parsed.append(float(v))
+    return name, parsed
+
+
+def build_space(args) -> DesignSpace:
+    hw_axes: dict = {}
+    if args.bus:
+        hw_axes["bus_bytes_per_cycle"] = _ints(args.bus)
+    for name, values in args.axis or []:
+        hw_axes[name] = values
+    return DesignSpace(
+        hw_axes=hw_axes,
+        dispatch=tuple(args.dispatch.split(",")),
+        sync=tuple(args.sync.split(",")),
+        kernels=tuple(args.kernels.split(",")),
+    )
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bus", default=None,
+                    help="comma list of bus widths (B/cycle), e.g. 48,96,192")
+    ap.add_argument("--axis", action="append", type=_axis, metavar="F=V,V",
+                    help="extra HWParams axis, e.g. cluster_wakeup=20,40,80 "
+                         "(repeatable)")
+    ap.add_argument("--dispatch", default="unicast,multicast")
+    ap.add_argument("--sync", default="poll,credit")
+    ap.add_argument("--kernels", default="daxpy",
+                    help="comma list of registry kernels "
+                         "(repro.kernels.ops.KERNELS)")
+    ap.add_argument("--ms", default=",".join(map(str, DEFAULT_M_GRID)))
+    ap.add_argument("--ns", default=",".join(map(str, DEFAULT_N_GRID)))
+    ap.add_argument("--sample", type=int, default=None,
+                    help="random-sample K points instead of the full grid")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help=">1 fans the sweep out over a process pool")
+    ap.add_argument("--top", type=int, default=12, help="rows in the table")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="runtime budget (cycles) for the feasibility report")
+    ap.add_argument("--deadline-n", type=int, default=1024,
+                    help="problem sizes report around this N")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args(argv)
+
+    space = build_space(args)
+    points = (space.sample(args.sample, seed=args.seed)
+              if args.sample else space)
+    ms, ns = _ints(args.ms), _ints(args.ns)
+    n_points = args.sample or space.size
+    print(f"sweeping {n_points} design points over "
+          f"{len(ms)}x{len(ns)} (M, N) grid "
+          f"({'sampled' if args.sample else 'full grid'}, "
+          f"workers={args.workers})")
+    results = run_sweep(points, ms, ns, workers=args.workers,
+                        base_hw=space.base_hw)
+
+    print("\n" + summarize(results, top=args.top))
+    fr = front(results)
+    print(f"\nPareto front ({len(fr)}/{len(results)} designs, "
+          "minimize t_ref & cost):")
+    for r in fr:
+        print(f"  {r.point.name:<44} t_ref {r.t_ref:>7.0f} cy  "
+              f"cost {r.cost:.2f}  MAPE {r.mape_pct:.2f}%")
+
+    if args.deadline is not None:
+        ns_report = sorted({n for n in ns
+                            if n <= args.deadline_n} | {args.deadline_n})[-4:]
+        print(f"\ndeadline {args.deadline:.0f} cy — smallest feasible M "
+              "(Eq. 3) per front design (for unicast designs larger M may "
+              "be infeasible again):")
+        for r in fr:
+            region = deadline_region(r, ns_report, args.deadline, ms)
+            cells = ", ".join(
+                f"N={n}: {'-' if m is None else f'minM={m}'}"
+                for n, m in region.items())
+            print(f"  {r.point.name:<44} {cells}")
+
+    out = {
+        "grid": {"ms": ms, "ns": ns},
+        "results": [r.as_dict() for r in results],
+        "front": [r.point.name for r in fr],
+    }
+    if args.json:
+        Path(args.json).write_text(json.dumps(out, indent=2) + "\n")
+        print(f"\nwrote {len(results)} design records to {args.json}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

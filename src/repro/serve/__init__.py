@@ -54,6 +54,7 @@ def serve_workload(
     fabric: str = "simulated",
     calibrator: OnlineCalibrator | None = None,
     available_m=(1, 2, 4, 8, 16, 32),
+    design=None,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
 
@@ -67,12 +68,36 @@ def serve_workload(
     DispatchStats/CreditCounterSync step times — requires ``execute=True``;
     the calibrator then tracks the live host hardware, where M is a planning
     label rather than a physical extent).
+
+    ``design`` serves a swept co-design point (``repro.dse.DesignPoint``)
+    instead of the paper's extended design: the simulated fabric runs that
+    design's hardware/dispatch/sync/kernel, and — unless an explicit
+    ``calibrator`` is passed — the scheduler's prior becomes the design's own
+    Eq.-1 refit rather than ``PAPER_MODEL`` (DESIGN.md §3.4).
     """
     spec = spec or WorkloadSpec()
-    calibrator = calibrator or OnlineCalibrator()
+    if design is not None and fabric != "simulated":
+        raise ValueError("design= requires the simulated fabric")
+    if calibrator is None:
+        if design is not None:
+            from repro.dse.runner import refit_design
+            prior, _ = refit_design(design, force_eq1=True)
+            calibrator = OnlineCalibrator(prior=prior)
+        else:
+            calibrator = OnlineCalibrator()
     if fabric == "simulated":
-        fabric_src = SimulatedFabric(jitter_pct=jitter_pct, seed=spec.seed)
-        host_model = None  # Manticore host fallback (same cycle domain)
+        if design is not None:
+            fabric_src = SimulatedFabric.for_design(design,
+                                                    jitter_pct=jitter_pct,
+                                                    seed=spec.seed)
+            # Plan host fallbacks against the design's own hardware/kernel.
+            from repro.core import simulator as _sim
+            host_model = lambda n: float(_sim.host_runtime(  # noqa: E731
+                n, hw=fabric_src.hw, kernel=fabric_src.kernel))
+        else:
+            fabric_src = SimulatedFabric(jitter_pct=jitter_pct,
+                                         seed=spec.seed)
+            host_model = None  # Manticore host fallback (same cycle domain)
     elif fabric == "wallclock":
         if not execute:
             raise ValueError("fabric='wallclock' needs execute=True: the "

@@ -33,12 +33,24 @@ class SimulatedFabric:
 
     def __init__(self, *, hw: sim.HWParams = sim.HWParams(),
                  kernel: sim.KernelSpec = sim.DAXPY, multicast: bool = True,
+                 dispatch: str | None = None, sync: str | None = None,
                  jitter_pct: float = 1.0, seed: int = 0):
         self.hw = hw
         self.kernel = kernel
-        self.multicast = multicast
+        # dispatch/sync (the DSE axes, DESIGN.md §3) take precedence over the
+        # legacy two-design ``multicast`` flag.
+        self.dispatch = dispatch or ("multicast" if multicast else "unicast")
+        self.sync = sync or ("credit" if multicast else "poll")
         self.jitter_pct = jitter_pct
         self._rng = np.random.default_rng(seed)
+
+    @classmethod
+    def for_design(cls, point, *, jitter_pct: float = 1.0, seed: int = 0):
+        """Fabric configured for a swept design point (repro.dse)."""
+        from repro.kernels.ops import get_kernel
+        return cls(hw=point.hw, kernel=get_kernel(point.kernel_name),
+                   dispatch=point.dispatch, sync=point.sync,
+                   jitter_pct=jitter_pct, seed=seed)
 
     def _jitter(self, t: float) -> float:
         if not self.jitter_pct:
@@ -49,7 +61,8 @@ class SimulatedFabric:
     def offload(self, m: int, n: int) -> float:
         """Cycles for an offloaded job of n elements on m clusters."""
         return self._jitter(sim.offload_runtime(
-            m, n, multicast=self.multicast, hw=self.hw, kernel=self.kernel))
+            m, n, dispatch=self.dispatch, sync=self.sync, hw=self.hw,
+            kernel=self.kernel))
 
     def host(self, n: int) -> float:
         """Cycles for the host to run the job itself (no offload)."""

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 from repro.core import decision, simulator
+from repro.core.runtime_model import LinearDispatchModel, OffloadModel
 
 from .calibrator import OnlineCalibrator
 from .queue import Request
@@ -54,11 +55,21 @@ class BatchPlan:
 class OffloadAwareScheduler:
     """Per-batch extent selection + per-request admission, model-calibrated."""
 
-    def __init__(self, calibrator: OnlineCalibrator, *,
+    def __init__(self, calibrator: OnlineCalibrator | OffloadModel, *,
                  available_m: Sequence[int] = (1, 2, 4, 8, 16, 32),
                  host_model: Callable[[int], float] | None = None):
         if not available_m:
             raise ValueError("no cluster configurations available")
+        if isinstance(calibrator, LinearDispatchModel):
+            raise TypeError(
+                "the scheduler's Eq.-3 closed form needs the 3-coefficient "
+                "Eq.-1 model; refit unicast designs with "
+                "refit_design(point, force_eq1=True)")
+        if isinstance(calibrator, OffloadModel):
+            # A fixed model — e.g. a swept design's refit (repro.dse) —
+            # becomes the prior of a fresh calibrator, so scheduling starts
+            # from that design's coefficients and still tracks measurements.
+            calibrator = OnlineCalibrator(prior=calibrator)
         self.calibrator = calibrator
         self.available_m = sorted(available_m)
         self.host_model = host_model or simulator.host_runtime

@@ -84,6 +84,42 @@ def test_deadline_report_roundtrip():
     assert rep["t_predicted"] <= 700.0
 
 
+@given(vecs=st.lists(st.tuples(st.floats(0, 100, allow_nan=False),
+                               st.floats(0, 100, allow_nan=False)),
+                     min_size=1, max_size=64))
+@settings(max_examples=200)
+def test_pareto_front_points_mutually_non_dominated(vecs):
+    """Property the co-design sweep leans on (repro.dse.pareto): no front
+    member dominates another, and every excluded point is dominated."""
+    from repro.dse import dominates, pareto_front
+    fr = pareto_front(vecs, key=lambda v: v)
+    assert fr
+    for a in fr:
+        assert not any(dominates(b, a) for b in fr)
+    for v in vecs:
+        if v not in fr:
+            assert any(dominates(f, v) for f in fr)
+
+
+@given(per_elem=st.floats(min_value=0.0, max_value=64.0))
+@settings(max_examples=100)
+def test_breakeven_is_minimal_winning_n(per_elem):
+    """For any linear host model — including the always-wins (per_elem below
+    the offload's serial beta) and never-wins extremes — breakeven_n is
+    either None or the smallest N where offloading wins."""
+    host = lambda n: 20.0 + per_elem * n  # noqa: E731
+    n_star = dec.breakeven_n(PAPER_MODEL, host, AVAILABLE, n_max=1 << 14)
+    if n_star is None:
+        assert not dec.should_offload(PAPER_MODEL, host, 1 << 14,
+                                      AVAILABLE).offload
+    else:
+        assert dec.should_offload(PAPER_MODEL, host, n_star,
+                                  AVAILABLE).offload
+        if n_star > 1:
+            assert not dec.should_offload(PAPER_MODEL, host, n_star - 1,
+                                          AVAILABLE).offload
+
+
 @given(n=st.integers(min_value=64, max_value=1 << 14),
        slack=st.floats(min_value=5.0, max_value=500.0))
 @settings(max_examples=100)

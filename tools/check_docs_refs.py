@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Fail if a doc citation in src/ points at a missing file or section.
+
+Docstrings cite the architecture reference as ``DESIGN.md §2.1`` (or another
+markdown file, e.g. ``docs/serve.md``).  This check keeps those citations
+honest:
+
+  * every cited ``*.md`` path must exist relative to the repo root;
+  * every ``§N[.N…]`` cited against a file must match a heading in that file
+    of the form ``#… §N[.N…] — title``.
+
+Run from anywhere: ``python tools/check_docs_refs.py [ROOT]``.  Exits 1 with
+one line per broken citation.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: "path/to/FILE.md §2.1" (section optional; separate match per citation).
+CITATION = re.compile(r"(?P<file>[\w./-]*\w\.md)(?:\s*§(?P<sec>\d+(?:\.\d+)*))?")
+HEADING_SECTION = re.compile(r"^#{1,6}[^\n]*?§(\d+(?:\.\d+)*)", re.MULTILINE)
+
+
+def sections_of(md_path: Path) -> set[str]:
+    return set(HEADING_SECTION.findall(md_path.read_text(encoding="utf-8")))
+
+
+def check(root: Path, scan_dirs: tuple[str, ...] = ("src",)) -> list[str]:
+    errors: list[str] = []
+    sections_cache: dict[Path, set[str]] = {}
+    for scan_dir in scan_dirs:
+        for py in sorted((root / scan_dir).rglob("*.py")):
+            text = py.read_text(encoding="utf-8")
+            for lineno, line in enumerate(text.splitlines(), start=1):
+                for m in CITATION.finditer(line):
+                    target = root / m.group("file")
+                    where = f"{py.relative_to(root)}:{lineno}"
+                    if not target.is_file():
+                        errors.append(f"{where}: cites {m.group('file')} "
+                                      "which does not exist")
+                        continue
+                    sec = m.group("sec")
+                    if sec is None:
+                        continue
+                    if target not in sections_cache:
+                        sections_cache[target] = sections_of(target)
+                    if sec not in sections_cache[target]:
+                        errors.append(
+                            f"{where}: cites {m.group('file')} §{sec} but "
+                            f"{m.group('file')} has no §{sec} heading "
+                            f"(found: {sorted(sections_cache[target])})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    errors = check(root)
+    if errors:
+        print(f"{len(errors)} broken doc citation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("doc citations OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
