@@ -1,14 +1,17 @@
 """Serving-subsystem benchmark: requests/sec + p99 latency + calibration.
 
-Two measurements on the synthetic open-loop workload (Poisson arrivals,
+Three measurements on the synthetic open-loop workload (Poisson arrivals,
 mixed prompt/gen lengths, per-request Eq.-3 SLOs):
 
-  * scheduler-only (``execute=False``): the full queue / admission /
-    Eq.-3 extent-selection / online-calibration machinery with the
-    simulated fabric — reports virtual-fabric throughput and latency
-    percentiles, plus the *host-side* scheduling overhead (wall seconds per
-    scheduled job, which is the budget the scheduler itself consumes);
-  * engine-attached (default, skipped with fast=True): the same loop
+  * A/B on the same trace (``execute=False``): the slot-managed continuous
+    loop (mid-wave admission, DESIGN.md §6) vs the legacy wave-boundary
+    baseline — the headline is the throughput / p99 win from refilling freed
+    slots instead of letting a 1-token straggler serialize the fabric.  The
+    trace is straggler-heavy (high gen-length variance) at heavy load, the
+    regime the tentpole targets; under uniform tiny decodes in deep overload
+    the wave path's batched-prefill amortization can still win (documented
+    in DESIGN.md §6).
+  * engine-attached (default, skipped with fast=True): the continuous loop
     driving the real compiled prefill/decode steps on a reduced arch,
     reporting wall requests/sec of the whole stack.
 
@@ -22,6 +25,10 @@ import time
 
 from repro.serve import WorkloadSpec, serve_workload
 
+#: The A/B trace: heavy traffic with straggler-y generation lengths.
+AB_SPEC = WorkloadSpec(num_requests=512, rate_rps=2e6,
+                       gen_lens=(4, 16, 64), seed=7)
+
 
 def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
     m = out["metrics"]
@@ -29,9 +36,15 @@ def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
     snap = out["calibration"]
     recs = [
         (f"{prefix}_throughput", s["throughput_rps"], "req/s-virtual"),
+        (f"{prefix}_goodput", s["goodput_rps"], "req/s-virtual"),
+        (f"{prefix}_tokens_per_s", s["tokens_per_s"], "tok/s-virtual"),
         (f"{prefix}_latency_p50", s["latency_us"]["p50"], "us"),
         (f"{prefix}_latency_p99", s["latency_us"]["p99"], "us"),
         (f"{prefix}_ttft_p99", s["ttft_us"]["p99"], "us"),
+        (f"{prefix}_queue_delay_p99", s["queue_delay_us"]["p99"], "us"),
+        (f"{prefix}_slot_occupancy", s["slot_occupancy"]["mean"], "fraction"),
+        (f"{prefix}_mid_wave_admissions",
+         float(s["mid_wave_admissions"]), "requests"),
         (f"{prefix}_slo_attainment",
          s["slo_attainment"] if s["slo_attainment"] is not None else -1.0,
          "fraction"),
@@ -52,24 +65,44 @@ def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
 def main(fast: bool = False) -> list[dict]:
     records: list[dict] = []
 
-    spec = WorkloadSpec(num_requests=512, rate_rps=4e6, seed=7)
-    t0 = time.perf_counter()
-    out = serve_workload(spec, execute=False)
-    dt = time.perf_counter() - t0
-    m = out["metrics"]
-    print("--- scheduler-only (512 requests, simulated fabric) ---")
-    print(m.format_summary())
-    snap = out["calibration"]
-    mape = ("n/a" if snap.window_mape_pct is None
-            else f"{snap.window_mape_pct:.2f}%")
-    print(f"calibrated: a={snap.alpha:.1f} b={snap.beta:.4f} "
-          f"g={snap.gamma:.4f} ({snap.source}), MAPE {mape}")
-    n_jobs = len(out["plans"])
-    print(f"scheduling overhead: {dt / max(n_jobs, 1) * 1e6:.1f} us/job wall "
-          f"({n_jobs} jobs in {dt:.2f}s)")
-    records += _records_from(out, "sim", dt)
+    outs = {}
+    us_per_job = {}
+    for wave_boundary, prefix in ((True, "wave"), (False, "sim")):
+        t0 = time.perf_counter()
+        out = serve_workload(AB_SPEC, execute=False,
+                             wave_boundary=wave_boundary)
+        dt = time.perf_counter() - t0
+        mode = ("wave-boundary baseline" if wave_boundary
+                else "continuous (mid-wave admission)")
+        print(f"--- {mode} ({AB_SPEC.num_requests} requests, "
+              "simulated fabric) ---")
+        print(out["metrics"].format_summary())
+        snap = out["calibration"]
+        mape = ("n/a" if snap.window_mape_pct is None
+                else f"{snap.window_mape_pct:.2f}%")
+        print(f"calibrated: a={snap.alpha:.1f} b={snap.beta:.4f} "
+              f"g={snap.gamma:.4f} ({snap.source}), MAPE {mape}")
+        n_jobs = len(out["plans"])
+        print(f"scheduling overhead: {dt / max(n_jobs, 1) * 1e6:.1f} us/job "
+              f"wall ({n_jobs} jobs in {dt:.2f}s)")
+        records += _records_from(out, prefix, dt)
+        outs[prefix] = out["metrics"].summary()
+        us_per_job[prefix] = dt / max(n_jobs, 1) * 1e6
+
+    gain = (outs["sim"]["throughput_rps"] / outs["wave"]["throughput_rps"]
+            - 1.0) * 100.0
+    p99_delta = (outs["sim"]["latency_us"]["p99"]
+                 / outs["wave"]["latency_us"]["p99"] - 1.0) * 100.0
+    print(f"--- mid-wave admission vs wave boundary: throughput "
+          f"{gain:+.1f}%, p99 latency {p99_delta:+.1f}% ---")
+    records.append({"section": "serve_scheduler",
+                    "name": "midwave_throughput_gain", "value": gain,
+                    "unit": "pct"})
+    records.append({"section": "serve_scheduler",
+                    "name": "midwave_p99_delta", "value": p99_delta,
+                    "unit": "pct"})
     records.append({"section": "serve_scheduler", "name": "sim_us_per_job",
-                    "value": dt / max(n_jobs, 1) * 1e6, "unit": "us"})
+                    "value": us_per_job["sim"], "unit": "us"})
 
     if not fast:
         spec = WorkloadSpec(num_requests=24, rate_rps=2e6,
@@ -78,7 +111,8 @@ def main(fast: bool = False) -> list[dict]:
         out = serve_workload(spec, arch="chatglm3-6b", execute=True,
                              max_batch=4)
         dt = time.perf_counter() - t0
-        print("--- engine-attached (24 requests, chatglm3-6b reduced) ---")
+        print("--- engine-attached (24 requests, chatglm3-6b reduced, "
+              "continuous) ---")
         print(out["metrics"].format_summary())
         print(f"end-to-end wall: {dt:.1f}s "
               f"({out['metrics'].completed / dt:.2f} req/s incl. compile)")

@@ -4,10 +4,13 @@
 
 Exercises the serving path end-to-end on CPU: batched prefill populating the
 KV cache, token-by-token decode with donated caches, credit-counter
-completion per step, and the offload-decision report for the job.
+completion per step, and the offload-decision report for the job — then an
+A/B of the slot-managed continuous loop against the wave-boundary baseline
+on the same open-loop trace (DESIGN.md §6).
 """
 
 from repro.launch.serve import serve
+from repro.serve import WorkloadSpec, serve_workload
 
 
 def main():
@@ -21,6 +24,19 @@ def main():
     rep = out["offload_decision"]
     print(f"offload decision for this job size (Eq. 3): allocate "
           f"{rep['m_selected']} clusters (M_min={rep['m_min_raw']})")
+
+    # Mid-wave admission vs wave-boundary batching, same straggler-heavy
+    # Poisson trace (scheduler-only: the simulated fabric times the jobs).
+    spec = WorkloadSpec(num_requests=256, rate_rps=2e6,
+                        gen_lens=(4, 16, 64), seed=7)
+    print("\ncontinuous batching A/B (256 requests, simulated fabric):")
+    for wave_boundary, name in ((True, "wave-boundary"), (False, "mid-wave")):
+        s = serve_workload(spec, execute=False,
+                           wave_boundary=wave_boundary)["metrics"].summary()
+        print(f"  {name:>13}: {s['throughput_rps']:,.0f} req/s, "
+              f"p99 {s['latency_us']['p99']:.1f} us, "
+              f"occupancy {100 * s['slot_occupancy']['mean']:.0f}%, "
+              f"{s['mid_wave_admissions']} mid-wave admissions")
 
 
 if __name__ == "__main__":

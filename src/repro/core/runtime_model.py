@@ -65,10 +65,16 @@ def fit(samples: Iterable[tuple[int, int, float]]) -> OffloadModel:
 
 
 def mape(model: OffloadModel, samples: Iterable[tuple[int, int, float]]) -> float:
-    """Mean absolute percentage error over (M, N, t) samples (paper Eq. 2)."""
-    samples = list(samples)
+    """Mean absolute percentage error over (M, N, t) samples (paper Eq. 2).
+
+    Samples with ``t <= 0`` are skipped: a non-positive measured runtime is
+    a clock glitch, and the percentage error against it is undefined (the
+    unguarded division used to raise ZeroDivisionError even though upstream
+    filters — e.g. ``OnlineCalibrator.observe`` — normally drop them).
+    """
+    samples = [s for s in samples if s[2] > 0]
     if not samples:
-        raise ValueError("no samples")
+        raise ValueError("no positive-runtime samples")
     errs = [
         abs(t - float(model.predict(m, n))) / t for m, n, t in samples
     ]

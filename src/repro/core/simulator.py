@@ -236,13 +236,36 @@ def host_runtime(n_elems: int, *, hw: HWParams = HWParams(),
     return hw.host_loop_setup + math.ceil(per_elem * n_elems)
 
 
-def speedup(m_clusters: int, n_elems: int, *, hw: HWParams = HWParams(),
-            kernel: KernelSpec = DAXPY) -> float:
-    """Speedup of the extended design over the baseline (paper Fig. 1 right)."""
-    t_base = offload_runtime(m_clusters, n_elems, multicast=False, hw=hw,
-                             kernel=kernel)
-    t_ext = offload_runtime(m_clusters, n_elems, multicast=True, hw=hw,
-                            kernel=kernel)
+def speedup(
+    m_clusters: int,
+    n_elems: int,
+    *,
+    hw: HWParams = HWParams(),
+    kernel: KernelSpec = DAXPY,
+    base_dispatch: str = "unicast",
+    base_sync: str = "poll",
+    base_hw: HWParams | None = None,
+    base_kernel: KernelSpec | None = None,
+    dispatch: str = "multicast",
+    sync: str = "credit",
+) -> float:
+    """Speedup of one design over another at (M, N).
+
+    With the defaults this is the paper's Fig.-1-right comparison (extended
+    multicast+credit design over the unicast+poll baseline on the same
+    hardware/kernel).  Both operands accept the same ``dispatch``/``sync``/
+    ``hw``/``kernel`` axes as :func:`sweep`; the result is
+    ``t_base / t_design``, so any DSE design pair (``repro.dse``'s
+    ``design_speedup``) can be expressed, not just the two legacy points.
+    Note ``hw``/``kernel`` apply to BOTH operands unless ``base_hw``/
+    ``base_kernel`` override the reference side — the legacy same-hardware
+    comparison; pass both explicitly for a cross-hardware pair.
+    """
+    t_base = offload_runtime(m_clusters, n_elems, dispatch=base_dispatch,
+                             sync=base_sync, hw=base_hw or hw,
+                             kernel=base_kernel or kernel)
+    t_ext = offload_runtime(m_clusters, n_elems, dispatch=dispatch,
+                            sync=sync, hw=hw, kernel=kernel)
     return t_base / t_ext
 
 
@@ -271,8 +294,43 @@ PAPER_N_GRID_MODEL = [256, 512, 768, 1024]      # Eq. 2 validation grid
 PAPER_N_GRID_SPEEDUP = [1024, 2048, 4096, 8192]  # Fig. 1 right problem sizes
 
 
+#: The paper's published fabric size (288 cores = 32 clusters + host):
+#: ``scaled_hw`` is the identity at this reference point.
+REFERENCE_CLUSTERS = 32
+
+
 def scaled_hw(num_clusters: int, hw: HWParams = HWParams()) -> HWParams:
-    """Manticore configs scale up to 288 cores = 32 clusters; identity hook for
-    experiments that vary the fabric size."""
-    del num_clusters
-    return replace(hw)
+    """HWParams for a fabric of ``num_clusters`` clusters.
+
+    The paper's numbers are measured at 32 clusters (288 cores); fabric-size
+    experiments scale the interconnect with the cluster count:
+
+      * ``tx_multicast`` — the multicast tree gains a pipeline stage per
+        doubling of its fan-out (one extra cycle per level beyond/below the
+        reference depth);
+      * ``cluster_wakeup`` — the wakeup IRQ distribution network is a tree
+        with the same depth scaling (2 cycles per level: request + grant);
+      * ``credit_irq_latency`` — the credit-counter reduction tree likewise
+        grows/shrinks a cycle per level;
+      * ``bus_bytes_per_cycle`` — the shared operand bus is banked with the
+        fabric: doubling the clusters adds ~half a reference bus of banked
+        bandwidth (sub-linear — bank conflicts and arbitration eat the
+        rest), so per-cluster bandwidth *shrinks* as the fabric grows, which
+        is the wakeup/DMA contention the event model then serializes.
+
+    ``num_clusters == 32`` returns the published parameters unchanged.
+    Per-cluster parameters (cores, unicast mailbox write) are size-invariant.
+    """
+    if num_clusters < 1:
+        raise ValueError("need at least one cluster")
+    levels = math.log2(num_clusters / REFERENCE_CLUSTERS)
+    depth_delta = int(round(levels))               # tree depth change
+    scale = num_clusters / REFERENCE_CLUSTERS
+    bus = max(1, round(hw.bus_bytes_per_cycle * (1 + (scale - 1) * 0.5)))
+    return replace(
+        hw,
+        tx_multicast=max(1, hw.tx_multicast + depth_delta),
+        cluster_wakeup=max(1, hw.cluster_wakeup + 2 * depth_delta),
+        credit_irq_latency=max(1, hw.credit_irq_latency + depth_delta),
+        bus_bytes_per_cycle=bus,
+    )

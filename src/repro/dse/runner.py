@@ -157,6 +157,23 @@ def baseline_grid(kernel_name: str, ms: Sequence[int], ns: Sequence[int],
                      hw=hw, kernel=get_kernel(kernel_name))
 
 
+def design_speedup(design: DesignPoint, reference: DesignPoint,
+                   m_clusters: int, n_elems: int) -> float:
+    """Speedup of one swept design over another at (M, N).
+
+    The generalized :func:`repro.core.simulator.speedup` with both operands
+    drawn from the design space — e.g. the paper's 47.9% co-design point is
+    ``design_speedup(extended, baseline, 32, 1024)`` with the two published
+    designs, but any Pareto-front pair can be compared the same way.
+    """
+    return sim.speedup(
+        m_clusters, n_elems,
+        base_dispatch=reference.dispatch, base_sync=reference.sync,
+        base_hw=reference.hw, base_kernel=get_kernel(reference.kernel_name),
+        dispatch=design.dispatch, sync=design.sync,
+        hw=design.hw, kernel=get_kernel(design.kernel_name))
+
+
 def run_sweep(
     space: DesignSpace | Iterable[DesignPoint],
     ms: Sequence[int] = DEFAULT_M_GRID,

@@ -20,7 +20,8 @@ import json
 from pathlib import Path
 
 from repro.dse import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignSpace,
-                       deadline_region, front, run_sweep, summarize)
+                       deadline_region, design_speedup, front, run_sweep,
+                       summarize)
 
 
 def _ints(csv: str) -> list[int]:
@@ -102,6 +103,19 @@ def main(argv=None) -> dict:
     for r in fr:
         print(f"  {r.point.name:<44} t_ref {r.t_ref:>7.0f} cy  "
               f"cost {r.cost:.2f}  MAPE {r.mape_pct:.2f}%")
+    if len(fr) > 1:
+        # Pareto extremes head-to-head: what the extra silicon buys at the
+        # reference point (design_speedup works for ANY swept pair, not just
+        # the paper's two published designs).
+        fastest = min(fr, key=lambda r: r.t_ref)
+        cheapest = min(fr, key=lambda r: r.cost)
+        if fastest is not cheapest:
+            sp = design_speedup(fastest.point, cheapest.point,
+                                max(ms), max(ns))
+            print(f"\nfront extremes at (M={max(ms)}, N={max(ns)}): "
+                  f"[{fastest.point.name}] is {sp:.2f}x over "
+                  f"[{cheapest.point.name}] for "
+                  f"{fastest.cost - cheapest.cost:+.2f} cost")
 
     if args.deadline is not None:
         ns_report = sorted({n for n in ns

@@ -83,7 +83,8 @@ def serve_stream(args) -> dict:
     )
     out = serve_workload(spec, arch=args.arch, reduced=args.reduced,
                          execute=not args.no_execute,
-                         max_batch=args.max_batch, fabric=args.fabric)
+                         max_batch=args.max_batch, fabric=args.fabric,
+                         wave_boundary=args.wave_boundary)
 
     if args.verbose:
         for adm in out["admissions"]:
@@ -139,6 +140,10 @@ def main(argv=None):
     ap.add_argument("--slo-fraction", type=float, default=0.7)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--wave-boundary", action="store_true",
+                    help="disable mid-wave admission (legacy iteration-level "
+                         "batching; the A/B baseline for the slot-managed "
+                         "continuous loop)")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the real JAX engine (scheduler machinery only)")
     ap.add_argument("--fabric", choices=("simulated", "wallclock"),

@@ -24,7 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.sync import emit_credits
 from repro.models import ModelConfig, cross_entropy, decode_step as model_decode
-from repro.models import forward, init_cache, init_params, prefill as model_prefill
+from repro.models import (forward, init_cache, init_params, merge_cache_slots,
+                          prefill as model_prefill)
 from repro.optim import (AdamWConfig, adamw_update, clip_by_global_norm,
                          init_opt_state)
 from repro.runtime.sharding import (batch_specs, cache_specs, make_shard_ctx,
@@ -135,9 +136,62 @@ def make_prefill_step(cfg: ModelConfig, mesh, batch_abstract, *,
     )
 
 
+def make_slot_prefill_step(cfg: ModelConfig, mesh, batch_abstract, *,
+                           max_len: int) -> StepBundle:
+    """Prefill newly admitted prompts *into freed slots* of live caches.
+
+    The mid-wave admission path (DESIGN.md §6): ``fn(params, batch,
+    live_caches, slot_mask)`` runs a full-batch prefill of the new prompts —
+    batch rows are independent, so rows of still-running requests compute
+    garbage that is discarded — and merges only the ``slot_mask`` rows into
+    the donated live caches.  Rows of running requests keep their KV state
+    bit-for-bit, which is what makes continuous batching produce the same
+    tokens as the wave-boundary path.
+    """
+    ctx = make_shard_ctx(mesh)
+    some = next(iter(batch_abstract.values()))
+    batch_size = some.shape[0]
+
+    def slot_prefill_step(params, batch, live_caches, slot_mask):
+        fresh = init_cache(cfg, batch_size, max_len=max_len)
+        kw = ({"embeds": batch["embeds"]} if "embeds" in batch
+              else {"tokens": batch["tokens"]})
+        logits, fresh = model_prefill(params, cfg, caches=fresh, ctx=ctx,
+                                      **kw)
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        merged = merge_cache_slots(live_caches, fresh, slot_mask)
+        credits = emit_credits({"last": last}, mesh)
+        return {"next_token": next_tok, "caches": merged, "credits": credits}
+
+    p_abs = _abstract_params(cfg)
+    p_spec = param_specs(p_abs, cfg, mesh)
+    b_spec = batch_specs(batch_abstract, mesh)
+    c_abs = jax.eval_shape(lambda: init_cache(cfg, batch_size,
+                                              max_len=max_len))
+    c_spec = cache_specs(c_abs, cfg, mesh)
+    from repro.runtime.sharding import data_spec_for
+    out_spec = {"next_token": P(data_spec_for(batch_size, mesh)),
+                "caches": c_spec, "credits": P()}
+    mask_abs = jax.ShapeDtypeStruct((batch_size,), jnp.bool_)
+    return StepBundle(
+        fn=slot_prefill_step,
+        in_shardings=to_shardings((p_spec, b_spec, c_spec, P()), mesh),
+        out_shardings=to_shardings(out_spec, mesh),
+        donate_argnums=(2,),   # live caches updated in place
+        abstract_args=(p_abs, batch_abstract, c_abs, mask_abs),
+        meta={"kind": "slot_prefill", "param_spec": p_spec},
+    )
+
+
 def make_decode_step(cfg: ModelConfig, mesh, specs, *,
                      unroll_groups: bool = False) -> StepBundle:
-    """specs: {"tokens": (B,1), "caches": pytree, "cache_len": scalar}."""
+    """specs: {"tokens": (B,1), "caches": pytree, "cache_len": scalar|(B,)}.
+
+    A per-slot ``cache_len`` vector lets each batch row decode at its own
+    sequence offset (continuous batching, DESIGN.md §6); a scalar keeps the
+    legacy batch-wide position (every row at the same offset).
+    """
     ctx = make_shard_ctx(mesh)
 
     def decode_fn(params, tokens, caches, cache_len):

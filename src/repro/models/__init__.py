@@ -3,8 +3,8 @@
 from .config import ModelConfig, scaled_down
 from .layers import NO_SHARD, ShardCtx
 from .model import (cross_entropy, decode_step, forward, init_cache,
-                    init_params, prefill)
+                    init_params, merge_cache_slots, prefill)
 
 __all__ = ["ModelConfig", "scaled_down", "ShardCtx", "NO_SHARD",
            "init_params", "forward", "decode_step", "init_cache",
-           "cross_entropy", "prefill"]
+           "cross_entropy", "merge_cache_slots", "prefill"]

@@ -197,11 +197,17 @@ def decode_attention(
     q: jax.Array,            # (B, 1, H, D) — one new token
     k_cache: jax.Array,      # (B, S, K, D)
     v_cache: jax.Array,      # (B, S, K, D)
-    cache_len: jax.Array,    # scalar int32: #valid positions (incl. new one)
+    cache_len: jax.Array,    # int32 #valid positions (incl. new one);
+    #                          scalar or (B,) per-slot lengths
     *,
     window: int = 0,
 ) -> jax.Array:
-    """Single-token attention over a (possibly windowed) KV cache."""
+    """Single-token attention over a (possibly windowed) KV cache.
+
+    ``cache_len`` may be a per-slot (B,) vector: each batch row masks its own
+    valid prefix, so slots at different sequence positions decode together in
+    one step (continuous batching, DESIGN.md §6).
+    """
     b, _, h, d = q.shape
     skv = k_cache.shape[1]
     kk = repeat_kv(k_cache, h)
@@ -209,10 +215,13 @@ def decode_attention(
     s = jnp.einsum("bqhd,bshd->bhqs", q, kk,
                    preferred_element_type=jnp.float32) / math.sqrt(d)
     pos = jnp.arange(skv)
-    mask = pos < cache_len
+    lens = jnp.asarray(cache_len, jnp.int32)
+    if lens.ndim == 0:
+        lens = jnp.broadcast_to(lens, (b,))
+    mask = pos[None, :] < lens[:, None]                     # (B, S)
     if window:
-        mask &= pos > cache_len - 1 - window
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        mask &= pos[None, :] > lens[:, None] - 1 - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", p.astype(vv.dtype), vv,
                      preferred_element_type=jnp.float32)
@@ -295,7 +304,12 @@ def attention_block(
         if quant:
             new_cache.update({"k_scale": k_scl, "v_scale": v_scl})
     else:
-        idx = cache["len"]
+        # Per-slot decode: ``len`` may be a (B,) vector — each row writes its
+        # new token at its own position and masks its own prefix, so a batch
+        # can mix requests at different sequence offsets (DESIGN.md §6).
+        idx = jnp.asarray(cache["len"], jnp.int32)
+        if idx.ndim == 0:
+            idx = jnp.broadcast_to(idx, (b,))
         slots = cache["k"].shape[1]
         # Flash-decoding layout: for one query token the parallel axis is
         # the CACHE (slots live on the model axis), so replicate the tiny q
@@ -312,8 +326,21 @@ def attention_block(
         # needed (only the not-yet-filled mask while len < slots).
         is_ring = bool(window) and slots <= window
         write = jax.lax.rem(idx, slots) if is_ring else idx
-        k_cache, k_scl = store("k", k, (0, write, 0, 0))
-        v_cache, v_scl = store("v", v, (0, write, 0, 0))
+        rows = jnp.arange(b)
+
+        def store_row(name, val):
+            """Scatter val (B,1,K,D) at per-row positions ``write``."""
+            arr = cache[name]
+            if quant:
+                qv, sc = quantize_kv(val)
+                arr = arr.at[rows, write].set(qv[:, 0])
+                scl = cache[f"{name}_scale"].at[rows, write].set(
+                    sc[:, 0].astype(jnp.float32))
+                return arr, scl
+            return arr.at[rows, write].set(val[:, 0].astype(arr.dtype)), None
+
+        k_cache, k_scl = store_row("k", k)
+        v_cache, v_scl = store_row("v", v)
         k_use = load("k", k_cache, k_scl)
         v_use = load("v", v_cache, v_scl)
         out = decode_attention(q, k_use, v_use, idx + 1,

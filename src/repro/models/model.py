@@ -412,12 +412,44 @@ def decode_step(params, cfg: ModelConfig, tokens, caches, cache_len,
     """One decode step: tokens (B, 1) int32 -> (logits (B,1,V), new caches).
 
     ``cache_len`` is the number of tokens already in the cache; the new
-    token is written at that index (ring-buffered for local layers).
+    token is written at that index (ring-buffered for local layers).  It is
+    either a scalar (every slot at the same position — the wave-boundary
+    path) or a per-slot (B,) vector: each batch row attends over its own
+    valid prefix and takes its own rotary position, which is what lets the
+    serving loop hold requests at different sequence offsets in one batch
+    and admit new requests mid-wave (DESIGN.md §6).
     """
     h = embed_tokens(params, tokens, cfg, ctx)
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(
-        jnp.asarray(cache_len, jnp.int32).reshape(1, 1), (b, 1))
+    lens = jnp.asarray(cache_len, jnp.int32)
+    if lens.ndim == 0:
+        lens = jnp.broadcast_to(lens, (b,))
+    positions = lens[:, None]                       # (B, 1) per-slot position
     h, new_caches = _run_stack(params, h, cfg, ctx, positions=positions,
-                               caches=caches, cache_len=cache_len)
+                               caches=caches, cache_len=lens)
     return logits_from_hidden(params, h, cfg, ctx), new_caches
+
+
+def merge_cache_slots(live, fresh, slot_mask):
+    """Replace the cache rows selected by ``slot_mask`` with ``fresh`` rows.
+
+    The prefill-into-slot path (DESIGN.md §6) runs a full-batch prefill of
+    the newly admitted prompts — batch rows are independent, so the rows of
+    still-running requests in ``fresh`` are garbage — and this merge keeps
+    ``live`` rows wherever ``slot_mask`` is False.  Group caches are stacked
+    ``(full_groups, B, ...)`` (batch axis 1), tail caches are ``(B, ...)``
+    (batch axis 0); see ``init_cache``.
+    """
+    mask = jnp.asarray(slot_mask, bool)
+
+    def merge_group(l, f):
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (l.ndim - 2))
+        return jnp.where(m, f.astype(l.dtype), l)
+
+    def merge_tail(l, f):
+        m = mask.reshape((mask.shape[0],) + (1,) * (l.ndim - 1))
+        return jnp.where(m, f.astype(l.dtype), l)
+
+    return {"groups": jax.tree.map(merge_group, live["groups"],
+                                   fresh["groups"]),
+            "tail": jax.tree.map(merge_tail, live["tail"], fresh["tail"])}

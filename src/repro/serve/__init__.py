@@ -13,9 +13,13 @@ generation requests:
                                     (alpha, beta, gamma) from measured step
                                     timings — the model tracks the live
                                     system, not hardcoded coefficients
-    batcher.ContinuousBatcher    -> waves of prefill + decode jobs, virtual
+    batcher.ContinuousBatcher    -> slot-managed continuous batching with
+                                    per-slot cache lengths and mid-wave
+                                    admission (DESIGN.md §6); virtual
                                     open-loop clock, optional real JAX engine
-    metrics.ServeMetrics         -> throughput / p99 latency / SLO attainment
+    metrics.ServeMetrics         -> throughput / p99 latency / SLO
+                                    attainment / queue delay / occupancy /
+                                    goodput
 
 ``serve_workload`` wires the whole stack together; it is what the
 ``python -m repro.launch.serve`` CLI and the serve_scheduler benchmark call.
@@ -55,12 +59,17 @@ def serve_workload(
     calibrator: OnlineCalibrator | None = None,
     available_m=(1, 2, 4, 8, 16, 32),
     design=None,
+    wave_boundary: bool = False,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
 
     ``execute=False`` skips the real JAX engine (no tokens generated) and
     exercises only the queue/scheduler/calibrator/clock machinery — the
     pure-scheduler benchmark mode.
+
+    ``wave_boundary=True`` disables mid-wave admission (the legacy
+    iteration-level batching: requests join only at wave boundaries) — the
+    A/B baseline for the continuous slot-managed loop (DESIGN.md §6).
 
     ``fabric`` picks the timing source the clock/SLOs/calibrator run on:
     ``"simulated"`` (Manticore cycle model; Eq.-1 coefficients are
@@ -95,8 +104,12 @@ def serve_workload(
             host_model = lambda n: float(_sim.host_runtime(  # noqa: E731
                 n, hw=fabric_src.hw, kernel=fabric_src.kernel))
         else:
+            # The fabric is sized to the configured extent grid: interconnect
+            # parameters scale with the cluster count (simulator.scaled_hw;
+            # identity at the paper's 32-cluster reference).
             fabric_src = SimulatedFabric(jitter_pct=jitter_pct,
-                                         seed=spec.seed)
+                                         seed=spec.seed,
+                                         num_clusters=max(available_m))
             host_model = None  # Manticore host fallback (same cycle domain)
     elif fabric == "wallclock":
         if not execute:
@@ -126,11 +139,12 @@ def serve_workload(
         if fabric == "wallclock":
             # Compile outliers must not enter the measured step times the
             # calibrator fits (see ServingEngine.warmup).
-            engine.warmup(spec.prompt_lens)
+            engine.warmup(spec.prompt_lens, slots=not wave_boundary)
 
     requests = synthetic_workload(spec, with_tokens=execute)
     batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
-                                engine=engine, max_batch=max_batch)
+                                engine=engine, max_batch=max_batch,
+                                wave_boundary=wave_boundary)
     out = batcher.run(requests)
     out["arch"] = arch
     out["spec"] = spec

@@ -1,12 +1,14 @@
 """Continuous batcher: turns the request stream into scheduled offload jobs.
 
-The batcher owns the serving loop.  It forms *waves*: up to ``max_batch``
-admitted requests with the same prompt length (one compiled prefill shape
-per length; unused slots are padded — batch rows are independent, so padding
-never perturbs real outputs).  Each wave is served as
+The batcher owns the serving loop.  Decode state is held in ``max_batch``
+request *slots* with per-slot cache lengths (DESIGN.md §6): every decode job
+steps all occupied slots at once — each at its own sequence offset — and a
+slot freed by a finished request is refilled *mid-wave* from the queue
+through a prefill-into-slot job, so a 1-token straggler no longer serializes
+the fabric while admitted requests sit queued.  Each job is served as
 
     1 prefill job of N = sum(prompt lens)      -> scheduler.plan(..., SLO)
-    + one decode job per generated token step  -> scheduler.plan(N = #active)
+    + one decode job per generated token step  -> scheduler.plan(N = #occupied)
 
 Every job goes through the offload-aware scheduler (Eq. 3 extent under the
 tightest member SLO; host-vs-offload for the tiny decode jobs), its measured
@@ -14,16 +16,23 @@ runtime comes from the fabric timing source, advances the open-loop virtual
 clock, and — when the job was offloaded — feeds the online calibrator, so
 scheduling decisions track the live system.
 
-Requests join at wave boundaries (iteration-level batching).  Mid-wave
-joining would need per-slot cache lengths in the decode step — the model's
-``cache_len`` is a batch-wide scalar (see models/model.py) — which is the
-documented next step for this subsystem, not silently faked here.
+``wave_boundary=True`` keeps the legacy iteration-level batching for A/B
+comparison: requests join only at wave boundaries (the pre-slot behaviour
+this subsystem documented as its next step), which is what the
+``serve_scheduler`` benchmark uses as the baseline.
 
 The real-model engine is optional: ``engine=None`` runs the full
 queue/scheduler/calibrator/clock machinery without touching JAX (used by the
 pure-scheduler benchmarks), while ``ServingEngine`` compiles the repo's
 prefill/decode steps and generates actual tokens, wiring ``DispatchStats``
 and ``CreditCounterSync.timed_wait`` measurements into the metrics.
+
+Calibration accounting note: the engine always executes the full padded
+``max_batch`` rows (batch rows are independent, padding never perturbs real
+outputs), so under a ``WallClockFabric`` the measured step time corresponds
+to the *executed* job size, not the planned one — those samples are fed to
+the calibrator with the executed N (``_executed_n``), never the occupied
+count.
 """
 
 from __future__ import annotations
@@ -52,6 +61,7 @@ class ServingEngine:
         from repro.launch.mesh import make_host_mesh
         from repro.launch.steps import make_decode_step
         from repro.models import init_cache, init_params, scaled_down
+        from repro.runtime.sharding import cache_specs, to_shardings
 
         self._jax, self._jnp = jax, jnp
         cfg = get_config(arch)
@@ -66,16 +76,23 @@ class ServingEngine:
         self.dispatcher = MulticastDispatcher()
         self.sync = CreditCounterSync(self.mesh)
         self._prefill_jit: dict[int, object] = {}   # prompt_len -> jitted fn
+        self._slot_prefill_jit: dict[int, object] = {}
         self._init_cache = init_cache
 
         with self.mesh:
             self.params = init_params(jax.random.key(param_seed), cfg)
             caches_abs = jax.eval_shape(
                 lambda: init_cache(cfg, max_batch, max_len=max_len))
+            c_spec = cache_specs(caches_abs, cfg, self.mesh)
+            self._cache_shardings = to_shardings(c_spec, self.mesh)
+            self._initcache_jit = jax.jit(
+                lambda: init_cache(cfg, max_batch, max_len=max_len),
+                out_shardings=self._cache_shardings)
             dec = make_decode_step(cfg, self.mesh, {
                 "tokens": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32),
                 "caches": caches_abs,
-                "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+                # Per-slot cache lengths: each row decodes at its own offset.
+                "cache_len": jax.ShapeDtypeStruct((max_batch,), jnp.int32),
             })
             self._dec_jit = jax.jit(
                 dec.fn, in_shardings=dec.in_shardings,
@@ -83,6 +100,11 @@ class ServingEngine:
                 donate_argnums=dec.donate_argnums)
             self._tok_sharding = None
             self._params_placed = False
+
+    def _place_params(self, shardings) -> None:
+        if not self._params_placed:
+            self.params = self._jax.device_put(self.params, shardings)
+            self._params_placed = True
 
     def _get_prefill(self, prompt_len: int):
         if prompt_len not in self._prefill_jit:
@@ -92,14 +114,33 @@ class ServingEngine:
                 (self.max_batch, prompt_len), jnp.int32)}
             pre = make_prefill_step(self.cfg, self.mesh, batch_abs,
                                     max_len=self.max_len)
-            if not self._params_placed:
-                self.params = jax.device_put(self.params, pre.in_shardings[0])
-                self._params_placed = True
+            self._place_params(pre.in_shardings[0])
             self._tok_sharding = pre.in_shardings[1]["tokens"]
             self._prefill_jit[prompt_len] = jax.jit(
                 pre.fn, in_shardings=pre.in_shardings,
                 out_shardings=pre.out_shardings)
         return self._prefill_jit[prompt_len]
+
+    def _get_slot_prefill(self, prompt_len: int):
+        if prompt_len not in self._slot_prefill_jit:
+            jax, jnp = self._jax, self._jnp
+            from repro.launch.steps import make_slot_prefill_step
+            batch_abs = {"tokens": jax.ShapeDtypeStruct(
+                (self.max_batch, prompt_len), jnp.int32)}
+            pre = make_slot_prefill_step(self.cfg, self.mesh, batch_abs,
+                                         max_len=self.max_len)
+            self._place_params(pre.in_shardings[0])
+            self._tok_sharding = pre.in_shardings[1]["tokens"]
+            self._slot_prefill_jit[prompt_len] = jax.jit(
+                pre.fn, in_shardings=pre.in_shardings,
+                out_shardings=pre.out_shardings,
+                donate_argnums=pre.donate_argnums)
+        return self._slot_prefill_jit[prompt_len]
+
+    def init_caches(self):
+        """Fresh zeroed decode caches for the slot-managed serving loop."""
+        with self.mesh:
+            return self._initcache_jit()
 
     def prefill(self, tokens: np.ndarray,
                 metrics: ServeMetrics | None = None):
@@ -123,48 +164,83 @@ class ServingEngine:
         return (np.asarray(out["next_token"]), out["caches"],
                 dstats.seconds + wait_s)
 
-    def warmup(self, prompt_lens) -> None:
+    def prefill_into_slots(self, tokens: np.ndarray, caches,
+                           slot_mask: np.ndarray,
+                           metrics: ServeMetrics | None = None):
+        """Prefill the ``slot_mask`` rows of ``tokens`` into live ``caches``.
+
+        The mid-wave admission path (DESIGN.md §6): rows of still-running
+        requests keep their KV state bit-for-bit; returns
+        (next_token (B,), merged caches, wall_s) like :meth:`prefill`.
+        """
+        jnp = self._jnp
+        with self.mesh:
+            fn = self._get_slot_prefill(tokens.shape[1])
+            placed, dstats = self.dispatcher.timed_put(
+                tokens, self._tok_sharding)
+            if metrics is not None:
+                metrics.record_dispatch(dstats)
+            out = fn(self.params, {"tokens": placed}, caches,
+                     jnp.asarray(slot_mask, bool))
+            _, wait_s = self.sync.timed_wait(out["credits"])
+        return (np.asarray(out["next_token"]), out["caches"],
+                dstats.seconds + wait_s)
+
+    def warmup(self, prompt_lens, *, slots: bool = False) -> None:
         """Compile every prompt-length bucket (and the decode step) upfront.
 
         Wall-clock calibration needs this: the first execution of each shape
         includes XLA compilation — an outlier hundreds of times the
         steady-state step time, which would dominate the least-squares fit
         (SSE-optimal on outliers is MAPE-terrible, so the calibrator would
-        keep rejecting refits).
+        keep rejecting refits).  ``slots=True`` warms the prefill-into-slot
+        path (continuous batching) instead of the wave prefill.
         """
         from repro.core.sync import FaultDetected
         for length in sorted(set(prompt_lens)):
             tokens = np.zeros((self.max_batch, length), np.int32)
-            _, caches, _ = self.prefill(tokens)
+            if slots:
+                caches = self.init_caches()
+                mask = np.zeros(self.max_batch, bool)
+                mask[0] = True
+                _, caches, _ = self.prefill_into_slots(tokens, caches, mask)
+            else:
+                _, caches, _ = self.prefill(tokens)
             tok = np.zeros((self.max_batch, 1), np.int32)
             try:
                 self.decode(tok, caches, length)
             except FaultDetected:  # pragma: no cover - warmup is best-effort
                 pass
 
-    def decode(self, tok: np.ndarray, caches, pos: int):
+    def decode(self, tok: np.ndarray, caches, lens):
         """tok (max_batch, 1) int32 -> (next_token (B,), caches, wall_s).
 
+        ``lens`` is the per-slot cache length — an int (every slot at the
+        same position) or a (max_batch,) vector (continuous batching).
         ``wall_s`` is the CreditCounterSync blocking wait on the credit
         scalar — the host-observed completion latency of the step.
         """
         jnp = self._jnp
+        lens = np.asarray(lens, np.int32)
+        if lens.ndim == 0:
+            lens = np.full((self.max_batch,), int(lens), np.int32)
         with self.mesh:
             out = self._dec_jit(self.params, jnp.asarray(tok), caches,
-                                jnp.int32(pos))
+                                jnp.asarray(lens))
             _, wait_s = self.sync.timed_wait(out["credits"])
         return np.asarray(out["next_token"]), out["caches"], wait_s
 
 
 class ContinuousBatcher:
-    """The serving loop: queue -> waves -> scheduled jobs -> results."""
+    """The serving loop: queue -> slots -> scheduled jobs -> results."""
 
     def __init__(self, scheduler: OffloadAwareScheduler,
                  calibrator: OnlineCalibrator, *,
                  fabric: SimulatedFabric | WallClockFabric | None = None,
                  engine: ServingEngine | None = None,
                  max_batch: int | None = None,
-                 metrics: ServeMetrics | None = None):
+                 metrics: ServeMetrics | None = None,
+                 wave_boundary: bool = False):
         self.scheduler = scheduler
         self.calibrator = calibrator
         self.fabric = fabric or SimulatedFabric()
@@ -174,16 +250,21 @@ class ContinuousBatcher:
         if engine is not None and max_batch not in (None, engine.max_batch):
             raise ValueError("max_batch conflicts with engine.max_batch")
         self.metrics = metrics or ServeMetrics()
+        self.wave_boundary = wave_boundary
 
     # ------------------------------------------------------------------ #
-    def _form_wave(self, queue: RequestQueue, clock: float) -> list[Request]:
+    def _form_wave(self, queue: RequestQueue, clock: float,
+                   limit: int | None = None) -> list[Request]:
         """Admit newly-arrived requests; take a same-prompt-length batch.
 
-        Wave growth is deadline-aware: admission guarantees each request is
-        feasible *alone*, but batching sums the job size N, so a candidate
-        is only added while the combined job still fits the tightest member
-        SLO at some configured extent (Eq. 3 on the batch).
+        ``limit`` caps the batch (the number of free slots in continuous
+        mode; the full slot count at a wave boundary).  Growth is
+        deadline-aware: admission guarantees each request is feasible
+        *alone*, but batching sums the job size N, so a candidate is only
+        added while the combined job still fits the tightest member SLO at
+        some configured extent (Eq. 3 on the batch).
         """
+        limit = self.max_batch if limit is None else limit
         wave: list[Request] = []
         wave_n = 0
         wave_deadline: float | None = None
@@ -197,11 +278,11 @@ class ContinuousBatcher:
                 req.t_admitted = clock
                 self.metrics.admitted += 1
             # Same-prompt-length bucketing: one compiled prefill shape per
-            # wave.  Admitted requests of another length (or beyond the slot
-            # count, or breaking the batch deadline) stay queued for a later
-            # wave.
+            # job.  Admitted requests of another length (or beyond the free
+            # slots, or breaking the batch deadline) stay queued for a later
+            # job.
             if wave and (req.prompt_len != wave[0].prompt_len
-                         or len(wave) >= self.max_batch):
+                         or len(wave) >= limit):
                 continue
             cand_n = wave_n + req.n_prompt_elems
             cand_deadline = wave_deadline
@@ -234,10 +315,55 @@ class ContinuousBatcher:
             return self.fabric.offload(plan.m, plan.n_elems)
         return self.fabric.host(plan.n_elems)
 
-    def _account_job(self, plan: BatchPlan, t_cycles: float) -> None:
+    def _executed_n(self, plan: BatchPlan, prompt_len: int | None) -> int:
+        """The job size the engine actually executed (padded batch rows).
+
+        Under a WallClockFabric the measured step time covers the full
+        ``max_batch`` rows regardless of how many slots are occupied, so
+        calibration samples must carry the executed N — otherwise the
+        least-squares window ingests mismatched (N, t) pairs and the fit
+        drifts (the decode-accounting bug this method fixes).
+        """
+        if not isinstance(self.fabric, WallClockFabric):
+            return plan.n_elems        # the fabric simulated exactly plan.n
+        if plan.kind == "prefill":
+            return self.max_batch * int(prompt_len or 1)
+        return self.max_batch
+
+    def _complete_request(self, r: Request, queue: RequestQueue, now: float,
+                          gen_buf: list[int] | None = None) -> None:
+        """Per-request completion accounting, shared by both serving paths."""
+        if self.engine is not None and gen_buf is not None:
+            r.generated = np.asarray(gen_buf, np.int32)
+        queue.finish(r, now)
+        m = self.metrics
+        m.completed += 1
+        m.latency_cycles.add(r.latency())
+        if r.slo_met is not False:
+            m.goodput_completed += 1
+
+    def _record_prefill_member(self, r: Request, t_job: float,
+                               clock: float) -> None:
+        """Per-request prefill accounting (TTFT/SLO/first token), shared by
+        both serving paths."""
+        r.t_first_token = clock
+        m = self.metrics
+        m.ttft_cycles.add(r.ttft())
+        m.tokens_generated += 1
+        if r.slo_cycles is not None:
+            r.slo_met = t_job <= r.slo_cycles
+            if r.slo_met:
+                m.slo_met += 1
+            else:
+                m.slo_missed += 1
+
+    def _account_job(self, plan: BatchPlan, t_cycles: float,
+                     n_exec: int | None = None) -> None:
         """Feed counters and — for offloaded jobs — the online calibrator."""
         if plan.offload:
-            self.calibrator.observe(plan.m, plan.n_elems, t_cycles)
+            self.calibrator.observe(plan.m,
+                                    plan.n_elems if n_exec is None
+                                    else n_exec, t_cycles)
             if plan.kind == "prefill":
                 self.metrics.prefill_jobs += 1
             else:
@@ -255,14 +381,17 @@ class ContinuousBatcher:
         clock = queue.next_arrival() or 0.0
         m.t_start = clock
 
-        while not queue.empty:
-            if not queue.arrived(clock):
-                clock = queue.next_arrival()
-            wave = self._form_wave(queue, clock)
-            if not wave:
-                continue  # everything that had arrived was rejected
-            m.waves += 1
-            clock = self._serve_wave(wave, queue, clock)
+        if self.wave_boundary:
+            while not queue.empty:
+                if not queue.arrived(clock):
+                    clock = queue.next_arrival()
+                wave = self._form_wave(queue, clock)
+                if not wave:
+                    continue  # everything that had arrived was rejected
+                m.waves += 1
+                clock = self._serve_wave(wave, queue, clock)
+        else:
+            clock = self._run_continuous(queue, clock)
 
         m.t_end = clock
         return {
@@ -275,12 +404,127 @@ class ContinuousBatcher:
         }
 
     # ------------------------------------------------------------------ #
+    # Continuous (slot-managed) serving loop — DESIGN.md §6
+    # ------------------------------------------------------------------ #
+    def _run_continuous(self, queue: RequestQueue, clock: float) -> float:
+        m = self.metrics
+        nb = self.max_batch
+        slots: list[Request | None] = [None] * nb
+        emitted = [0] * nb                     # tokens produced per slot
+        gen_buf: list[list[int]] = [[] for _ in range(nb)]
+        lens = np.zeros(nb, np.int32)          # per-slot cache lengths
+        tok = np.zeros((nb, 1), np.int32)      # per-slot last token
+        caches = self.engine.init_caches() if self.engine is not None else None
+
+        def occupied() -> list[int]:
+            return [i for i in range(nb) if slots[i] is not None]
+
+        def finish(i: int, now: float) -> None:
+            self._complete_request(slots[i], queue, now, gen_buf[i])
+            slots[i] = None
+
+        while True:
+            free = [i for i in range(nb) if slots[i] is None]
+            occ_before = len(occupied())
+            if free and queue.arrived(clock):
+                batch = self._form_wave(queue, clock, limit=len(free))
+                if batch:
+                    m.waves += 1
+                    if occ_before:
+                        m.mid_wave_admissions += len(batch)
+                    clock, caches = self._prefill_slots(
+                        batch, free[:len(batch)], slots, emitted, gen_buf,
+                        lens, tok, clock, caches)
+                    for i in free[:len(batch)]:
+                        if slots[i] is not None and \
+                                emitted[i] >= slots[i].gen_len:
+                            finish(i, clock)
+                    continue   # re-check arrivals before the next decode
+            occ = occupied()
+            if not occ:
+                if queue.empty:
+                    return clock
+                nxt = queue.next_arrival()
+                if nxt is None:  # pragma: no cover - defensive
+                    return clock
+                clock = max(clock, nxt)
+                continue
+
+            # One decode step over every occupied slot (per-slot lengths).
+            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode")
+            wall = None
+            if self.engine is not None:
+                next_tok, caches, wall = self.engine.decode(tok, caches, lens)
+                self.metrics.step_wall_s.add(wall)
+            t_dec = self._job_runtime(plan, wall)
+            self._account_job(plan, t_dec, self._executed_n(plan, None))
+            m.slot_occupancy.add(len(occ) / nb)
+            clock += t_dec
+            for i in occ:
+                lens[i] += 1
+                emitted[i] += 1
+                m.tokens_generated += 1
+                if self.engine is not None:
+                    tok[i, 0] = next_tok[i]
+                    gen_buf[i].append(int(next_tok[i]))
+                if emitted[i] >= slots[i].gen_len:
+                    finish(i, clock)
+
+    def _prefill_slots(self, batch: list[Request], take: list[int],
+                       slots, emitted, gen_buf, lens, tok,
+                       clock: float, caches):
+        """One prefill job placing ``batch`` into the free ``take`` slots.
+
+        Returns ``(clock, caches)`` — the advanced virtual clock and the
+        (merged) live caches.
+        """
+        m = self.metrics
+        prompt_len = batch[0].prompt_len
+        n_job = sum(r.n_prompt_elems for r in batch)
+        slos = [r.slo_cycles for r in batch if r.slo_cycles is not None]
+        deadline = min(slos) if slos else None
+        for r in batch:
+            m.queue_delay_cycles.add(clock - r.arrival)
+
+        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
+        wall = None
+        next_tok = None
+        if self.engine is not None:
+            tokens = np.zeros((self.max_batch, prompt_len), np.int32)
+            mask = np.zeros(self.max_batch, bool)
+            for slot, r in zip(take, batch):
+                tokens[slot] = r.tokens
+                mask[slot] = True
+            next_tok, caches, wall = self.engine.prefill_into_slots(
+                tokens, caches, mask, m)
+            m.step_wall_s.add(wall)
+        t_job = self._job_runtime(plan, wall)
+        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
+        clock += t_job
+
+        for slot, r in zip(take, batch):
+            slots[slot] = r
+            emitted[slot] = 1          # the prefill emits the first token
+            gen_buf[slot] = []
+            lens[slot] = r.prompt_len
+            self._record_prefill_member(r, t_job, clock)
+            if next_tok is not None:
+                tok[slot, 0] = next_tok[slot]
+                gen_buf[slot].append(int(next_tok[slot]))
+        return clock, caches
+
+    # ------------------------------------------------------------------ #
+    # Legacy wave-boundary path (A/B baseline; --wave-boundary)
+    # ------------------------------------------------------------------ #
     def _serve_wave(self, wave: list[Request], queue: RequestQueue,
                     clock: float) -> float:
         prompt_len = wave[0].prompt_len
         n_job = sum(r.n_prompt_elems for r in wave)
         slos = [r.slo_cycles for r in wave if r.slo_cycles is not None]
         deadline = min(slos) if slos else None
+        m = self.metrics
+        for r in wave:
+            m.queue_delay_cycles.add(clock - r.arrival)
 
         # --- prefill: one offload job for the whole wave ----------------
         plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
@@ -294,19 +538,12 @@ class ContinuousBatcher:
             next_tok, caches, wall = self.engine.prefill(tokens, self.metrics)
             self.metrics.step_wall_s.add(wall)
         t_job = self._job_runtime(plan, wall)
-        self._account_job(plan, t_job)
+        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
         clock += t_job
 
         gen_buf: list[list[int]] = [[] for _ in wave]
         for slot, r in enumerate(wave):
-            r.t_first_token = clock
-            self.metrics.ttft_cycles.add(r.ttft())
-            if r.slo_cycles is not None:
-                r.slo_met = t_job <= r.slo_cycles
-                if r.slo_met:
-                    self.metrics.slo_met += 1
-                else:
-                    self.metrics.slo_missed += 1
+            self._record_prefill_member(r, t_job, clock)
             if next_tok is not None:
                 gen_buf[slot].append(int(next_tok[slot]))
 
@@ -328,19 +565,17 @@ class ContinuousBatcher:
                 self.metrics.step_wall_s.add(wall)
                 tok = next_tok[:, None].astype(np.int32)
             t_dec = self._job_runtime(plan_d, wall)
-            self._account_job(plan_d, t_dec)
+            self._account_job(plan_d, t_dec, self._executed_n(plan_d, None))
+            m.slot_occupancy.add(len(active) / self.max_batch)
             clock += t_dec
             for slot, r in enumerate(wave):
                 if r.gen_len > step + 1:
+                    m.tokens_generated += 1
                     if self.engine is not None:
                         gen_buf[slot].append(int(next_tok[slot]))
                     if r.gen_len == step + 2:
                         done_at[r.rid] = clock
 
         for slot, r in enumerate(wave):
-            if self.engine is not None:
-                r.generated = np.asarray(gen_buf[slot], np.int32)
-            queue.finish(r, done_at[r.rid])
-            self.metrics.completed += 1
-            self.metrics.latency_cycles.add(r.latency())
+            self._complete_request(r, queue, done_at[r.rid], gen_buf[slot])
         return clock

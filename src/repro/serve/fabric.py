@@ -34,7 +34,12 @@ class SimulatedFabric:
     def __init__(self, *, hw: sim.HWParams = sim.HWParams(),
                  kernel: sim.KernelSpec = sim.DAXPY, multicast: bool = True,
                  dispatch: str | None = None, sync: str | None = None,
-                 jitter_pct: float = 1.0, seed: int = 0):
+                 jitter_pct: float = 1.0, seed: int = 0,
+                 num_clusters: int | None = None):
+        # Fabric-size experiments: scale the interconnect parameters to a
+        # fabric of ``num_clusters`` clusters (identity at the paper's 32).
+        if num_clusters is not None:
+            hw = sim.scaled_hw(num_clusters, hw)
         self.hw = hw
         self.kernel = kernel
         # dispatch/sync (the DSE axes, DESIGN.md §3) take precedence over the

@@ -42,6 +42,10 @@ class Recorder:
     def total(self) -> float:
         return float(np.sum(self._xs)) if self._xs else 0.0
 
+    def series(self) -> list[float]:
+        """The raw samples in recording order (one point per event)."""
+        return list(self._xs)
+
 
 @dataclass
 class ServeMetrics:
@@ -56,10 +60,18 @@ class ServeMetrics:
     host_jobs: int = 0           # jobs the scheduler kept on the host
     slo_met: int = 0
     slo_missed: int = 0
+    # Continuous-batching counters (DESIGN.md §6).
+    mid_wave_admissions: int = 0  # requests admitted while others ran
+    tokens_generated: int = 0
+    goodput_completed: int = 0    # completed with SLO met (or no SLO)
     # Fabric-cycle recorders.
     latency_cycles: Recorder = field(default_factory=Recorder)
     ttft_cycles: Recorder = field(default_factory=Recorder)
     job_cycles: Recorder = field(default_factory=Recorder)
+    # Continuous-batching series: queue delay per request (arrival ->
+    # prefill start, cycles) and occupied-slot fraction per decode job.
+    queue_delay_cycles: Recorder = field(default_factory=Recorder)
+    slot_occupancy: Recorder = field(default_factory=Recorder)
     # Wall-clock recorders (engine-attached runs only).
     step_wall_s: Recorder = field(default_factory=Recorder)
     dispatch_wall_s: Recorder = field(default_factory=Recorder)
@@ -92,6 +104,9 @@ class ServeMetrics:
                      "decode": self.decode_jobs,
                      "host": self.host_jobs},
             "throughput_rps": self.completed / span_s,
+            "goodput_rps": self.goodput_completed / span_s,
+            "tokens_per_s": self.tokens_generated / span_s,
+            "mid_wave_admissions": self.mid_wave_admissions,
             "latency_us": {
                 "p50": _us(self.latency_cycles.percentile(50)),
                 "p99": _us(self.latency_cycles.percentile(99)),
@@ -99,6 +114,14 @@ class ServeMetrics:
             "ttft_us": {
                 "p50": _us(self.ttft_cycles.percentile(50)),
                 "p99": _us(self.ttft_cycles.percentile(99)),
+            },
+            "queue_delay_us": {
+                "p50": _us(self.queue_delay_cycles.percentile(50)),
+                "p99": _us(self.queue_delay_cycles.percentile(99)),
+            },
+            "slot_occupancy": {
+                "mean": self.slot_occupancy.mean(),
+                "p50": self.slot_occupancy.percentile(50),
             },
             "slo_attainment": (self.slo_met / slo_total
                                if slo_total else None),
@@ -120,11 +143,19 @@ class ServeMetrics:
             f"jobs: {s['jobs']['prefill']} prefill + {s['jobs']['decode']} "
             f"decode offloads, {s['jobs']['host']} kept on host "
             f"({s['waves']} waves)",
-            f"throughput: {s['throughput_rps']:.0f} req/s (virtual fabric)",
+            f"throughput: {s['throughput_rps']:.0f} req/s (virtual fabric), "
+            f"goodput {s['goodput_rps']:.0f} req/s, "
+            f"{s['tokens_per_s']:.0f} tok/s",
             f"latency: p50 {_fmt(s['latency_us']['p50'])} us, "
             f"p99 {_fmt(s['latency_us']['p99'])} us; "
-            f"ttft p99 {_fmt(s['ttft_us']['p99'])} us",
+            f"ttft p99 {_fmt(s['ttft_us']['p99'])} us; "
+            f"queue delay p99 {_fmt(s['queue_delay_us']['p99'])} us",
         ]
+        if len(self.slot_occupancy):
+            lines.append(
+                f"slots: mean occupancy "
+                f"{100 * s['slot_occupancy']['mean']:.0f}%, "
+                f"{s['mid_wave_admissions']} mid-wave admissions")
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
                          f"({self.slo_met}/{self.slo_met + self.slo_missed})")

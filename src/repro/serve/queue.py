@@ -87,8 +87,18 @@ class RequestQueue:
         return self._waiting[0].arrival if self._waiting else None
 
     def arrived(self, now: float) -> list[Request]:
-        """Requests that have arrived by virtual time ``now`` (not popped)."""
-        return [r for r in self._waiting if r.arrival <= now]
+        """Requests that have arrived by virtual time ``now`` (not popped).
+
+        The waiting list is arrival-sorted, so the arrived set is a prefix —
+        the scan stops at the first future arrival (the continuous loop
+        calls this between every decode step, DESIGN.md §6).
+        """
+        out = []
+        for r in self._waiting:
+            if r.arrival > now:
+                break
+            out.append(r)
+        return out
 
     def pop(self, req: Request) -> Request:
         self._waiting.remove(req)

@@ -19,6 +19,13 @@ REPO = Path(__file__).resolve().parent.parent
 SRC = REPO / "src"
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (subprocess compile / end-to-end engine); "
+        "the fast CI tier deselects these with -m 'not slow'")
+
+
 def run_py(code: str, *, devices: int | None = None, timeout: int = 600,
            env_extra: dict | None = None) -> subprocess.CompletedProcess:
     """Run a python snippet in a fresh process (optionally with N fake devices)."""

@@ -1,0 +1,129 @@
+"""Minimal stand-in for the hypothesis API used by this repo's tests.
+
+The CI image installs hypothesis (requirements-dev.txt) and the property
+tests use the real library there.  Containers without it used to skip three
+whole tier-1 modules; instead they now fall back to this shim: seeded random
+sampling over the same strategy bounds, with ``assume`` support.  It is NOT
+hypothesis — no shrinking, no coverage-guided generation, no database — but
+it executes every property at ``max_examples`` deterministic samples, which
+keeps the assertions exercised everywhere.
+
+Only the API surface the tests use is implemented: ``given`` (keyword
+strategies), ``settings(max_examples=, deadline=)``, ``assume``, and the
+``integers`` / ``floats`` / ``lists`` / ``tuples`` / ``sampled_from``
+strategies.  Import it as::
+
+    try:
+        from hypothesis import assume, given, settings, strategies as st
+    except ImportError:
+        from proptest_fallback import assume, given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+               allow_infinity: bool = True) -> _Strategy:
+        del allow_nan, allow_infinity  # bounded draws are always finite
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 16) -> _Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.integers(len(options))])
+
+
+class settings:
+    """Decorator recording example-count overrides for ``given``."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(**strategy_kwargs):
+    """Run the test at N seeded samples of the keyword strategies."""
+
+    def decorate(fn):
+        # NOT functools.wraps: pytest would follow __wrapped__ and treat the
+        # strategy parameters as fixtures.  The runner presents a bare
+        # zero-argument signature; given() supplies every parameter itself.
+        def runner(*args, **kwargs):
+            # Read the settings lazily so @settings works above OR below
+            # @given (real hypothesis accepts both orders).
+            max_examples = getattr(
+                runner, "_fallback_settings",
+                getattr(fn, "_fallback_settings", settings())).max_examples
+            # Deterministic per test: the seed is derived from the test name.
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(max_examples * 10):
+                if ran >= max_examples:
+                    break
+                drawn = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"{fn.__name__}: assume() rejected every generated "
+                    "example — loosen the strategy bounds")
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return decorate

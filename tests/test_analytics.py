@@ -31,6 +31,7 @@ def analytic_flops(cfg, b, s):
                 d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=4,
                 head_dim=32, gated_mlp=False, act="gelu", dtype="float32"),
 ])
+@pytest.mark.slow
 def test_analytic_matches_compiled_dense(cfg):
     b, s = 2, 256
     got = analytic_flops(cfg, b, s)
@@ -40,6 +41,7 @@ def test_analytic_matches_compiled_dense(cfg):
     assert got == pytest.approx(want, rel=0.20), (got, want)
 
 
+@pytest.mark.slow
 def test_analytic_matches_compiled_mamba():
     cfg = ModelConfig(name="m-v", family="ssm", num_layers=4, d_model=128,
                       d_ff=0, vocab_size=256, pattern=("mamba",),
@@ -51,6 +53,7 @@ def test_analytic_matches_compiled_mamba():
     assert got == pytest.approx(want, rel=0.30), (got, want)
 
 
+@pytest.mark.slow
 def test_scan_undercounts_vs_unrolled():
     """The reason analytics exists: scanned compile reports ~1/groups of the
     unrolled FLOPs."""

@@ -50,6 +50,7 @@ def test_moe_extras(configs):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_reduced_config(arch, configs):
     cfg = scaled_down(configs[arch])
     params = init_params(jax.random.key(0), cfg)

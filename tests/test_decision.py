@@ -2,9 +2,10 @@
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import assume, given, settings, strategies as st
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ImportError:  # no hypothesis: seeded-sampling shim, not a skip
+    from proptest_fallback import assume, given, settings, strategies as st
 
 from repro.core import decision as dec
 from repro.core import simulator as sim

@@ -13,6 +13,7 @@ def _check(r):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_dispatchers_produce_identical_arrays(run_py=None):
     from conftest import run_py
     out = _check(run_py("""
@@ -37,6 +38,7 @@ print("OK calls=", calls)
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_credit_counter_counts_all_devices():
     from conftest import run_py
     out = _check(run_py("""
@@ -86,6 +88,7 @@ def test_credit_counter_single_device_degenerate():
     assert sync.wait(credits) == 1
 
 
+@pytest.mark.slow
 def test_multicast_fewer_host_calls_than_sequential():
     from conftest import run_py
     out = _check(run_py("""

@@ -3,6 +3,8 @@ byte rules) and an end-to-end miniature dry-run on 8 virtual devices."""
 
 import textwrap
 
+import pytest
+
 from repro.launch.dryrun import _shape_bytes, parse_collectives
 
 
@@ -62,6 +64,7 @@ def test_parse_collectives_trip_counts_and_bytes():
     assert ar["effective_bytes"] == int(2 * 256 * 1 / 2)
 
 
+@pytest.mark.slow
 def test_miniature_dryrun_cell_end_to_end():
     """Run the real dry-run path (steps + shardings + compile + analysis)
     on a 4x2 mesh with a reduced config, in a subprocess."""
@@ -98,6 +101,7 @@ print("OK", sorted(k for k, v in colls["per_device_bytes_by_kind"].items()
     assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_decode_bundle_compiles_with_kv_quant():
     from conftest import run_py
     r = run_py("""

@@ -168,6 +168,7 @@ def test_sweep_breakeven_improves_with_codesign(paper_sweep):
     assert ext.breakeven_n < base.breakeven_n
 
 
+@pytest.mark.slow
 def test_parallel_sweep_matches_serial(paper_sweep):
     parallel = run_sweep(PAPER_SPACE, workers=2)
     assert [r.as_dict() for r in parallel] == [r.as_dict()
@@ -383,3 +384,33 @@ def test_checker_flags_missing_file_and_section(tmp_path):
     assert len(errors) == 2
     assert any("no §9 heading" in e for e in errors)
     assert any("GHOST.md which does not exist" in e for e in errors)
+
+
+# --------------------------------------------------------------------------- #
+# design_speedup: simulator.speedup generalized to any swept pair
+# --------------------------------------------------------------------------- #
+def test_design_speedup_reproduces_paper_pair():
+    from repro.dse import design_speedup
+    base = DesignPoint(dispatch="unicast", sync="poll")
+    ext = DesignPoint(dispatch="multicast", sync="credit")
+    assert design_speedup(ext, base, 32, 1024) == pytest.approx(
+        sim.speedup(32, 1024))
+    # Swapping the operands inverts the ratio.
+    assert design_speedup(base, ext, 32, 1024) == pytest.approx(
+        1.0 / sim.speedup(32, 1024))
+
+
+def test_design_speedup_arbitrary_swept_pair():
+    """A pair the legacy two-design speedup() could not express."""
+    from repro.dse import design_speedup
+    ext = DesignPoint(dispatch="multicast", sync="credit")
+    wide = DesignPoint(dispatch="multicast", sync="credit",
+                       hw=sim.HWParams(bus_bytes_per_cycle=192))
+    sp = design_speedup(wide, ext, 32, 8192)
+    # Doubling the operand bus attacks the serial beta term: a real win at
+    # large N, and exactly the ratio of the two simulated runtimes.
+    assert sp > 1.0
+    t_ext = sim.offload_runtime(32, 8192, dispatch="multicast", sync="credit")
+    t_wide = sim.offload_runtime(32, 8192, dispatch="multicast",
+                                 sync="credit", hw=wide.hw)
+    assert sp == pytest.approx(t_ext / t_wide)

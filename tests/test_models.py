@@ -77,6 +77,7 @@ def test_ssd_chunked_matches_recurrence(chunk):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_init_state_continuation():
     """Processing [part1; part2] == processing part2 with part1's state."""
     b, t, h, p, n = 1, 16, 2, 4, 3
@@ -116,12 +117,14 @@ def _parity(cfg, *, s=12, atol=2e-3):
                                rtol=1e-3, atol=atol)
 
 
+@pytest.mark.slow
 def test_parity_dense_gqa():
     _parity(ModelConfig(name="d", family="dense", num_layers=3, d_model=32,
                         d_ff=64, vocab_size=61, num_heads=4, num_kv_heads=2,
                         head_dim=8, dtype="float32"))
 
 
+@pytest.mark.slow
 def test_parity_local_global_ring_buffer():
     # window = 4 < seq: exercises the ring-buffer decode path.
     _parity(ModelConfig(name="lg", family="dense", num_layers=4, d_model=32,
@@ -130,12 +133,14 @@ def test_parity_local_global_ring_buffer():
                         sliding_window=4, dtype="float32"))
 
 
+@pytest.mark.slow
 def test_parity_half_rope():
     _parity(ModelConfig(name="hr", family="dense", num_layers=2, d_model=32,
                         d_ff=64, vocab_size=61, num_heads=4, num_kv_heads=2,
                         head_dim=8, rope_variant="half", dtype="float32"))
 
 
+@pytest.mark.slow
 def test_parity_mamba():
     _parity(ModelConfig(name="m", family="ssm", num_layers=3, d_model=32,
                         d_ff=0, vocab_size=61, pattern=("mamba",),
@@ -143,6 +148,7 @@ def test_parity_mamba():
                         dtype="float32"), atol=5e-3)
 
 
+@pytest.mark.slow
 def test_parity_hybrid_shared_block():
     _parity(ModelConfig(name="h", family="hybrid", num_layers=6, d_model=32,
                         d_ff=64, vocab_size=61, num_heads=4, num_kv_heads=4,
@@ -285,3 +291,63 @@ def test_kv_quant_roundtrip_accuracy():
     back = L.dequantize_kv(q, s, jnp.float32)
     np.testing.assert_allclose(np.asarray(back), np.asarray(x),
                                atol=float(np.abs(x).max()) / 100)
+
+
+# --------------------------------------------------------------------------- #
+# Per-slot decode state (continuous batching, DESIGN.md §6)
+# --------------------------------------------------------------------------- #
+def test_decode_attention_per_slot_lengths_match_scalar_rows():
+    """A (B,) cache_len vector must give each row exactly the result of a
+    scalar-length call on that row alone."""
+    rng = jax.random.key(7)
+    kq, kk, kv = jax.random.split(rng, 3)
+    b, skv, h, kvh, d = 3, 16, 4, 2, 8
+    q = jax.random.normal(kq, (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, skv, kvh, d), jnp.float32)
+    v = jax.random.normal(kv, (b, skv, kvh, d), jnp.float32)
+    lens = [5, 9, 16]
+    for window in (0, 6):
+        out = L.decode_attention(q, k, v, jnp.asarray(lens, jnp.int32),
+                                 window=window)
+        for i, ln in enumerate(lens):
+            ref = L.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                     jnp.int32(ln), window=window)
+            np.testing.assert_array_equal(np.asarray(out[i]),
+                                          np.asarray(ref[0]))
+
+
+def test_decode_step_vector_lens_match_scalar():
+    """All-equal vector cache_len must reproduce the scalar path exactly."""
+    from repro.configs import get_config
+    from repro.models import prefill, scaled_down
+
+    cfg = scaled_down(get_config("chatglm3-6b"))
+    params = init_params(jax.random.key(0), cfg)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 6),
+                                          np.int64).astype(np.int32))
+    caches = init_cache(cfg, 2, max_len=12)
+    _, caches = prefill(params, cfg, caches=caches, tokens=tokens)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    lg_s, c_s = decode_step(params, cfg, tok, caches, jnp.int32(6))
+    lg_v, c_v = decode_step(params, cfg, tok, caches,
+                            jnp.asarray([6, 6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    jax.tree.map(lambda a, b2: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b2)), c_s, c_v)
+
+
+def test_merge_cache_slots_selects_rows_by_mask():
+    from repro.models import merge_cache_slots
+
+    live = {"groups": ({"k": jnp.zeros((2, 3, 4, 5))},),   # (G, B, ...)
+            "tail": ({"k": jnp.zeros((3, 4))},)}           # (B, ...)
+    fresh = {"groups": ({"k": jnp.ones((2, 3, 4, 5))},),
+             "tail": ({"k": jnp.ones((3, 4))},)}
+    mask = jnp.asarray([True, False, True])
+    merged = merge_cache_slots(live, fresh, mask)
+    g = np.asarray(merged["groups"][0]["k"])
+    t = np.asarray(merged["tail"][0]["k"])
+    assert (g[:, 0] == 1).all() and (g[:, 2] == 1).all()
+    assert (g[:, 1] == 0).all()
+    assert (t[0] == 1).all() and (t[2] == 1).all() and (t[1] == 0).all()

@@ -101,3 +101,68 @@ def test_amdahl_serial_fraction_grows_with_m():
     fr = [pm.serial_fraction(m, 1024) for m in sim.PAPER_M_GRID]
     assert all(a < b for a, b in zip(fr, fr[1:]))
     assert fr[-1] > 0.9  # at M=32 the job is overhead/serial dominated
+
+
+# --------------------------------------------------------------------------- #
+# Generalized speedup (any design pair) + fabric-size scaling
+# --------------------------------------------------------------------------- #
+def test_speedup_defaults_match_legacy_two_design_comparison():
+    legacy = sim.speedup(32, 1024)
+    explicit = sim.speedup(32, 1024, base_dispatch="unicast",
+                           base_sync="poll", dispatch="multicast",
+                           sync="credit")
+    assert explicit == legacy
+
+
+def test_speedup_same_design_both_operands_is_one():
+    for dispatch, sync in (("unicast", "poll"), ("multicast", "credit"),
+                           ("unicast", "credit"), ("multicast", "poll")):
+        assert sim.speedup(16, 2048, base_dispatch=dispatch, base_sync=sync,
+                           dispatch=dispatch, sync=sync) == 1.0
+
+
+def test_speedup_accepts_per_operand_hw_and_kernel():
+    # A DSE pair the legacy signature could not express: credit-sync on a
+    # doubled bus vs the plain polling design on stock hardware.
+    wide = sim.HWParams(bus_bytes_per_cycle=192)
+    sp = sim.speedup(8, 4096, base_dispatch="unicast", base_sync="poll",
+                     base_hw=sim.HWParams(), dispatch="unicast",
+                     sync="credit", hw=wide)
+    t_base = sim.offload_runtime(8, 4096, dispatch="unicast", sync="poll")
+    t_new = sim.offload_runtime(8, 4096, dispatch="unicast", sync="credit",
+                                hw=wide)
+    assert sp == pytest.approx(t_base / t_new)
+    assert sp > 1.0
+
+
+def test_scaled_hw_identity_at_published_fabric():
+    assert sim.scaled_hw(sim.REFERENCE_CLUSTERS) == sim.HWParams()
+
+
+def test_scaled_hw_is_a_real_scaling_not_a_noop():
+    small = sim.scaled_hw(8)
+    ref = sim.scaled_hw(32)
+    big = sim.scaled_hw(128)
+    # Interconnect latencies grow with tree depth (fabric size).
+    assert small.tx_multicast < ref.tx_multicast < big.tx_multicast
+    assert small.cluster_wakeup < ref.cluster_wakeup < big.cluster_wakeup
+    assert (small.credit_irq_latency < ref.credit_irq_latency
+            < big.credit_irq_latency)
+    # Banked bus bandwidth grows sub-linearly: per-cluster bandwidth shrinks.
+    assert (small.bus_bytes_per_cycle < ref.bus_bytes_per_cycle
+            < big.bus_bytes_per_cycle)
+    assert (big.bus_bytes_per_cycle / 128
+            < ref.bus_bytes_per_cycle / 32
+            < small.bus_bytes_per_cycle / 8)
+    # Per-cluster parameters are size-invariant.
+    assert big.cores_per_cluster == ref.cores_per_cluster
+    assert big.tx_unicast == ref.tx_unicast
+    # And simulated runtimes actually move (the old identity hook did not).
+    t_ref = sim.offload_runtime(32, 4096, multicast=True)
+    t_big = sim.offload_runtime(32, 4096, multicast=True, hw=big)
+    assert t_big != t_ref
+
+
+def test_scaled_hw_rejects_empty_fabric():
+    with pytest.raises(ValueError):
+        sim.scaled_hw(0)

@@ -3,9 +3,10 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hypothesis: seeded-sampling shim, not a skip
+    from proptest_fallback import given, settings, strategies as st
 
 from repro.core import runtime_model as rm
 from repro.core import simulator as sim
@@ -81,3 +82,24 @@ def test_baseline_model_mape_below_one_percent():
                for m in sim.PAPER_M_GRID for n in sim.PAPER_N_GRID_MODEL]
     errs = [abs(t - float(model.predict(m, n))) / t for m, n, t in samples]
     assert 100 * float(np.mean(errs)) < 1.0
+
+
+# --------------------------------------------------------------------------- #
+# MAPE guard: non-positive runtimes are skipped, never divided by
+# --------------------------------------------------------------------------- #
+@given(m=m_s, n=n_s,
+       t_bad=st.floats(min_value=-1e6, max_value=0.0, allow_nan=False))
+@settings(max_examples=50)
+def test_mape_skips_nonpositive_samples(m, n, t_bad):
+    """A zero/negative-runtime sample (clock glitch) must not change the
+    MAPE — it used to raise ZeroDivisionError on t == 0."""
+    model = rm.OffloadModel(100.0, 0.5, 0.3)
+    good = [(mm, nn, float(model.predict(mm, nn)) * 1.01)
+            for mm in (1, 2) for nn in (64, 128)]
+    assert rm.mape(model, good + [(m, n, float(t_bad))]) == pytest.approx(
+        rm.mape(model, good))
+
+
+def test_mape_all_nonpositive_raises():
+    with pytest.raises(ValueError, match="positive"):
+        rm.mape(rm.PAPER_MODEL, [(1, 64, 0.0), (2, 128, -5.0)])

@@ -196,6 +196,7 @@ def test_batcher_respects_wave_deadline_feasibility():
 # --------------------------------------------------------------------------- #
 # End-to-end (real engine): batcher preserves per-request outputs
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_batcher_matches_one_shot_serve():
     import jax
     from repro.configs import get_config
@@ -226,3 +227,166 @@ def test_batcher_matches_one_shot_serve():
     assert out["metrics"].waves == 1  # both fit one wave: same batching
     got = np.stack([r.generated for r in out["requests"]])
     np.testing.assert_array_equal(got, one_shot["generated"])
+
+
+# --------------------------------------------------------------------------- #
+# Continuous batching (per-slot lengths + mid-wave admission) — DESIGN.md §6
+# --------------------------------------------------------------------------- #
+STRAGGLER_SPEC = WorkloadSpec(num_requests=256, rate_rps=2e6,
+                              gen_lens=(4, 16, 64), seed=7)
+
+
+def test_midwave_admission_beats_wave_boundary_on_same_trace():
+    """The acceptance A/B: same Poisson trace, higher rps + no worse p99."""
+    wave = serve_workload(STRAGGLER_SPEC, execute=False, wave_boundary=True)
+    cont = serve_workload(STRAGGLER_SPEC, execute=False)
+    ws, cs = wave["metrics"].summary(), cont["metrics"].summary()
+    assert cs["throughput_rps"] > ws["throughput_rps"]
+    assert cs["latency_us"]["p99"] <= ws["latency_us"]["p99"]
+    # The win comes from actually refilling slots mid-wave.
+    assert cs["mid_wave_admissions"] > 0
+    assert ws["mid_wave_admissions"] == 0
+    assert cs["slot_occupancy"]["mean"] > ws["slot_occupancy"]["mean"]
+    # Same trace, same admission decisions, same completion set.
+    def outcome(out):
+        return {r.rid: r.reject_reason is not None for r in out["requests"]}
+    assert outcome(wave) == outcome(cont)
+    assert ws["completed"] == cs["completed"]
+
+
+def test_continuous_metrics_series_and_goodput():
+    out = serve_workload(WorkloadSpec(num_requests=64, seed=11),
+                         execute=False)
+    m = out["metrics"]
+    # One queue-delay sample per served request; delays are non-negative.
+    assert len(m.queue_delay_cycles) == m.completed
+    assert all(x >= 0 for x in m.queue_delay_cycles.series())
+    # Occupancy is a per-decode-job series in (0, 1].
+    assert len(m.slot_occupancy) > 0
+    assert all(0 < x <= 1 for x in m.slot_occupancy.series())
+    # Every completed request emitted exactly gen_len tokens.
+    done = [r for r in out["requests"] if r.t_done is not None]
+    assert m.tokens_generated == sum(r.gen_len for r in done)
+    # Goodput counts completions that met their SLO or carried none.
+    expect_good = sum(1 for r in done if r.slo_met is not False)
+    assert m.goodput_completed == expect_good <= m.completed
+    s = m.summary()
+    assert s["goodput_rps"] <= s["throughput_rps"]
+
+
+def test_wave_boundary_flag_reproduces_legacy_wave_metrics():
+    out = serve_workload(WorkloadSpec(num_requests=80, seed=11),
+                         execute=False, wave_boundary=True)
+    m = out["metrics"]
+    assert m.completed + m.rejected == m.submitted == 80
+    assert m.mid_wave_admissions == 0
+    snap = out["calibration"]
+    assert snap.source == "fitted"
+    assert snap.window_mape_pct <= 5.0
+
+
+class _StubEngine:
+    """Engine double: fixed wall time per step, deterministic tokens.
+
+    Mimics the ServingEngine surface the batcher uses, without JAX — the
+    point is that the *executed* batch is always the padded ``max_batch``
+    rows, which is what WallClockFabric measurements correspond to.
+    """
+
+    def __init__(self, max_batch=4):
+        self.max_batch = max_batch
+
+    def init_caches(self):
+        return {}
+
+    def prefill(self, tokens, metrics=None):
+        return np.zeros(self.max_batch, np.int32), {}, 1e-6
+
+    def prefill_into_slots(self, tokens, caches, mask, metrics=None):
+        return np.zeros(self.max_batch, np.int32), caches, 1e-6
+
+    def decode(self, tok, caches, lens):
+        return np.zeros(self.max_batch, np.int32), caches, 1e-6
+
+
+@pytest.mark.parametrize("wave_boundary", [False, True])
+def test_wallclock_calibration_uses_executed_batch_size(wave_boundary):
+    """Regression: decode jobs are *planned* with the occupied-slot count
+    but *executed* with the padded max_batch rows — WallClockFabric samples
+    must carry the executed N, or the calibrator ingests mismatched (N, t)
+    pairs (prefill likewise: max_batch * prompt_len)."""
+    from repro.serve import WallClockFabric
+
+    max_batch, prompt_len = 4, 16
+    cal = OnlineCalibrator()
+    # host_model=inf: every job offloads, so every job feeds the calibrator.
+    sched = OffloadAwareScheduler(cal, available_m=AVAILABLE,
+                                  host_model=lambda n: float("inf"))
+    engine = _StubEngine(max_batch)
+    batcher = ContinuousBatcher(sched, cal, fabric=WallClockFabric(),
+                                engine=engine, wave_boundary=wave_boundary)
+    reqs = [Request(rid=i, arrival=float(i), prompt_len=prompt_len,
+                    gen_len=g, tokens=np.zeros(prompt_len, np.int32))
+            for i, g in enumerate((1, 3, 5))]
+    out = batcher.run(reqs)
+    assert out["metrics"].completed == 3
+    samples = list(cal._samples)
+    assert samples, "offloaded jobs must feed the calibrator"
+    decode_plans = [p for p in out["plans"] if p.kind == "decode"]
+    # The loop really did plan decode jobs below the full batch...
+    assert any(p.n_elems < max_batch for p in decode_plans)
+    # ...but every wall-clock calibration sample carries the executed size.
+    n_prefills = sum(1 for p in out["plans"] if p.kind == "prefill")
+    expect = {max_batch, max_batch * prompt_len}
+    assert {n for _, n, _ in samples} <= expect
+    assert sum(1 for _, n, _ in samples
+               if n == max_batch * prompt_len) == n_prefills
+
+
+def test_simulated_fabric_calibration_uses_planned_job_size():
+    """With the simulated fabric the measurement IS the planned job, so
+    samples keep the occupied-slot N (no padding correction)."""
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=AVAILABLE,
+                                  host_model=lambda n: float("inf"))
+    batcher = ContinuousBatcher(sched, cal,
+                                fabric=SimulatedFabric(jitter_pct=0.0),
+                                max_batch=4)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=16, gen_len=g)
+            for i, g in enumerate((1, 3, 5))]
+    out = batcher.run(reqs)
+    decode_ns = {p.n_elems for p in out["plans"] if p.kind == "decode"}
+    sample_ns = {n for _, n, _ in cal._samples}
+    assert decode_ns <= sample_ns  # planned == observed job sizes
+
+
+@pytest.mark.slow
+def test_continuous_mixed_length_slots_match_wave_boundary_tokens():
+    """Acceptance: mixed-length slots produce identical tokens to the
+    wave-boundary path for the same requests (real engine)."""
+    from repro.serve import ServingEngine
+
+    arch = "chatglm3-6b"
+    rng = np.random.default_rng(5)
+    spec = [(8, 5, 0.0), (4, 3, 0.0), (8, 2, 1500.0), (4, 6, 3000.0),
+            (8, 4, 9000.0)]
+    prompts = {i: rng.integers(0, 128, size=(pl,), dtype=np.int32)
+               for i, (pl, _, _) in enumerate(spec)}
+
+    def run(wave_boundary):
+        engine = ServingEngine(arch, reduced=True, max_batch=3, max_len=16)
+        cal = OnlineCalibrator()
+        sched = OffloadAwareScheduler(cal, available_m=AVAILABLE)
+        b = ContinuousBatcher(sched, cal,
+                              fabric=SimulatedFabric(jitter_pct=0.0),
+                              engine=engine, wave_boundary=wave_boundary)
+        reqs = [Request(rid=i, arrival=arr, prompt_len=pl, gen_len=g,
+                        tokens=prompts[i])
+                for i, (pl, g, arr) in enumerate(spec)]
+        return b.run(reqs)
+
+    wave, cont = run(True), run(False)
+    assert cont["metrics"].mid_wave_admissions > 0  # slots really mixed
+    for rw, rc in zip(wave["requests"], cont["requests"]):
+        assert rw.rid == rc.rid
+        np.testing.assert_array_equal(rw.generated, rc.generated)

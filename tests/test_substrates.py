@@ -96,6 +96,7 @@ def test_manager_async_and_retention(tmp_path):
     assert step == 4 and float(np.asarray(got["w"])[0]) == 4.0
 
 
+@pytest.mark.slow
 def test_elastic_restore_into_new_mesh_shape():
     """Checkpoint saved without a mesh restores onto a different device
     layout (subprocess with 8 virtual devices)."""
@@ -229,6 +230,7 @@ def test_baseline_flag_parsing(monkeypatch):
     assert not flags.baseline_mode()
 
 
+@pytest.mark.slow
 def test_baseline_mode_changes_lm_head_spec():
     from conftest import run_py
     code = """
