@@ -3,10 +3,16 @@
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run --fast          # skip measured
   PYTHONPATH=src python -m benchmarks.run --json BENCH.json
+  PYTHONPATH=src python -m benchmarks.run --fast --smoke  # CI smoke tier
 
 ``--json`` additionally writes machine-readable results — a flat list of
 {section, name, value, unit} records — so the perf trajectory can be
 tracked across PRs (BENCH_*.json files diffed by CI or by hand).
+
+``--smoke`` shrinks the serving traces to tiny extents AND asserts the
+headline results (paper speedups, refit MAPEs, mid-wave and pipelined
+serving gains) so a benchmark regression fails the CI build instead of
+rotting silently.
 """
 
 from __future__ import annotations
@@ -24,6 +30,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess-measured benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny extents + assert headline results "
+                         "(the CI regression gate)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write machine-readable records to PATH")
     args = ap.parse_args(argv)
@@ -75,13 +84,28 @@ def main(argv=None) -> None:
                                   [1, 2, 4, 8, 16, 32])
     rec("eq3_decision", "breakeven_n", n_star, "elems")
 
+    section("Event engine (repro.core.engine) — pipelined offload streams")
+    from repro.core import simulator as sim
+    from repro.core.engine import steady_runtime
+    from repro.core.runtime_model import fit_pipelined_from_engine
+    single = sim.offload_runtime(32, 4096, multicast=True)
+    steady = steady_runtime(32, 4096)
+    print(f"back-to-back DAXPY at (M=32, N=4096): {single} cy isolated -> "
+          f"{steady:.0f} cy steady-state ({single / steady:.2f}x)")
+    rec("engine", "steady_speedup_32x4096", single / steady, "x")
+    eff_model, eff_mape = fit_pipelined_from_engine()
+    print(f"overlap-aware refit: {eff_model} (MAPE {eff_mape:.2f}%) — "
+          f"alpha_eff vs closed-form 367")
+    rec("engine", "alpha_eff", eff_model.alpha, "cycles")
+    rec("engine", "alpha_eff_mape", eff_mape, "pct")
+
     section("Co-design explorer (repro.dse) — design-space sweep + refits")
     from benchmarks import dse_sweep
     records += dse_sweep.main(fast=args.fast)
 
     section("Serving scheduler (repro.serve) — open-loop synthetic workload")
     from benchmarks import serve_scheduler
-    records += serve_scheduler.main(fast=args.fast)
+    records += serve_scheduler.main(fast=args.fast, smoke=args.smoke)
 
     if not args.fast:
         section("Measured dispatch/sync scaling on host devices (us)")
@@ -105,6 +129,36 @@ def main(argv=None) -> None:
     if args.json:
         Path(args.json).write_text(json.dumps(records, indent=2) + "\n")
         print(f"wrote {len(records)} records to {args.json}")
+
+    if args.smoke:
+        _smoke_gate(records)
+
+
+def _smoke_gate(records: list[dict]) -> None:
+    """Assert the headline results; a regression fails the CI build."""
+    by_name = {r["name"]: r["value"] for r in records}
+    checks = [
+        # Paper reproduction: the 47.9% co-design speedup survives.
+        ("fig1_right max_speedup", by_name["max_speedup"] >= 1.4),
+        # Eq.-2 model quality: both fits within the paper's MAPE bar.
+        ("eq2 paper_eq1 MAPE", by_name["paper_eq1_worst"] <= 2.0),
+        ("eq2 fitted MAPE", by_name["fitted_worst"] <= 2.0),
+        # Overlap-aware effective-alpha fit (DESIGN.md §7.2).
+        ("alpha_eff collapse", by_name["alpha_eff"] <= 100.0),
+        ("alpha_eff MAPE", by_name["alpha_eff_mape"] <= 2.0),
+        # Serving A/B: each loop upgrade keeps its throughput win.
+        ("midwave > wave", by_name["midwave_throughput_gain"] > 0.0),
+        ("pipelined > midwave",
+         by_name["pipe_vs_midwave_throughput_gain"] > 0.0),
+        # Calibration tracks the pipelined trace within the 2% bar.  The
+        # record is -1.0 when the calibrator never produced a fitted window
+        # — that is a failure, not a pass, hence the lower bound.
+        ("pipelined calib MAPE", 0.0 <= by_name["pipe_calib_mape"] <= 2.0),
+    ]
+    failed = [name for name, ok in checks if not ok]
+    print(f"smoke gate: {len(checks) - len(failed)}/{len(checks)} checks ok")
+    if failed:
+        raise SystemExit("smoke gate FAILED: " + ", ".join(failed))
 
 
 if __name__ == "__main__":

@@ -1,16 +1,16 @@
 """Serving-subsystem benchmark: requests/sec + p99 latency + calibration.
 
-Three measurements on the synthetic open-loop workload (Poisson arrivals,
-mixed prompt/gen lengths, per-request Eq.-3 SLOs):
+Measurements on the synthetic open-loop workload (Poisson arrivals, mixed
+prompt/gen lengths, per-request Eq.-3 SLOs):
 
-  * A/B on the same trace (``execute=False``): the slot-managed continuous
-    loop (mid-wave admission, DESIGN.md §6) vs the legacy wave-boundary
-    baseline — the headline is the throughput / p99 win from refilling freed
-    slots instead of letting a 1-token straggler serialize the fabric.  The
-    trace is straggler-heavy (high gen-length variance) at heavy load, the
-    regime the tentpole targets; under uniform tiny decodes in deep overload
-    the wave path's batched-prefill amortization can still win (documented
-    in DESIGN.md §6).
+  * three-way A/B on the same straggler-heavy trace (``execute=False``):
+    legacy wave-boundary batching vs the slot-managed continuous loop
+    (mid-wave admission, DESIGN.md §6) vs the pipelined loop on the
+    asynchronous double-buffered fabric (DESIGN.md §7).  The mid-wave
+    headline is the win from refilling freed slots instead of letting a
+    1-token straggler serialize the fabric; the pipelined headline is the
+    additional win from hiding refill-prefill dispatch/sync under in-flight
+    decode work.  Completion sets are identical across the three modes.
   * engine-attached (default, skipped with fast=True): the continuous loop
     driving the real compiled prefill/decode steps on a reduced arch,
     reporting wall requests/sec of the whole stack.
@@ -28,6 +28,9 @@ from repro.serve import WorkloadSpec, serve_workload
 #: The A/B trace: heavy traffic with straggler-y generation lengths.
 AB_SPEC = WorkloadSpec(num_requests=512, rate_rps=2e6,
                        gen_lens=(4, 16, 64), seed=7)
+#: Tiny-extent variant for the CI smoke tier (same shape, fewer requests).
+SMOKE_SPEC = WorkloadSpec(num_requests=128, rate_rps=2e6,
+                          gen_lens=(4, 16, 64), seed=7)
 
 
 def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
@@ -48,6 +51,12 @@ def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
         (f"{prefix}_slo_attainment",
          s["slo_attainment"] if s["slo_attainment"] is not None else -1.0,
          "fraction"),
+        (f"{prefix}_pipelined_prefills",
+         float(s["pipeline"]["pipelined_prefills"]), "jobs"),
+        (f"{prefix}_overlap_total",
+         s["pipeline"]["overlap_total_cycles"], "cycles"),
+        (f"{prefix}_bubble_total",
+         s["pipeline"]["bubble_total_cycles"], "cycles"),
         (f"{prefix}_rejected", float(s["rejected"]), "requests"),
         (f"{prefix}_wall_rps", s["completed"] / max(wall_s, 1e-9),
          "req/s-wall"),
@@ -62,19 +71,25 @@ def _records_from(out, prefix: str, wall_s: float) -> list[dict]:
             for n, v, u in recs if v is not None]
 
 
-def main(fast: bool = False) -> list[dict]:
+#: The three serving modes of the A/B, in baseline -> best order.
+AB_MODES = (
+    ("wave", "wave-boundary baseline", {"wave_boundary": True}),
+    ("sim", "continuous (mid-wave admission)", {}),
+    ("pipe", "pipelined (async double-buffered fabric)", {"pipeline": True}),
+)
+
+
+def main(fast: bool = False, smoke: bool = False) -> list[dict]:
     records: list[dict] = []
+    spec = SMOKE_SPEC if smoke else AB_SPEC
 
     outs = {}
     us_per_job = {}
-    for wave_boundary, prefix in ((True, "wave"), (False, "sim")):
+    for prefix, mode, kwargs in AB_MODES:
         t0 = time.perf_counter()
-        out = serve_workload(AB_SPEC, execute=False,
-                             wave_boundary=wave_boundary)
+        out = serve_workload(spec, execute=False, **kwargs)
         dt = time.perf_counter() - t0
-        mode = ("wave-boundary baseline" if wave_boundary
-                else "continuous (mid-wave admission)")
-        print(f"--- {mode} ({AB_SPEC.num_requests} requests, "
+        print(f"--- {mode} ({spec.num_requests} requests, "
               "simulated fabric) ---")
         print(out["metrics"].format_summary())
         snap = out["calibration"]
@@ -89,18 +104,25 @@ def main(fast: bool = False) -> list[dict]:
         outs[prefix] = out["metrics"].summary()
         us_per_job[prefix] = dt / max(n_jobs, 1) * 1e6
 
-    gain = (outs["sim"]["throughput_rps"] / outs["wave"]["throughput_rps"]
-            - 1.0) * 100.0
-    p99_delta = (outs["sim"]["latency_us"]["p99"]
-                 / outs["wave"]["latency_us"]["p99"] - 1.0) * 100.0
-    print(f"--- mid-wave admission vs wave boundary: throughput "
-          f"{gain:+.1f}%, p99 latency {p99_delta:+.1f}% ---")
-    records.append({"section": "serve_scheduler",
-                    "name": "midwave_throughput_gain", "value": gain,
-                    "unit": "pct"})
-    records.append({"section": "serve_scheduler",
-                    "name": "midwave_p99_delta", "value": p99_delta,
-                    "unit": "pct"})
+    def delta(a, b, key):
+        if key == "p99":
+            return (outs[a]["latency_us"]["p99"]
+                    / outs[b]["latency_us"]["p99"] - 1.0) * 100.0
+        return (outs[a][key] / outs[b][key] - 1.0) * 100.0
+
+    pairs = [("midwave", "sim", "wave"), ("pipe_vs_midwave", "pipe", "sim"),
+             ("pipe_vs_wave", "pipe", "wave")]
+    for label, a, b in pairs:
+        gain = delta(a, b, "throughput_rps")
+        p99 = delta(a, b, "p99")
+        print(f"--- {a} vs {b}: throughput {gain:+.1f}%, "
+              f"p99 latency {p99:+.1f}% ---")
+        records.append({"section": "serve_scheduler",
+                        "name": f"{label}_throughput_gain", "value": gain,
+                        "unit": "pct"})
+        records.append({"section": "serve_scheduler",
+                        "name": f"{label}_p99_delta", "value": p99,
+                        "unit": "pct"})
     records.append({"section": "serve_scheduler", "name": "sim_us_per_job",
                     "value": us_per_job["sim"], "unit": "us"})
 

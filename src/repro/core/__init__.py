@@ -8,7 +8,12 @@ model with <1% MAPE, and the offload-decision problem derived from it.
 Submodules:
   simulator     — cycle model of the Manticore offload path (baseline vs
                   extended design); reproduces the paper's §III numbers.
-  runtime_model — t̂(M,N) = alpha + beta*N + gamma*N/M; fitting + MAPE (Eq. 2).
+  engine        — discrete-event offload engine: overlapped jobs on a
+                  host+fabric timeline with single/double descriptor
+                  buffering (DESIGN.md §7); reproduces the closed form
+                  exactly for isolated jobs.
+  runtime_model — t̂(M,N) = alpha + beta*N + gamma*N/M; fitting + MAPE (Eq. 2);
+                  overlap-aware effective-α fit for pipelined streams.
   decision      — M_min under a deadline (Eq. 3), argmin-M, host-vs-offload.
   dispatch      — Sequential (baseline) vs Multicast job dispatch over JAX
                   devices.
@@ -17,12 +22,15 @@ Submodules:
                   drives sharding-extent decisions in repro.launch.
 """
 
-from . import decision, dispatch, planner, runtime_model, simulator, sync
+from . import decision, dispatch, engine, planner, runtime_model, simulator, sync
 from .decision import (OffloadDecision, best_m, breakeven_n,
                        m_min_for_deadline, should_offload)
 from .dispatch import (DISPATCHERS, MulticastDispatcher, SequentialDispatcher)
+from .engine import BUFFERING_MODES, JobRecord, OffloadEngine, steady_runtime, steady_sweep
 from .planner import TPU_V5E, ChipSpec, JobStats, RooflineTerms, choose_extent, roofline
-from .runtime_model import PAPER_MODEL, OffloadModel, fit, fit_from_simulator, mape, mape_by_n
+from .runtime_model import (PAPER_MODEL, OffloadModel, fit,
+                            fit_from_simulator, fit_pipelined_from_engine,
+                            mape, mape_by_n)
 from .simulator import (DAXPY, DISPATCH_MODES, SYNC_MODES, HWParams,
                         KernelSpec, OffloadTrace, host_runtime,
                         offload_runtime, simulate_offload, speedup, sweep)
@@ -30,8 +38,11 @@ from .sync import (CreditCounterSync, FaultDetected, PollingSync,
                    attach_credits, credit_threshold, emit_credits)
 
 __all__ = [
-    "simulator", "runtime_model", "decision", "dispatch", "sync", "planner",
+    "simulator", "engine", "runtime_model", "decision", "dispatch", "sync",
+    "planner",
     "HWParams", "KernelSpec", "DAXPY", "DISPATCH_MODES", "SYNC_MODES",
+    "BUFFERING_MODES", "OffloadEngine", "JobRecord", "steady_runtime",
+    "steady_sweep", "fit_pipelined_from_engine",
     "OffloadTrace", "simulate_offload",
     "offload_runtime", "host_runtime", "speedup", "sweep",
     "OffloadModel", "PAPER_MODEL", "fit", "fit_from_simulator", "mape",

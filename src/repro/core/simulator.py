@@ -101,6 +101,69 @@ def _resolve_modes(multicast: bool | None, dispatch: str | None,
     return dispatch, sync
 
 
+# --------------------------------------------------------------------------- #
+# Phase helpers — the single source of truth for per-phase cycle counts.
+#
+# ``simulate_offload`` (the closed-form single-job path) and the discrete-event
+# offload engine (``repro.core.engine``) both compose these, which is what
+# guarantees the engine reproduces the closed form exactly for isolated jobs
+# (DESIGN.md §7).
+# --------------------------------------------------------------------------- #
+
+def dispatch_cycles(m_clusters: int, dispatch: str, hw: HWParams) -> int:
+    """Host-side dispatch phase: descriptor construction + transactions.
+
+    Multicast delivers descriptor+args to every cluster in one transaction;
+    unicast pays one mailbox/arg write per cluster, sequentially.
+    """
+    if dispatch == "multicast":
+        return hw.host_setup + hw.tx_multicast
+    return hw.host_setup + m_clusters * hw.tx_unicast
+
+
+def exec_schedule(
+    m_clusters: int, n_elems: int, hw: HWParams, kernel: KernelSpec,
+) -> tuple[list[int], list[int], list[int]]:
+    """Fabric-side schedule relative to the release fence.
+
+    Returns per-cluster ``(cluster_start, dma_done, compute_done)`` lists,
+    all relative to the fence (the instant the final dispatch write has been
+    published).  Every cluster has received its mailbox write by the fence
+    (arrival <= fence by construction in both dispatch modes), so wakeup
+    starts at the fence; the shared operand bus is then granted in cluster
+    order.
+    """
+    work = _split_work(n_elems, m_clusters)
+    cluster_start = [hw.cluster_wakeup] * m_clusters
+    dma_done: list[int] = []
+    bus_free = 0
+    for i in range(m_clusters):
+        grant = max(cluster_start[i], bus_free)
+        dma = math.ceil(work[i] * kernel.bytes_per_elem
+                        / hw.bus_bytes_per_cycle)
+        bus_free = grant + dma
+        dma_done.append(bus_free)
+    compute_done = [
+        dma_done[i] + _cluster_compute_cycles(work[i], hw, kernel)
+        for i in range(m_clusters)
+    ]
+    return cluster_start, dma_done, compute_done
+
+
+def exec_cycles(m_clusters: int, n_elems: int, hw: HWParams,
+                kernel: KernelSpec) -> int:
+    """Fabric-busy cycles of one job: fence -> last cluster's compute done."""
+    _, _, compute_done = exec_schedule(m_clusters, n_elems, hw, kernel)
+    return max(compute_done)
+
+
+def sync_cycles(sync: str, hw: HWParams) -> tuple[int, int]:
+    """(completion-signal latency, host return handling) for a sync mode."""
+    if sync == "credit":
+        return hw.credit_irq_latency, hw.host_return_irq
+    return hw.poll_detect, hw.host_return_poll
+
+
 @dataclass
 class OffloadTrace:
     """Cycle-level breakdown of one simulated offload."""
@@ -154,52 +217,28 @@ def simulate_offload(
         raise ValueError("need at least one element")
 
     tr = OffloadTrace()
-    work = _split_work(n_elems, m_clusters)
 
     # --- Phase 1: dispatch -------------------------------------------------
-    if dispatch == "multicast":
-        # One multicast transaction delivers descriptor+args to every cluster.
-        tr.dispatch_done = hw.host_setup + hw.tx_multicast
-        arrival = [tr.dispatch_done] * m_clusters
-    else:
-        # Sequential unicast: cluster i receives after i+1 transactions.
-        arrival = [
-            hw.host_setup + (i + 1) * hw.tx_unicast for i in range(m_clusters)
-        ]
-        tr.dispatch_done = arrival[-1]
-
     # Release fence: operand arrays become visible to clusters only after the
-    # final dispatch write has completed.
-    fence = tr.dispatch_done
+    # final dispatch write has completed, so every cluster's wakeup starts at
+    # the fence regardless of when its own mailbox write arrived.
+    tr.dispatch_done = fence = dispatch_cycles(m_clusters, dispatch, hw)
 
-    # --- Phase 2: wakeup + operand DMA on the shared bus -------------------
-    # Bus grants are arbitrated in cluster order; each cluster requests the bus
-    # once it has woken AND the fence has been published.
-    tr.cluster_start = [max(a, fence) + hw.cluster_wakeup for a in arrival]
-    bus_free = 0
-    for i in range(m_clusters):
-        grant = max(tr.cluster_start[i], bus_free)
-        dma_cycles = math.ceil(work[i] * kernel.bytes_per_elem
-                               / hw.bus_bytes_per_cycle)
-        bus_free = grant + dma_cycles
-        tr.dma_done.append(bus_free)
-
-    # --- Phase 3: compute ---------------------------------------------------
-    tr.compute_done = [
-        tr.dma_done[i] + _cluster_compute_cycles(work[i], hw, kernel)
-        for i in range(m_clusters)
-    ]
+    # --- Phase 2+3: wakeup + operand DMA on the shared bus + compute -------
+    # Bus grants are arbitrated in cluster order; each cluster requests the
+    # bus once it has woken (the fence has been published by then).
+    start, dma, comp = exec_schedule(m_clusters, n_elems, hw, kernel)
+    tr.cluster_start = [fence + c for c in start]
+    tr.dma_done = [fence + c for c in dma]
+    tr.compute_done = [fence + c for c in comp]
     tr.makespan = max(tr.compute_done)
 
     # --- Phase 4: completion synchronization -------------------------------
-    if sync == "credit":
-        # Credit counter: last increment trips the threshold; IRQ to host.
-        tr.sync_done = tr.makespan + hw.credit_irq_latency
-        tr.total = tr.sync_done + hw.host_return_irq
-    else:
-        # Host polls per-cluster done flags in a busy-wait loop.
-        tr.sync_done = tr.makespan + hw.poll_detect
-        tr.total = tr.sync_done + hw.host_return_poll
+    # Credit counter: last increment trips the threshold; IRQ to host.
+    # Polling: the host busy-waits on per-cluster done flags instead.
+    signal, ret = sync_cycles(sync, hw)
+    tr.sync_done = tr.makespan + signal
+    tr.total = tr.sync_done + ret
 
     tr.phases = {
         "dispatch": tr.dispatch_done,
@@ -292,6 +331,11 @@ def sweep(
 PAPER_M_GRID = [1, 2, 4, 8, 16, 32]
 PAPER_N_GRID_MODEL = [256, 512, 768, 1024]      # Eq. 2 validation grid
 PAPER_N_GRID_SPEEDUP = [1024, 2048, 4096, 8192]  # Fig. 1 right problem sizes
+#: Fit grid for the overlap-aware effective-α model: problem sizes whose
+#: execution phase exceeds the host's per-job work at every M of the paper
+#: grid, so steady-state periods stay in the (linear) fabric-bound regime
+#: (DESIGN.md §7).
+PIPELINE_N_GRID = [2048, 4096, 6144, 8192]
 
 
 #: The paper's published fabric size (288 cores = 32 clusters + host):

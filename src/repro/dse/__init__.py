@@ -21,14 +21,14 @@ coefficients instead of the paper's.
 from .pareto import (deadline_region, design_objectives, dominates,
                      feasible_ms, front, pareto_front, rank, summarize)
 from .runner import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignResult,
-                     baseline_grid, design_cost, design_speedup,
+                     baseline_grid, design_cost, design_grid, design_speedup,
                      evaluate_design, refit_design, run_sweep)
 from .space import PAPER_SPACE, DesignPoint, DesignSpace
 
 __all__ = [
     "DesignPoint", "DesignSpace", "PAPER_SPACE",
     "DesignResult", "run_sweep", "evaluate_design", "refit_design",
-    "baseline_grid", "design_cost", "design_speedup",
+    "baseline_grid", "design_cost", "design_grid", "design_speedup",
     "DEFAULT_M_GRID", "DEFAULT_N_GRID",
     "dominates", "pareto_front", "front", "rank", "design_objectives",
     "feasible_ms", "deadline_region", "summarize",

@@ -3,16 +3,23 @@
 For each :class:`~repro.dse.space.DesignPoint` the runner
 
   1. simulates the full (M, N) measurement grid on the discrete-event model
-     (``repro.core.simulator``) configured for that design,
+     (``repro.core.simulator``) configured for that design — for
+     double-buffered designs (DESIGN.md §7) the grid is the *steady-state
+     back-to-back* per-job runtime from the event engine
+     (``repro.core.engine.steady_sweep``), since pipelined throughput is
+     what the second descriptor slot buys,
   2. refits the analytical runtime model through the existing least-squares
      path — the 3-coefficient Eq. 1 :class:`OffloadModel` for multicast
      dispatch, the 4-coefficient :class:`LinearDispatchModel` (extra
      ``delta*M`` dispatch term) for sequential unicast — and records the fit's
-     MAPE (Eq. 2) against the design's own simulator,
+     MAPE (Eq. 2) against the design's own simulator (for double-buffered
+     designs the fitted constant is α_eff, accurate in the fabric-bound
+     regime; host-bound cells are piecewise and inflate the reported MAPE —
+     DESIGN.md §7),
   3. computes cross-design metrics: the speedup grid against the paper
-     baseline (unicast + poll on the space's base hardware, same kernel), the
-     break-even problem size, and a relative silicon-cost proxy
-     (DESIGN.md §3.2).
+     baseline (unicast + poll + single buffering on the space's base
+     hardware, same kernel), the break-even problem size, and a relative
+     silicon-cost proxy (DESIGN.md §3.2).
 
 Designs are independent, so the sweep fans out over a process pool
 (``workers > 1``); every input and result is a plain picklable dataclass.
@@ -27,6 +34,7 @@ from dataclasses import dataclass
 from typing import Iterable, Sequence
 
 from repro.core import decision, runtime_model
+from repro.core import engine as engine_mod
 from repro.core import simulator as sim
 from repro.core.runtime_model import LinearDispatchModel, OffloadModel
 from repro.kernels.ops import get_kernel
@@ -45,8 +53,9 @@ def design_cost(point: DesignPoint) -> float:
 
     Normalized so the paper baseline on default hardware costs 2.0: one unit
     each for the 96 B/cycle operand bus and the 8 worker cores per cluster,
-    plus fixed increments for the multicast port (0.15) and the
-    credit-counter completion unit (0.10).
+    plus fixed increments for the multicast port (0.15), the credit-counter
+    completion unit (0.10), and the second job-descriptor buffer (0.05 —
+    a few hundred bytes of SRAM plus the queue logic, DESIGN.md §7).
     """
     hw = point.hw
     cost = hw.bus_bytes_per_cycle / 96.0 + hw.cores_per_cluster / 8.0
@@ -54,7 +63,29 @@ def design_cost(point: DesignPoint) -> float:
         cost += 0.15
     if point.sync == "credit":
         cost += 0.10
+    if point.buffering == "double":
+        cost += 0.05
     return cost
+
+
+def design_grid(point: DesignPoint, ms: Sequence[int],
+                ns: Sequence[int]) -> dict:
+    """Simulate the (M, N) runtime grid a design is scored and refit on.
+
+    Single-buffered designs use the closed-form isolated-job runtime
+    (``simulator.sweep``); double-buffered designs use the event engine's
+    steady-state back-to-back per-job runtime (``engine.steady_sweep``) —
+    the throughput a saturated offload stream sees (DESIGN.md §7).
+    """
+    kernel = get_kernel(point.kernel_name)
+    if point.buffering == "double":
+        return engine_mod.steady_sweep(list(ms), list(ns),
+                                       dispatch=point.dispatch,
+                                       sync=point.sync, hw=point.hw,
+                                       kernel=kernel,
+                                       buffering=point.buffering)
+    return sim.sweep(list(ms), list(ns), dispatch=point.dispatch,
+                     sync=point.sync, hw=point.hw, kernel=kernel)
 
 
 def refit_design(
@@ -75,9 +106,7 @@ def refit_design(
     this design) skips re-simulation.
     """
     if runtimes is None:
-        kernel = get_kernel(point.kernel_name)
-        runtimes = sim.sweep(list(ms), list(ns), dispatch=point.dispatch,
-                             sync=point.sync, hw=point.hw, kernel=kernel)
+        runtimes = design_grid(point, ms, ns)
     samples = [(m, n, float(t)) for (m, n), t in runtimes.items()]
     if point.dispatch == "multicast" or force_eq1:
         model: OffloadModel | LinearDispatchModel = runtime_model.fit(samples)
@@ -125,8 +154,7 @@ def evaluate_design(
 ) -> DesignResult:
     """Simulate + refit + score one design point."""
     kernel = get_kernel(point.kernel_name)
-    runtimes = sim.sweep(list(ms), list(ns), dispatch=point.dispatch,
-                         sync=point.sync, hw=point.hw, kernel=kernel)
+    runtimes = design_grid(point, ms, ns)
     if baseline_runtimes is None:
         baseline_runtimes = baseline_grid(point.kernel_name, ms, ns,
                                           hw=base_hw or sim.HWParams())
@@ -164,14 +192,15 @@ def design_speedup(design: DesignPoint, reference: DesignPoint,
     The generalized :func:`repro.core.simulator.speedup` with both operands
     drawn from the design space — e.g. the paper's 47.9% co-design point is
     ``design_speedup(extended, baseline, 32, 1024)`` with the two published
-    designs, but any Pareto-front pair can be compared the same way.
+    designs, but any Pareto-front pair can be compared the same way.  Each
+    operand is priced in its own serving regime: single-buffered designs at
+    the closed-form isolated-job runtime, double-buffered designs at the
+    steady-state pipelined per-job runtime (DESIGN.md §7).
     """
-    return sim.speedup(
-        m_clusters, n_elems,
-        base_dispatch=reference.dispatch, base_sync=reference.sync,
-        base_hw=reference.hw, base_kernel=get_kernel(reference.kernel_name),
-        dispatch=design.dispatch, sync=design.sync,
-        hw=design.hw, kernel=get_kernel(design.kernel_name))
+    cell = ([m_clusters], [n_elems])
+    t_base = design_grid(reference, *cell)[(m_clusters, n_elems)]
+    t_design = design_grid(design, *cell)[(m_clusters, n_elems)]
+    return t_base / t_design
 
 
 def run_sweep(

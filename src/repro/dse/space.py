@@ -6,6 +6,10 @@ A :class:`DesignSpace` names the axes the explorer may vary (DESIGN.md §3):
     latency, cores per cluster, ...), given as ``{"field": [values, ...]}``;
   * the dispatch axis (``"unicast"`` | ``"multicast"``);
   * the completion-sync axis (``"poll"`` | ``"credit"``);
+  * the job-descriptor buffering axis (``"single"`` | ``"double"`` —
+    DESIGN.md §7: double-buffered descriptors let the host dispatch job k+1
+    while job k executes, so the design is scored on its *steady-state*
+    pipelined runtimes);
   * the kernel, by registry name (``repro.kernels.ops.KERNELS``).
 
 ``grid()`` enumerates the full cross product; ``sample(k, seed)`` draws a
@@ -22,6 +26,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Iterator, Mapping, Sequence
 
+from repro.core.engine import BUFFERING_MODES
 from repro.core.simulator import DISPATCH_MODES, SYNC_MODES, HWParams
 
 _HW_FIELDS = {f.name for f in dataclasses.fields(HWParams)}
@@ -35,6 +40,10 @@ class DesignPoint:
     sync: str
     kernel_name: str = "daxpy"
     hw: HWParams = HWParams()
+    #: Job-descriptor buffering depth (DESIGN.md §7).  ``"double"`` designs
+    #: are scored on steady-state pipelined runtimes (repro.core.engine);
+    #: ``"single"`` keeps the closed-form isolated-job scoring.
+    buffering: str = "single"
     #: (field, value) pairs where ``hw`` differs from the default HWParams —
     #: derived, so the point's name always matches what it simulates.
     hw_overrides: tuple[tuple[str, object], ...] = dataclasses.field(
@@ -45,6 +54,8 @@ class DesignPoint:
             raise ValueError(f"dispatch must be one of {DISPATCH_MODES}")
         if self.sync not in SYNC_MODES:
             raise ValueError(f"sync must be one of {SYNC_MODES}")
+        if self.buffering not in BUFFERING_MODES:
+            raise ValueError(f"buffering must be one of {BUFFERING_MODES}")
         object.__setattr__(self, "hw_overrides", tuple(
             (f.name, getattr(self.hw, f.name))
             for f in dataclasses.fields(HWParams)
@@ -53,6 +64,8 @@ class DesignPoint:
     @property
     def name(self) -> str:
         tags = [self.kernel_name, f"{self.dispatch}+{self.sync}"]
+        if self.buffering != "single":
+            tags.append(f"buf={self.buffering}")
         tags += [f"{k}={v}" for k, v in self.hw_overrides]
         return " ".join(tags)
 
@@ -71,6 +84,7 @@ class DesignPoint:
             "name": self.name,
             "dispatch": self.dispatch,
             "sync": self.sync,
+            "buffering": self.buffering,
             "kernel": self.kernel_name,
             "hw_overrides": dict(self.hw_overrides),
         }
@@ -83,6 +97,9 @@ class DesignSpace:
     hw_axes: Mapping[str, Sequence] = field(default_factory=dict)
     dispatch: Sequence[str] = DISPATCH_MODES
     sync: Sequence[str] = SYNC_MODES
+    #: Descriptor-buffering axis; the default sweeps only the paper's
+    #: single-buffered protocol so legacy spaces keep their size.
+    buffering: Sequence[str] = ("single",)
     kernels: Sequence[str] = ("daxpy",)
     base_hw: HWParams = HWParams()
 
@@ -96,6 +113,9 @@ class DesignSpace:
         if bad_d or bad_s:
             raise ValueError(f"invalid dispatch {sorted(bad_d)} / "
                              f"sync {sorted(bad_s)} modes")
+        bad_b = set(self.buffering) - set(BUFFERING_MODES)
+        if bad_b:
+            raise ValueError(f"invalid buffering modes {sorted(bad_b)}")
         if not self.kernels:
             raise ValueError("need at least one kernel")
         # Normalize every axis to distinct values (order-preserving), so
@@ -106,32 +126,36 @@ class DesignSpace:
         object.__setattr__(self, "dispatch",
                            tuple(dict.fromkeys(self.dispatch)))
         object.__setattr__(self, "sync", tuple(dict.fromkeys(self.sync)))
+        object.__setattr__(self, "buffering",
+                           tuple(dict.fromkeys(self.buffering)))
         object.__setattr__(self, "kernels",
                            tuple(dict.fromkeys(self.kernels)))
 
     @property
     def size(self) -> int:
-        n = len(self.dispatch) * len(self.sync) * len(self.kernels)
+        n = (len(self.dispatch) * len(self.sync) * len(self.buffering)
+             * len(self.kernels))
         for values in self.hw_axes.values():
             n *= len(values)
         return n
 
-    def _make_point(self, dispatch: str, sync: str, kernel: str,
-                    hw_values: tuple) -> DesignPoint:
+    def _make_point(self, dispatch: str, sync: str, buffering: str,
+                    kernel: str, hw_values: tuple) -> DesignPoint:
         hw = dataclasses.replace(self.base_hw, **dict(zip(self.hw_axes,
                                                           hw_values)))
-        return DesignPoint(dispatch=dispatch, sync=sync, kernel_name=kernel,
-                           hw=hw)
+        return DesignPoint(dispatch=dispatch, sync=sync, buffering=buffering,
+                           kernel_name=kernel, hw=hw)
 
     def grid(self) -> Iterator[DesignPoint]:
         """Exhaustive cross product of every axis."""
         for kernel in self.kernels:
             for dispatch in self.dispatch:
                 for sync in self.sync:
-                    for hw_values in itertools.product(
-                            *self.hw_axes.values()):
-                        yield self._make_point(dispatch, sync, kernel,
-                                               hw_values)
+                    for buffering in self.buffering:
+                        for hw_values in itertools.product(
+                                *self.hw_axes.values()):
+                            yield self._make_point(dispatch, sync, buffering,
+                                                   kernel, hw_values)
 
     def sample(self, k: int, *, seed: int = 0) -> list[DesignPoint]:
         """``k`` distinct points drawn uniformly from the product space."""
@@ -143,14 +167,14 @@ class DesignSpace:
             combo = (
                 rng.choice(list(self.dispatch)),
                 rng.choice(list(self.sync)),
+                rng.choice(list(self.buffering)),
                 rng.choice(list(self.kernels)),
                 tuple(rng.choice(list(v)) for v in self.hw_axes.values()),
             )
             if combo in seen:
                 continue
             seen.add(combo)
-            points.append(self._make_point(combo[0], combo[1], combo[2],
-                                           combo[3]))
+            points.append(self._make_point(*combo))
         return points
 
     def baseline_point(self, kernel: str | None = None) -> DesignPoint:

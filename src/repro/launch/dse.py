@@ -53,6 +53,7 @@ def build_space(args) -> DesignSpace:
         hw_axes=hw_axes,
         dispatch=tuple(args.dispatch.split(",")),
         sync=tuple(args.sync.split(",")),
+        buffering=tuple(args.buffering.split(",")),
         kernels=tuple(args.kernels.split(",")),
     )
 
@@ -66,6 +67,10 @@ def main(argv=None) -> dict:
                          "(repeatable)")
     ap.add_argument("--dispatch", default="unicast,multicast")
     ap.add_argument("--sync", default="poll,credit")
+    ap.add_argument("--buffering", default="single",
+                    help="comma list of descriptor-buffering depths to sweep "
+                         "(single,double); double designs are scored on "
+                         "steady-state pipelined runtimes (DESIGN.md §7)")
     ap.add_argument("--kernels", default="daxpy",
                     help="comma list of registry kernels "
                          "(repro.kernels.ops.KERNELS)")

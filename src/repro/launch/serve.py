@@ -9,6 +9,7 @@ measured step times of the same run.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 48 --rate 2e6
   PYTHONPATH=src python -m repro.launch.serve --no-execute --requests 512
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --pipeline
 
 ``--one-shot`` keeps the original single-batch driver (one offline offload
 decision per run), used by examples/serve_batch.py and the equivalence test.
@@ -84,7 +85,8 @@ def serve_stream(args) -> dict:
     out = serve_workload(spec, arch=args.arch, reduced=args.reduced,
                          execute=not args.no_execute,
                          max_batch=args.max_batch, fabric=args.fabric,
-                         wave_boundary=args.wave_boundary)
+                         wave_boundary=args.wave_boundary,
+                         pipeline=args.pipeline, buffering=args.buffering)
 
     if args.verbose:
         for adm in out["admissions"]:
@@ -144,6 +146,13 @@ def main(argv=None):
                     help="disable mid-wave admission (legacy iteration-level "
                          "batching; the A/B baseline for the slot-managed "
                          "continuous loop)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="async fabric protocol: refill prefills dispatched "
+                         "under in-flight decode work on a double-buffered "
+                         "fabric (DESIGN.md §7)")
+    ap.add_argument("--buffering", choices=("single", "double"), default=None,
+                    help="fabric job-descriptor depth (default: double when "
+                         "--pipeline, else single)")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the real JAX engine (scheduler machinery only)")
     ap.add_argument("--fabric", choices=("simulated", "wallclock"),

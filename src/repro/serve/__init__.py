@@ -16,7 +16,11 @@ generation requests:
     batcher.ContinuousBatcher    -> slot-managed continuous batching with
                                     per-slot cache lengths and mid-wave
                                     admission (DESIGN.md §6); virtual
-                                    open-loop clock, optional real JAX engine
+                                    open-loop clock, optional real JAX
+                                    engine; pipeline=True drives the async
+                                    fabric protocol — refill prefills
+                                    overlap in-flight decode work on a
+                                    double-buffered fabric (DESIGN.md §7)
     metrics.ServeMetrics         -> throughput / p99 latency / SLO
                                     attainment / queue delay / occupancy /
                                     goodput
@@ -29,20 +33,21 @@ from __future__ import annotations
 
 import dataclasses
 
-from .batcher import ContinuousBatcher, ServingEngine
+from .batcher import ContinuousBatcher, PendingStep, ServingEngine
 from .calibrator import CalibrationSnapshot, OnlineCalibrator
-from .fabric import SimulatedFabric, WallClockFabric
+from .fabric import CompletedJob, SimulatedFabric, WallClockFabric
 from .metrics import ServeMetrics
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
 from .workload import CYCLES_PER_SECOND, WorkloadSpec, synthetic_workload
 
 __all__ = [
-    "AdmissionDecision", "BatchPlan", "CalibrationSnapshot",
+    "AdmissionDecision", "BatchPlan", "CalibrationSnapshot", "CompletedJob",
     "ContinuousBatcher", "CYCLES_PER_SECOND", "OffloadAwareScheduler",
-    "OnlineCalibrator", "Request", "RequestQueue", "RequestState",
-    "ServeMetrics", "ServingEngine", "SimulatedFabric", "WallClockFabric",
-    "WorkloadSpec", "serve_workload", "synthetic_workload",
+    "OnlineCalibrator", "PendingStep", "Request", "RequestQueue",
+    "RequestState", "ServeMetrics", "ServingEngine", "SimulatedFabric",
+    "WallClockFabric", "WorkloadSpec", "serve_workload",
+    "synthetic_workload",
 ]
 
 
@@ -60,6 +65,8 @@ def serve_workload(
     available_m=(1, 2, 4, 8, 16, 32),
     design=None,
     wave_boundary: bool = False,
+    pipeline: bool = False,
+    buffering: str | None = None,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
 
@@ -70,6 +77,14 @@ def serve_workload(
     ``wave_boundary=True`` disables mid-wave admission (the legacy
     iteration-level batching: requests join only at wave boundaries) — the
     A/B baseline for the continuous slot-managed loop (DESIGN.md §6).
+
+    ``pipeline=True`` upgrades the continuous loop to the asynchronous
+    fabric protocol (DESIGN.md §7): refill prefills are dispatched under
+    in-flight decode work on a double-buffered fabric, hiding the offload
+    constant that the sequential loop pays per refill.  ``buffering``
+    overrides the fabric's descriptor depth (defaults to ``"double"`` when
+    pipelining, ``"single"`` otherwise, or the design's own axis when
+    serving a swept point).
 
     ``fabric`` picks the timing source the clock/SLOs/calibrator run on:
     ``"simulated"`` (Manticore cycle model; Eq.-1 coefficients are
@@ -87,6 +102,9 @@ def serve_workload(
     spec = spec or WorkloadSpec()
     if design is not None and fabric != "simulated":
         raise ValueError("design= requires the simulated fabric")
+    if buffering is None:
+        buffering = (getattr(design, "buffering", None)
+                     or ("double" if pipeline else "single"))
     if calibrator is None:
         if design is not None:
             from repro.dse.runner import refit_design
@@ -99,6 +117,12 @@ def serve_workload(
             fabric_src = SimulatedFabric.for_design(design,
                                                     jitter_pct=jitter_pct,
                                                     seed=spec.seed)
+            if buffering != fabric_src.buffering:
+                fabric_src = SimulatedFabric(
+                    hw=fabric_src.hw, kernel=fabric_src.kernel,
+                    dispatch=fabric_src.dispatch, sync=fabric_src.sync,
+                    jitter_pct=jitter_pct, seed=spec.seed,
+                    buffering=buffering)
             # Plan host fallbacks against the design's own hardware/kernel.
             from repro.core import simulator as _sim
             host_model = lambda n: float(_sim.host_runtime(  # noqa: E731
@@ -109,7 +133,8 @@ def serve_workload(
             # identity at the paper's 32-cluster reference).
             fabric_src = SimulatedFabric(jitter_pct=jitter_pct,
                                          seed=spec.seed,
-                                         num_clusters=max(available_m))
+                                         num_clusters=max(available_m),
+                                         buffering=buffering)
             host_model = None  # Manticore host fallback (same cycle domain)
     elif fabric == "wallclock":
         if not execute:
@@ -144,7 +169,8 @@ def serve_workload(
     requests = synthetic_workload(spec, with_tokens=execute)
     batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
                                 engine=engine, max_batch=max_batch,
-                                wave_boundary=wave_boundary)
+                                wave_boundary=wave_boundary,
+                                pipeline=pipeline)
     out = batcher.run(requests)
     out["arch"] = arch
     out["spec"] = spec

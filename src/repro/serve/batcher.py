@@ -21,6 +21,16 @@ comparison: requests join only at wave boundaries (the pre-slot behaviour
 this subsystem documented as its next step), which is what the
 ``serve_scheduler`` benchmark uses as the baseline.
 
+``pipeline=True`` (DESIGN.md §7) upgrades the slot-managed loop to the
+asynchronous fabric protocol: a refill prefill is *submitted* (descriptor
+dispatched) and the decode of the already-running slots proceeds while the
+prefill executes on the fabric — the prefill's dispatch and sync phases
+hide under neighbouring work instead of serializing the loop, and
+``ServeMetrics`` records the hidden (overlap) and idle (bubble) cycles per
+job.  Token streams are bit-identical to the sequential paths: batch rows
+are independent (DESIGN.md §6), so overlapping changes *when* jobs run,
+never what they compute.
+
 The real-model engine is optional: ``engine=None`` runs the full
 queue/scheduler/calibrator/clock machinery without touching JAX (used by the
 pure-scheduler benchmarks), while ``ServingEngine`` compiles the repo's
@@ -46,6 +56,21 @@ from .fabric import SimulatedFabric, WallClockFabric
 from .metrics import ServeMetrics
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import BatchPlan, OffloadAwareScheduler
+
+
+@dataclasses.dataclass
+class PendingStep:
+    """A dispatched-but-not-awaited engine step (non-blocking JAX dispatch).
+
+    The compiled computation is in flight on the devices; ``out`` holds the
+    future arrays (including the credit scalar).  Blocking — and the
+    measurement of the residual wait — happens in ``ServingEngine.wait_step``,
+    which is what lets the pipelined serving loop dispatch further host work
+    while the step executes (DESIGN.md §7).
+    """
+
+    out: dict
+    dispatch_s: float = 0.0        # measured operand-placement seconds
 
 
 class ServingEngine:
@@ -164,14 +189,15 @@ class ServingEngine:
         return (np.asarray(out["next_token"]), out["caches"],
                 dstats.seconds + wait_s)
 
-    def prefill_into_slots(self, tokens: np.ndarray, caches,
-                           slot_mask: np.ndarray,
-                           metrics: ServeMetrics | None = None):
-        """Prefill the ``slot_mask`` rows of ``tokens`` into live ``caches``.
+    def prefill_into_slots_async(self, tokens: np.ndarray, caches,
+                                 slot_mask: np.ndarray,
+                                 metrics: ServeMetrics | None = None
+                                 ) -> PendingStep:
+        """Dispatch a prefill-into-slots step without blocking on it.
 
-        The mid-wave admission path (DESIGN.md §6): rows of still-running
-        requests keep their KV state bit-for-bit; returns
-        (next_token (B,), merged caches, wall_s) like :meth:`prefill`.
+        The returned :class:`PendingStep` holds the in-flight outputs; the
+        host is free to dispatch further work (the pipelined loop's decode
+        of the already-running slots) before calling :meth:`wait_step`.
         """
         jnp = self._jnp
         with self.mesh:
@@ -182,9 +208,19 @@ class ServingEngine:
                 metrics.record_dispatch(dstats)
             out = fn(self.params, {"tokens": placed}, caches,
                      jnp.asarray(slot_mask, bool))
-            _, wait_s = self.sync.timed_wait(out["credits"])
-        return (np.asarray(out["next_token"]), out["caches"],
-                dstats.seconds + wait_s)
+        return PendingStep(out=out, dispatch_s=dstats.seconds)
+
+    def prefill_into_slots(self, tokens: np.ndarray, caches,
+                           slot_mask: np.ndarray,
+                           metrics: ServeMetrics | None = None):
+        """Prefill the ``slot_mask`` rows of ``tokens`` into live ``caches``.
+
+        The mid-wave admission path (DESIGN.md §6): rows of still-running
+        requests keep their KV state bit-for-bit; returns
+        (next_token (B,), merged caches, wall_s) like :meth:`prefill`.
+        """
+        return self.wait_step(
+            self.prefill_into_slots_async(tokens, caches, slot_mask, metrics))
 
     def warmup(self, prompt_lens, *, slots: bool = False) -> None:
         """Compile every prompt-length bucket (and the decode step) upfront.
@@ -212,6 +248,17 @@ class ServingEngine:
             except FaultDetected:  # pragma: no cover - warmup is best-effort
                 pass
 
+    def decode_async(self, tok: np.ndarray, caches, lens) -> PendingStep:
+        """Dispatch one decode step without blocking on its completion."""
+        jnp = self._jnp
+        lens = np.asarray(lens, np.int32)
+        if lens.ndim == 0:
+            lens = np.full((self.max_batch,), int(lens), np.int32)
+        with self.mesh:
+            out = self._dec_jit(self.params, jnp.asarray(tok), caches,
+                                jnp.asarray(lens))
+        return PendingStep(out=out)
+
     def decode(self, tok: np.ndarray, caches, lens):
         """tok (max_batch, 1) int32 -> (next_token (B,), caches, wall_s).
 
@@ -220,15 +267,41 @@ class ServingEngine:
         ``wall_s`` is the CreditCounterSync blocking wait on the credit
         scalar — the host-observed completion latency of the step.
         """
-        jnp = self._jnp
-        lens = np.asarray(lens, np.int32)
-        if lens.ndim == 0:
-            lens = np.full((self.max_batch,), int(lens), np.int32)
+        return self.wait_step(self.decode_async(tok, caches, lens))
+
+    def step_ready(self, pending: PendingStep) -> bool:
+        """Non-blocking completion probe of an in-flight step."""
+        is_ready = getattr(pending.out["credits"], "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else False
+
+    def wait_step(self, pending: PendingStep):
+        """Block on a dispatched step; returns (next_token, caches, wall_s).
+
+        ``wall_s`` is the dispatch seconds (when the step placed operands)
+        plus the *residual* blocking wait — time the step spent executing
+        while the host was busy elsewhere is excluded, so under the
+        pipelined loop this is the effective (overlap-excluded) measurement
+        a WallClockFabric feeds the calibrator.
+        """
         with self.mesh:
-            out = self._dec_jit(self.params, jnp.asarray(tok), caches,
-                                jnp.asarray(lens))
-            _, wait_s = self.sync.timed_wait(out["credits"])
-        return np.asarray(out["next_token"]), out["caches"], wait_s
+            _, wait_s = self.sync.timed_wait(pending.out["credits"])
+        return (np.asarray(pending.out["next_token"]), pending.out["caches"],
+                pending.dispatch_s + wait_s)
+
+
+@dataclasses.dataclass
+class _InflightPrefill:
+    """A submitted-but-not-retired refill prefill (pipelined loop)."""
+
+    handle: object                 # async-fabric job handle
+    plan: BatchPlan
+    batch: list                    # the admitted requests
+    take: list                     # their target slots
+    prompt_len: int
+    tokens: np.ndarray | None = None   # real-engine inputs (deferred dispatch)
+    mask: np.ndarray | None = None
+    pending: PendingStep | None = None
+    overlapped: int = 0            # decode steps run under this prefill
 
 
 class ContinuousBatcher:
@@ -240,17 +313,32 @@ class ContinuousBatcher:
                  engine: ServingEngine | None = None,
                  max_batch: int | None = None,
                  metrics: ServeMetrics | None = None,
-                 wave_boundary: bool = False):
+                 wave_boundary: bool = False,
+                 pipeline: bool = False):
         self.scheduler = scheduler
         self.calibrator = calibrator
-        self.fabric = fabric or SimulatedFabric()
+        self.fabric = fabric or SimulatedFabric(
+            buffering="double" if pipeline else "single")
         self.engine = engine
         self.max_batch = (engine.max_batch if engine is not None
                           else (max_batch or 4))
         if engine is not None and max_batch not in (None, engine.max_batch):
             raise ValueError("max_batch conflicts with engine.max_batch")
         self.metrics = metrics or ServeMetrics()
+        if pipeline and wave_boundary:
+            raise ValueError("pipeline and wave_boundary are exclusive")
+        if pipeline and not hasattr(self.fabric, "submit"):
+            raise ValueError("pipeline=True needs a fabric speaking the "
+                             "async protocol (submit/ready/complete)")
         self.wave_boundary = wave_boundary
+        self.pipeline = pipeline
+        # With a real engine attached, at most one decode may overlap an
+        # in-flight prefill: the prefill is chained on that decode's cache
+        # future (JAX buffer donation makes the cache pytree a linear
+        # chain), so a second decode would consume the merged caches before
+        # its slots are placed.  The pure-virtual loop has no such chain
+        # and keeps decoding until the prefill's completion time.
+        self._max_overlap_steps = float("inf") if engine is None else 1
 
     # ------------------------------------------------------------------ #
     def _form_wave(self, queue: RequestQueue, clock: float,
@@ -390,6 +478,8 @@ class ContinuousBatcher:
                     continue  # everything that had arrived was rejected
                 m.waves += 1
                 clock = self._serve_wave(wave, queue, clock)
+        elif self.pipeline:
+            clock = self._run_pipelined(queue, clock)
         else:
             clock = self._run_continuous(queue, clock)
 
@@ -470,38 +560,34 @@ class ContinuousBatcher:
                 if emitted[i] >= slots[i].gen_len:
                     finish(i, clock)
 
-    def _prefill_slots(self, batch: list[Request], take: list[int],
-                       slots, emitted, gen_buf, lens, tok,
-                       clock: float, caches):
-        """One prefill job placing ``batch`` into the free ``take`` slots.
-
-        Returns ``(clock, caches)`` — the advanced virtual clock and the
-        (merged) live caches.
-        """
-        m = self.metrics
+    def _plan_prefill(self, batch: list[Request],
+                      clock: float) -> tuple[BatchPlan, int]:
+        """Queue-delay accounting + Eq.-3 plan for one admission batch,
+        shared by the sequential and pipelined prefill paths."""
         prompt_len = batch[0].prompt_len
         n_job = sum(r.n_prompt_elems for r in batch)
         slos = [r.slo_cycles for r in batch if r.slo_cycles is not None]
         deadline = min(slos) if slos else None
         for r in batch:
-            m.queue_delay_cycles.add(clock - r.arrival)
-
+            self.metrics.queue_delay_cycles.add(clock - r.arrival)
         plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
-        wall = None
-        next_tok = None
-        if self.engine is not None:
-            tokens = np.zeros((self.max_batch, prompt_len), np.int32)
-            mask = np.zeros(self.max_batch, bool)
-            for slot, r in zip(take, batch):
-                tokens[slot] = r.tokens
-                mask[slot] = True
-            next_tok, caches, wall = self.engine.prefill_into_slots(
-                tokens, caches, mask, m)
-            m.step_wall_s.add(wall)
-        t_job = self._job_runtime(plan, wall)
-        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
-        clock += t_job
+        return plan, prompt_len
 
+    def _stage_prefill_inputs(self, batch: list[Request], take: list[int],
+                              prompt_len: int):
+        """Padded token batch + slot mask for a prefill-into-slots step."""
+        tokens = np.zeros((self.max_batch, prompt_len), np.int32)
+        mask = np.zeros(self.max_batch, bool)
+        for slot, r in zip(take, batch):
+            tokens[slot] = r.tokens
+            mask[slot] = True
+        return tokens, mask
+
+    def _place_prefilled(self, batch: list[Request], take: list[int],
+                         slots, emitted, gen_buf, lens, tok,
+                         t_job: float, clock: float, next_tok) -> None:
+        """Install a completed prefill's requests into their slots, with
+        per-request TTFT/SLO/first-token accounting."""
         for slot, r in zip(take, batch):
             slots[slot] = r
             emitted[slot] = 1          # the prefill emits the first token
@@ -511,6 +597,204 @@ class ContinuousBatcher:
             if next_tok is not None:
                 tok[slot, 0] = next_tok[slot]
                 gen_buf[slot].append(int(next_tok[slot]))
+
+    def _prefill_slots(self, batch: list[Request], take: list[int],
+                       slots, emitted, gen_buf, lens, tok,
+                       clock: float, caches):
+        """One prefill job placing ``batch`` into the free ``take`` slots.
+
+        Returns ``(clock, caches)`` — the advanced virtual clock and the
+        (merged) live caches.
+        """
+        plan, prompt_len = self._plan_prefill(batch, clock)
+        wall = None
+        next_tok = None
+        if self.engine is not None:
+            tokens, mask = self._stage_prefill_inputs(batch, take, prompt_len)
+            next_tok, caches, wall = self.engine.prefill_into_slots(
+                tokens, caches, mask, self.metrics)
+            self.metrics.step_wall_s.add(wall)
+        t_job = self._job_runtime(plan, wall)
+        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
+        clock += t_job
+        self._place_prefilled(batch, take, slots, emitted, gen_buf, lens,
+                              tok, t_job, clock, next_tok)
+        return clock, caches
+
+    # ------------------------------------------------------------------ #
+    # Pipelined serving loop (async fabric protocol) — DESIGN.md §7
+    # ------------------------------------------------------------------ #
+    def _complete(self, handle, wall_s: float | None = None):
+        """Retire one async-fabric job; returns its CompletedJob."""
+        if isinstance(self.fabric, WallClockFabric):
+            return self.fabric.complete(handle, wall_s)
+        return self.fabric.complete(handle)
+
+    def _run_pipelined(self, queue: RequestQueue, clock: float) -> float:
+        """Slot-managed serving with refill prefills overlapped under the
+        in-flight decode work (and vice versa).
+
+        Per iteration: an admission batch's prefill is *submitted* (its
+        descriptor dispatch occupies the host, its execution the fabric)
+        and decode steps of the already-occupied slots keep running — on
+        the engine timeline the host decode jobs slot into the idle window
+        while the prefill executes, which is exactly the overhead the
+        sequential loop serializes.  The prefill is retired once its
+        completion time has passed (pure-virtual mode) or after the one
+        decode its cache chain allows (real engine); its slots join the
+        next decode, same as the sequential loop.
+        """
+        m = self.metrics
+        nb = self.max_batch
+        slots: list[Request | None] = [None] * nb
+        emitted = [0] * nb
+        gen_buf: list[list[int]] = [[] for _ in range(nb)]
+        lens = np.zeros(nb, np.int32)
+        tok = np.zeros((nb, 1), np.int32)
+        caches = self.engine.init_caches() if self.engine is not None else None
+        inflight: _InflightPrefill | None = None
+
+        def occupied() -> list[int]:
+            return [i for i in range(nb) if slots[i] is not None]
+
+        def finish(i: int, now: float) -> None:
+            self._complete_request(slots[i], queue, now, gen_buf[i])
+            slots[i] = None
+
+        while True:
+            if inflight is None:
+                free = [i for i in range(nb) if slots[i] is None]
+                if free and queue.arrived(clock):
+                    batch = self._form_wave(queue, clock, limit=len(free))
+                    if batch:
+                        inflight = self._submit_prefill(
+                            batch, free[:len(batch)], clock,
+                            bool(occupied()))
+
+            occ = occupied()
+            if not occ:
+                if inflight is not None:
+                    clock, caches = self._retire_prefill(
+                        inflight, queue, slots, emitted, gen_buf, lens, tok,
+                        clock, caches, finish)
+                    inflight = None
+                    continue
+                if queue.empty:
+                    return clock
+                nxt = queue.next_arrival()
+                if nxt is None:  # pragma: no cover - defensive
+                    return clock
+                clock = max(clock, nxt)
+                continue
+
+            # One decode step over the occupied slots, overlapped under the
+            # in-flight prefill when there is one.
+            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode")
+            pending_d = None
+            wall = None
+            if self.engine is not None:
+                pending_d = self.engine.decode_async(tok, caches, lens)
+                if inflight is not None and inflight.pending is None:
+                    # Chain the refill prefill on the decode's cache future:
+                    # the merge overwrites the refilled rows after the
+                    # decode's scatter, so running rows stay bit-identical.
+                    inflight.pending = self.engine.prefill_into_slots_async(
+                        inflight.tokens, pending_d.out["caches"],
+                        inflight.mask, m)
+                    if hasattr(inflight.handle, "probe"):
+                        # Wallclock handles learn readiness from the real
+                        # in-flight step (jax.Array.is_ready on the credits).
+                        pending_p = inflight.pending
+                        inflight.handle.probe = (
+                            lambda: self.engine.step_ready(pending_p))
+            handle_d = self.fabric.submit(
+                plan.m if plan.offload else None, plan.n_elems,
+                t_submit=clock, offload=plan.offload)
+            if self.engine is not None:
+                next_tok, caches_d, wall = self.engine.wait_step(pending_d)
+                m.step_wall_s.add(wall)
+                if inflight is None or inflight.pending is None:
+                    caches = caches_d
+                # else: the decode's caches were donated into the in-flight
+                # prefill; the merged pytree arrives when it retires.
+            job = self._complete(handle_d, wall)
+            self._account_job(plan, job.effective,
+                              self._executed_n(plan, None))
+            m.record_job_pipeline(job)
+            m.slot_occupancy.add(len(occ) / nb)
+            clock = max(clock, job.t_done)
+            for i in occ:
+                lens[i] += 1
+                emitted[i] += 1
+                m.tokens_generated += 1
+                if self.engine is not None:
+                    tok[i, 0] = next_tok[i]
+                    gen_buf[i].append(int(next_tok[i]))
+                if emitted[i] >= slots[i].gen_len:
+                    finish(i, clock)
+
+            if inflight is not None:
+                inflight.overlapped += 1
+                if (self.fabric.ready(inflight.handle, clock)
+                        or inflight.overlapped >= self._max_overlap_steps
+                        or not occupied()):
+                    clock, caches = self._retire_prefill(
+                        inflight, queue, slots, emitted, gen_buf, lens, tok,
+                        clock, caches, finish)
+                    inflight = None
+
+    def _submit_prefill(self, batch: list[Request], take: list[int],
+                        clock: float, mid_wave: bool) -> "_InflightPrefill":
+        """Plan + submit one refill prefill on the async fabric.
+
+        The real-engine dispatch is deferred (``pending=None``) so it can be
+        chained behind the decode it overlaps; the virtual handle is
+        scheduled immediately — on the engine timeline the host dispatches
+        the descriptor first, then runs decode work in its idle window.
+        """
+        m = self.metrics
+        m.waves += 1
+        if mid_wave:
+            m.mid_wave_admissions += len(batch)
+        plan, prompt_len = self._plan_prefill(batch, clock)
+        handle = self.fabric.submit(
+            plan.m if plan.offload else None, plan.n_elems,
+            t_submit=clock, offload=plan.offload)
+        tokens = mask = None
+        if self.engine is not None:
+            tokens, mask = self._stage_prefill_inputs(batch, take, prompt_len)
+        return _InflightPrefill(handle=handle, plan=plan, batch=batch,
+                                take=take, prompt_len=prompt_len,
+                                tokens=tokens, mask=mask)
+
+    def _retire_prefill(self, inflight: "_InflightPrefill",
+                        queue: RequestQueue, slots, emitted, gen_buf, lens,
+                        tok, clock: float, caches, finish):
+        """Complete an in-flight prefill and place its requests into slots."""
+        m = self.metrics
+        wall = None
+        next_tok = None
+        if self.engine is not None:
+            if inflight.pending is None:
+                # Nothing overlapped it (idle fabric): dispatch now.
+                inflight.pending = self.engine.prefill_into_slots_async(
+                    inflight.tokens, caches, inflight.mask, m)
+            next_tok, caches, wall = self.engine.wait_step(inflight.pending)
+            m.step_wall_s.add(wall)
+        job = self._complete(inflight.handle, wall)
+        plan = inflight.plan
+        self._account_job(plan, job.effective,
+                          self._executed_n(plan, inflight.prompt_len))
+        m.record_job_pipeline(job)
+        if job.overlap > 0 or inflight.overlapped > 0:
+            m.pipelined_prefills += 1
+        clock = max(clock, job.t_done)
+
+        self._place_prefilled(inflight.batch, inflight.take, slots, emitted,
+                              gen_buf, lens, tok, job.total, clock, next_tok)
+        for slot, r in zip(inflight.take, inflight.batch):
+            if slots[slot] is r and emitted[slot] >= r.gen_len:
+                finish(slot, clock)
         return clock, caches
 
     # ------------------------------------------------------------------ #

@@ -64,6 +64,8 @@ class ServeMetrics:
     mid_wave_admissions: int = 0  # requests admitted while others ran
     tokens_generated: int = 0
     goodput_completed: int = 0    # completed with SLO met (or no SLO)
+    # Pipelined-serving counters (DESIGN.md §7).
+    pipelined_prefills: int = 0   # prefills dispatched under in-flight work
     # Fabric-cycle recorders.
     latency_cycles: Recorder = field(default_factory=Recorder)
     ttft_cycles: Recorder = field(default_factory=Recorder)
@@ -72,6 +74,12 @@ class ServeMetrics:
     # prefill start, cycles) and occupied-slot fraction per decode job.
     queue_delay_cycles: Recorder = field(default_factory=Recorder)
     slot_occupancy: Recorder = field(default_factory=Recorder)
+    # Pipelined-serving series (DESIGN.md §7), one point per job: host
+    # cycles that ran hidden under another job's fabric execution, and
+    # fabric idle cycles inserted before the job's execution (the pipeline
+    # bubble double buffering is meant to squeeze out).
+    overlap_cycles: Recorder = field(default_factory=Recorder)
+    bubble_cycles: Recorder = field(default_factory=Recorder)
     # Wall-clock recorders (engine-attached runs only).
     step_wall_s: Recorder = field(default_factory=Recorder)
     dispatch_wall_s: Recorder = field(default_factory=Recorder)
@@ -87,6 +95,11 @@ class ServeMetrics:
         self.dispatch_wall_s.add(stats.seconds)
         self.dispatch_bytes += stats.bytes_moved
         self.dispatch_calls += stats.num_host_calls
+
+    def record_job_pipeline(self, job) -> None:
+        """Accumulate one CompletedJob's overlap/bubble (pipelined loop)."""
+        self.overlap_cycles.add(job.overlap)
+        self.bubble_cycles.add(job.bubble)
 
     def span_cycles(self) -> float:
         return max(self.t_end - self.t_start, 1e-9)
@@ -125,6 +138,12 @@ class ServeMetrics:
             },
             "slo_attainment": (self.slo_met / slo_total
                                if slo_total else None),
+            "pipeline": {
+                "pipelined_prefills": self.pipelined_prefills,
+                "overlap_total_cycles": self.overlap_cycles.total(),
+                "overlap_mean_cycles": self.overlap_cycles.mean(),
+                "bubble_total_cycles": self.bubble_cycles.total(),
+            },
             "wall": {
                 "steps": len(self.step_wall_s),
                 "step_p50_ms": _ms(self.step_wall_s.percentile(50)),
@@ -156,6 +175,12 @@ class ServeMetrics:
                 f"slots: mean occupancy "
                 f"{100 * s['slot_occupancy']['mean']:.0f}%, "
                 f"{s['mid_wave_admissions']} mid-wave admissions")
+        if len(self.overlap_cycles):
+            lines.append(
+                f"pipeline: {s['pipeline']['pipelined_prefills']} overlapped "
+                f"prefills, {s['pipeline']['overlap_total_cycles']:.0f} cy "
+                f"hidden, {s['pipeline']['bubble_total_cycles']:.0f} cy "
+                "bubble")
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
                          f"({self.slo_met}/{self.slo_met + self.slo_missed})")

@@ -15,6 +15,14 @@ queue: a deadline below the serial floor (slack = t_max - alpha - beta*N
 <= 0), or needing more clusters than the fabric has, is infeasible for every
 batch the request could ever join — reject it immediately instead of letting
 it occupy a slot and miss.
+
+Pipelined serving (DESIGN.md §7) changes what the calibrator's samples
+*mean*, not the scheduler's math: the batcher feeds completion-to-completion
+effective times, so on a saturated double-buffered fabric the fitted
+constant converges to α_eff (the wakeup latency) instead of the closed-form
+α — Eq.-3 extents and admission then price the steady-state service a job
+actually receives in the pipeline.  A pipelined prior can be seeded with
+``runtime_model.fit_pipelined_from_engine``.
 """
 
 from __future__ import annotations

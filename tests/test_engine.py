@@ -1,0 +1,210 @@
+"""Tests for the discrete-event offload engine (repro.core.engine).
+
+The load-bearing property is the equivalence guard: with single buffering
+and one isolated job, the engine must reproduce ``simulate_offload``'s
+closed-form cycle count *exactly* for every combination of dispatch, sync,
+kernel, and HWParams — the engine and the closed form share the phase
+helpers, and this test keeps that invariant honest under refactors.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from proptest_fallback import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import simulator as sim
+from repro.core.runtime_model import fit, fit_pipelined_from_engine, mape
+
+HW_DEFAULT = sim.HWParams()
+ADAMW_ISH = sim.KernelSpec(name="fused_adamw_ish", bytes_per_elem=48,
+                           cycles_per_elem=7.5, host_cycles_per_elem=11.0)
+
+
+def submit_stream(engine, k, m=32, n=2048, *, dispatch="multicast",
+                  sync="credit", kernel=sim.DAXPY):
+    return [
+        engine.submit(n, m_clusters=m, dispatch=dispatch, sync=sync,
+                      kernel=kernel, t_submit=0.0)
+        for _ in range(k)
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# Equivalence guard: single-buffered single job == closed form, exactly
+# --------------------------------------------------------------------------- #
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=1 << 14),
+    dispatch=st.sampled_from(sim.DISPATCH_MODES),
+    sync=st.sampled_from(sim.SYNC_MODES),
+    kernel=st.sampled_from([sim.DAXPY, ADAMW_ISH]),
+    host_setup=st.integers(min_value=1, max_value=600),
+    wakeup=st.integers(min_value=1, max_value=200),
+    bus=st.integers(min_value=8, max_value=512),
+    cores=st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=200, deadline=None)
+def test_single_job_matches_closed_form_exactly(m, n, dispatch, sync, kernel,
+                                                host_setup, wakeup, bus,
+                                                cores):
+    import dataclasses
+    hw = dataclasses.replace(HW_DEFAULT, host_setup=host_setup,
+                             cluster_wakeup=wakeup, bus_bytes_per_cycle=bus,
+                             cores_per_cluster=cores)
+    closed = sim.simulate_offload(m, n, dispatch=dispatch, sync=sync, hw=hw,
+                                  kernel=kernel)
+    rec = eng.OffloadEngine(hw=hw, buffering="single").submit(
+        n, m_clusters=m, dispatch=dispatch, sync=sync, kernel=kernel)
+    assert rec.t_done == closed.total
+    assert rec.total == closed.total
+    assert rec.effective == closed.total
+    assert rec.dispatch_done == closed.dispatch_done
+    assert rec.exec_done == closed.makespan
+    assert rec.sync_done == closed.sync_done
+    assert rec.overlap == 0.0 and rec.bubble == 0.0
+
+
+def test_single_buffering_serializes_to_sum_of_closed_forms():
+    total = sim.offload_runtime(32, 1024, multicast=True)
+    engine = eng.OffloadEngine(buffering="single")
+    recs = submit_stream(engine, 5, n=1024)
+    assert recs[-1].t_done == 5 * total
+    assert all(r.effective == total for r in recs)
+
+
+# --------------------------------------------------------------------------- #
+# Double buffering: overlap and the α_eff regime
+# --------------------------------------------------------------------------- #
+def test_double_buffering_hides_at_least_the_dispatch_phase():
+    """Acceptance: for back-to-back jobs, double-buffered descriptors hide
+    >= the dispatch phase (fabric-bound regime)."""
+    hw = HW_DEFAULT
+    for m, n in [(32, 2048), (8, 1024), (32, 8192), (1, 4096)]:
+        k = 6
+        single = eng.OffloadEngine(hw=hw, buffering="single")
+        double = eng.OffloadEngine(hw=hw, buffering="double")
+        t_single = submit_stream(single, k, m=m, n=n)[-1].t_done
+        t_double = submit_stream(double, k, m=m, n=n)[-1].t_done
+        d = sim.dispatch_cycles(m, "multicast", hw)
+        assert t_single - t_double >= (k - 1) * d, (m, n)
+
+
+def test_double_buffering_steady_state_alpha_is_wakeup():
+    """Fabric-bound steady periods collapse to wakeup + beta*N + gamma*N/M."""
+    hw = HW_DEFAULT
+    for m, n in [(32, 2048), (4, 4096), (16, 8192)]:
+        period = eng.steady_runtime(m, n, hw=hw)
+        exec_c = sim.exec_cycles(m, n, hw, sim.DAXPY)
+        assert period == exec_c  # wakeup + DMA + compute, nothing else
+        hidden = sim.offload_runtime(m, n, multicast=True, hw=hw) - period
+        d, (s, r) = (sim.dispatch_cycles(m, "multicast", hw),
+                     sim.sync_cycles("credit", hw))
+        assert hidden == d + s + r
+
+
+def test_poll_sync_cannot_overlap():
+    """A busy-polling host is occupied for the whole job: double buffering
+    buys nothing (the engine's model of why the credit counter matters)."""
+    t_single = eng.steady_runtime(32, 2048, sync="poll", buffering="single")
+    t_double = eng.steady_runtime(32, 2048, sync="poll", buffering="double")
+    assert t_single == t_double
+
+
+def test_overlap_and_bubble_accounting():
+    engine = eng.OffloadEngine(buffering="double")
+    first, second = submit_stream(engine, 2, m=32, n=4096)
+    # The second dispatch runs entirely under the first job's execution.
+    d = sim.dispatch_cycles(32, "multicast", HW_DEFAULT)
+    assert second.overlap == d
+    assert second.bubble == 0.0    # execution follows back-to-back
+    util = engine.utilization()
+    assert util["overlap_total"] == second.overlap
+    assert util["fabric_busy"] == pytest.approx(
+        2 * sim.exec_cycles(32, 4096, HW_DEFAULT, sim.DAXPY))
+
+
+def test_host_job_runs_in_dispatch_gap_under_executing_offload():
+    """A host-fallback job (tiny decode) fits in the host's idle window
+    while an offload executes on the fabric — the pipelined serving win."""
+    engine = eng.OffloadEngine(buffering="double")
+    pre = engine.submit(1024, m_clusters=32, dispatch="multicast",
+                        sync="credit", t_submit=0.0)
+    dec = engine.submit(4, offload=False, t_submit=0.0)
+    assert dec.dispatch_start == pre.dispatch_done
+    assert dec.t_done <= pre.sync_done
+    assert dec.overlap == dec.t_done - dec.dispatch_start
+    # The offload's completion is unaffected by the interleaved host job.
+    assert pre.t_done == sim.offload_runtime(32, 1024, multicast=True)
+
+
+def test_poll_sync_busy_wait_never_double_books_the_host():
+    """A poll offload's busy-wait span must fit one idle host window: with
+    a host job already reserved in the future, the offload may not schedule
+    its dispatch in the earlier gap and busy-wait straight through the
+    reservation."""
+    engine = eng.OffloadEngine()
+    host_job = engine.submit(10000, offload=False, t_submit=500.0)
+    poll_job = engine.submit(4096, m_clusters=32, dispatch="multicast",
+                             sync="poll", t_submit=0.0)
+    spans = [(host_job.dispatch_start, host_job.t_done),
+             (poll_job.dispatch_start, poll_job.t_done)]
+    (a0, a1), (b0, b1) = spans
+    assert a1 <= b0 or b1 <= a0   # host intervals must not overlap
+    # And the busy-wait span still prices exactly one closed-form job.
+    assert poll_job.total == sim.offload_runtime(
+        32, 4096, dispatch="multicast", sync="poll")
+
+
+def test_poll_returns_jobs_in_completion_order():
+    engine = eng.OffloadEngine(buffering="double")
+    recs = submit_stream(engine, 3, m=8, n=2048)
+    assert engine.poll(recs[0].t_done) == [recs[0]]
+    assert engine.poll(recs[0].t_done) == []          # cursor advanced
+    assert engine.poll(recs[-1].t_done) == recs[1:]
+    assert engine.complete(recs[1]) is recs[1]
+
+
+def test_engine_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        eng.OffloadEngine(buffering="triple")
+    with pytest.raises(ValueError):
+        eng.OffloadEngine().submit(16, m_clusters=0)
+
+
+# --------------------------------------------------------------------------- #
+# Overlap-aware effective-α fit (runtime_model)
+# --------------------------------------------------------------------------- #
+def test_fit_pipelined_recovers_effective_alpha():
+    model, err = fit_pipelined_from_engine()
+    assert err <= 2.0
+    # The serial and parallel terms survive pipelining unchanged...
+    assert model.beta == pytest.approx(0.25, rel=0.05)
+    assert model.gamma == pytest.approx(2.6 / 8.0, rel=0.05)
+    # ...while the constant collapses from 367 to the wakeup latency.
+    assert model.alpha == pytest.approx(
+        eng.effective_alpha_floor(HW_DEFAULT), abs=5.0)
+
+
+def test_fit_pipelined_single_buffering_recovers_paper_alpha():
+    model, err = fit_pipelined_from_engine(buffering="single")
+    assert err <= 2.0
+    assert model.alpha == pytest.approx(367.0, abs=5.0)
+
+
+def test_saturated_effective_samples_fit_under_2pct():
+    """The serve-calibrator path: per-job effective times from a saturated
+    mixed (M, N) stream refit to <=2% MAPE (the pipelined-trace bar)."""
+    engine = eng.OffloadEngine(buffering="double")
+    samples = []
+    for n in sim.PIPELINE_N_GRID:
+        for m in (4, 8, 16, 32):
+            for _ in range(3):
+                rec = engine.submit(n, m_clusters=m, dispatch="multicast",
+                                    sync="credit", t_submit=0.0)
+                samples.append((m, n, rec.effective))
+    model = fit(samples)
+    assert mape(model, samples) <= 2.0
+    assert model.alpha < 100.0     # effective constant, not the 367 closed form

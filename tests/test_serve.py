@@ -360,6 +360,119 @@ def test_simulated_fabric_calibration_uses_planned_job_size():
     assert decode_ns <= sample_ns  # planned == observed job sizes
 
 
+# --------------------------------------------------------------------------- #
+# Pipelined serving (async fabric protocol) — DESIGN.md §7
+# --------------------------------------------------------------------------- #
+def test_pipelined_beats_midwave_on_same_trace():
+    """The tentpole A/B: hiding refill-prefill dispatch/sync under in-flight
+    decode work buys throughput on top of mid-wave admission."""
+    cont = serve_workload(STRAGGLER_SPEC, execute=False)
+    pipe = serve_workload(STRAGGLER_SPEC, execute=False, pipeline=True)
+    cs, ps = cont["metrics"].summary(), pipe["metrics"].summary()
+    assert ps["throughput_rps"] > cs["throughput_rps"]
+    assert ps["latency_us"]["p99"] <= cs["latency_us"]["p99"]
+    # The win comes from jobs actually overlapping on the engine timeline.
+    assert ps["pipeline"]["pipelined_prefills"] > 0
+    assert ps["pipeline"]["overlap_total_cycles"] > 0
+    # Same trace, same admission decisions, same completion set.
+    def outcome(out):
+        return {r.rid: r.reject_reason is not None for r in out["requests"]}
+    assert outcome(cont) == outcome(pipe)
+    assert cs["completed"] == ps["completed"]
+
+
+def test_pipelined_calibration_stays_under_2pct_mape():
+    out = serve_workload(STRAGGLER_SPEC, execute=False, pipeline=True)
+    snap = out["calibration"]
+    assert snap.source == "fitted"
+    assert snap.window_mape_pct is not None and snap.window_mape_pct <= 2.0
+
+
+def test_pipelined_metrics_overlap_and_bubble_series():
+    out = serve_workload(WorkloadSpec(num_requests=64, seed=11),
+                         execute=False, pipeline=True)
+    m = out["metrics"]
+    # One overlap/bubble point per job (prefills + decodes).
+    assert len(m.overlap_cycles) == len(out["plans"])
+    assert len(m.bubble_cycles) == len(out["plans"])
+    assert all(x >= 0 for x in m.overlap_cycles.series())
+    assert m.pipelined_prefills > 0
+    s = m.summary()
+    assert s["pipeline"]["overlap_total_cycles"] == pytest.approx(
+        m.overlap_cycles.total())
+    assert "pipeline:" in m.format_summary()
+
+
+def test_sequential_modes_record_no_overlap_series():
+    out = serve_workload(WorkloadSpec(num_requests=16, seed=3),
+                         execute=False)
+    m = out["metrics"]
+    assert len(m.overlap_cycles) == 0 and m.pipelined_prefills == 0
+    assert "pipeline:" not in m.format_summary()
+
+
+def test_pipeline_and_wave_boundary_are_exclusive():
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=AVAILABLE)
+    with pytest.raises(ValueError):
+        ContinuousBatcher(sched, cal, pipeline=True, wave_boundary=True)
+
+
+def test_simulated_fabric_async_protocol_roundtrip():
+    fab = SimulatedFabric(jitter_pct=0.0, buffering="double")
+    h1 = fab.submit(32, 1024, t_submit=0.0)
+    h2 = fab.submit(32, 1024, t_submit=0.0)
+    assert not fab.ready(h1, h1.t_done - 1) and fab.ready(h1, h1.t_done)
+    j1, j2 = fab.complete(h1), fab.complete(h2)
+    assert j1.total == fab.offload(32, 1024)  # jitter off: closed form
+    assert j2.overlap > 0                      # dispatch hid under exec of j1
+    assert j2.t_done - j1.t_done < j1.total    # back-to-back beats blocking
+
+
+def test_wallclock_fabric_async_needs_measurement():
+    from repro.serve import WallClockFabric
+    fab = WallClockFabric()
+    h = fab.submit(4, 128, t_submit=100.0)
+    with pytest.raises(RuntimeError):
+        fab.complete(h)
+    job = fab.complete(h, wall_s=1e-6)
+    assert job.total == pytest.approx(1000.0)  # 1 us at 1 GHz
+    assert job.t_done == pytest.approx(1100.0)
+
+
+@pytest.mark.slow
+def test_pipelined_tokens_match_continuous_with_real_engine():
+    """Acceptance: mixed prefill/decode in-flight jobs produce bit-identical
+    tokens to the sequential slot-managed path (real engine)."""
+    from repro.serve import ServingEngine
+
+    arch = "chatglm3-6b"
+    rng = np.random.default_rng(5)
+    spec = [(8, 5, 0.0), (4, 3, 0.0), (8, 2, 1500.0), (4, 6, 3000.0),
+            (8, 4, 9000.0)]
+    prompts = {i: rng.integers(0, 128, size=(pl,), dtype=np.int32)
+               for i, (pl, _, _) in enumerate(spec)}
+
+    def run(pipeline):
+        engine = ServingEngine(arch, reduced=True, max_batch=3, max_len=16)
+        cal = OnlineCalibrator()
+        sched = OffloadAwareScheduler(cal, available_m=AVAILABLE)
+        fabric = SimulatedFabric(jitter_pct=0.0,
+                                 buffering="double" if pipeline else "single")
+        b = ContinuousBatcher(sched, cal, fabric=fabric, engine=engine,
+                              pipeline=pipeline)
+        reqs = [Request(rid=i, arrival=arr, prompt_len=pl, gen_len=g,
+                        tokens=prompts[i])
+                for i, (pl, g, arr) in enumerate(spec)]
+        return b.run(reqs)
+
+    cont, pipe = run(False), run(True)
+    assert pipe["metrics"].pipelined_prefills > 0  # prefills really in flight
+    for rc, rp in zip(cont["requests"], pipe["requests"]):
+        assert rc.rid == rp.rid
+        np.testing.assert_array_equal(rc.generated, rp.generated)
+
+
 @pytest.mark.slow
 def test_continuous_mixed_length_slots_match_wave_boundary_tokens():
     """Acceptance: mixed-length slots produce identical tokens to the
