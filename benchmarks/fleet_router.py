@@ -1,0 +1,144 @@
+"""Fleet-router benchmark: model-driven routing A/B + composition sweep.
+
+Three experiments on the same prefill-heavy straggler trace (DESIGN.md §8):
+
+  * **Router A/B** — a heterogeneous big+little fleet (32 + 8 + 8 clusters)
+    served under the three routing policies: ``model`` (per-fabric Eq.-1
+    predicted completion), ``lql`` (least-queued-lane, speed-blind), and
+    ``rr`` (round-robin, fully blind).  The headline records are the
+    model-vs-rr throughput gain and p99 delta; the trace carries no SLOs so
+    all three policies complete the identical request set and the
+    comparison is apples to apples.
+  * **Single-fabric identity** — a homogeneous fleet of ONE reference
+    fabric must reproduce the single-fabric pipelined serving numbers
+    *exactly* (same trace as ``benchmarks/serve_scheduler.py``): the fleet
+    layer composes the existing machinery, it must not perturb it.
+  * **Composition sweep** — the fleet-composition axis (``repro.dse.fleet``):
+    partitions of the 32-cluster budget {1x32, 2x16, 4x8, 16+8+8} served
+    end to end and Pareto-scored on (throughput, p99, silicon cost).
+
+Prints human summaries and returns machine-readable records
+(section, name, value, unit) for ``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.dse.fleet import (FleetSpace, fleet_front, summarize_fleets,
+                             sweep_fleets)
+from repro.serve import WorkloadSpec, serve_fleet, serve_workload
+
+#: The straggler trace of the single-fabric serving A/B — the identity
+#: check replays it through a 1x32 fleet (benchmarks/serve_scheduler.py).
+from benchmarks.serve_scheduler import AB_SPEC as SINGLE_AB_SPEC
+from benchmarks.serve_scheduler import SMOKE_SPEC as SINGLE_SMOKE_SPEC
+
+#: The heterogeneous A/B fleet: one big fabric + two littles (DESIGN.md §8).
+AB_FLEET = (32, 8, 8)
+#: Prefill-heavy straggler trace: long mixed prompts stress the per-fabric
+#: service-time asymmetry the model router exploits; no SLOs, so completion
+#: sets are identical across policies.
+AB_SPEC = WorkloadSpec(num_requests=512, rate_rps=2e6,
+                       prompt_lens=(1024, 2048, 4096, 8192),
+                       gen_lens=(4, 16, 64), slo_fraction=0.0, seed=7)
+#: Tiny-extent variant for the CI smoke tier.
+SMOKE_SPEC = WorkloadSpec(num_requests=128, rate_rps=2e6,
+                          prompt_lens=(1024, 2048, 4096, 8192),
+                          gen_lens=(4, 16, 64), slo_fraction=0.0, seed=7)
+
+POLICIES = ("model", "lql", "rr")
+
+
+def _rec(records, name, value, unit):
+    records.append({"section": "fleet_router", "name": name,
+                    "value": float(value), "unit": unit})
+
+
+def run_ab(spec: WorkloadSpec, records: list[dict]) -> dict:
+    """The heterogeneous router A/B; returns per-policy summaries."""
+    outs = {}
+    for policy in POLICIES:
+        t0 = time.perf_counter()
+        out = serve_fleet(spec, fleet=AB_FLEET, router=policy, pipeline=True)
+        dt = time.perf_counter() - t0
+        s = out["metrics"].summary()
+        outs[policy] = s
+        mapes = [snap.window_mape_pct for snap in out["calibrations"]
+                 if snap.window_mape_pct is not None]
+        guarded = sum(d.guarded for d in out["routes"])
+        print(f"--- fleet {'+'.join(map(str, AB_FLEET))}, router={policy} "
+              f"({spec.num_requests} requests) ---")
+        print(out["metrics"].format_summary())
+        print(f"routing: {guarded} work-conserving redirects, "
+              f"worst per-fabric calib MAPE "
+              f"{max(mapes) if mapes else -1:.2f}% ({dt:.2f}s wall)")
+        _rec(records, f"fleet_{policy}_throughput", s["throughput_rps"],
+             "req/s-virtual")
+        _rec(records, f"fleet_{policy}_p99", s["latency_us"]["p99"], "us")
+        _rec(records, f"fleet_{policy}_goodput", s["goodput_rps"],
+             "req/s-virtual")
+        _rec(records, f"fleet_{policy}_imbalance", s["imbalance"],
+             "fraction")
+        if policy == "model":
+            _rec(records, "fleet_model_calib_mape_max",
+                 max(mapes) if mapes else -1.0, "pct")
+
+    for base in ("rr", "lql"):
+        gain = (outs["model"]["throughput_rps"]
+                / outs[base]["throughput_rps"] - 1.0) * 100.0
+        p99 = (outs["model"]["latency_us"]["p99"]
+               / outs[base]["latency_us"]["p99"] - 1.0) * 100.0
+        print(f"--- model vs {base}: throughput {gain:+.1f}%, "
+              f"p99 latency {p99:+.1f}% ---")
+        _rec(records, f"fleet_model_vs_{base}_throughput_gain", gain, "pct")
+        _rec(records, f"fleet_model_vs_{base}_p99_delta", p99, "pct")
+    return outs
+
+
+def run_identity(spec: WorkloadSpec, records: list[dict]) -> bool:
+    """1x32 fleet vs the single-fabric pipelined path: must match exactly."""
+    single = serve_workload(spec, execute=False, pipeline=True)
+    fleet = serve_fleet(spec, fleet=(32,), router="model", pipeline=True)
+    ss = single["metrics"].summary()
+    fs = fleet["lanes"][0]["metrics"].summary()
+    identical = ss == fs and all(
+        (a.rid, a.t_done, a.slo_met) == (b.rid, b.t_done, b.slo_met)
+        for a, b in zip(single["requests"], fleet["requests"]))
+    print(f"--- 1x32 fleet vs single-fabric pipelined path: "
+          f"{'IDENTICAL' if identical else 'MISMATCH'} "
+          f"(thr {fs['throughput_rps']:.0f} vs {ss['throughput_rps']:.0f} "
+          f"req/s) ---")
+    _rec(records, "fleet_single_identity", 1.0 if identical else 0.0, "bool")
+    return identical
+
+
+def run_compositions(spec: WorkloadSpec, records: list[dict]) -> None:
+    """Sweep the 32-cluster-budget compositions; report the Pareto front."""
+    results = sweep_fleets(FleetSpace(), spec)
+    print("--- fleet compositions of the 32-cluster budget "
+          "(throughput, p99, cost) ---")
+    print(summarize_fleets(results))
+    names = [r.design.name for r in fleet_front(results)]
+    print(f"front: {', '.join(names)}")
+    for r in results:
+        tag = r.design.name.replace("+", "_")
+        _rec(records, f"composition_{tag}_throughput", r.throughput_rps,
+             "req/s-virtual")
+        _rec(records, f"composition_{tag}_p99", r.p99_us, "us")
+        _rec(records, f"composition_{tag}_cost", r.cost, "units")
+    _rec(records, "composition_front_size", len(names), "designs")
+
+
+def main(fast: bool = False, smoke: bool = False) -> list[dict]:
+    del fast  # every experiment here is simulated (no subprocess tier)
+    records: list[dict] = []
+    spec = SMOKE_SPEC if smoke else AB_SPEC
+    run_ab(spec, records)
+    run_identity(SINGLE_SMOKE_SPEC if smoke else SINGLE_AB_SPEC, records)
+    run_compositions(spec, records)
+    return records
+
+
+if __name__ == "__main__":
+    main()

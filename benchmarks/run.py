@@ -107,6 +107,11 @@ def main(argv=None) -> None:
     from benchmarks import serve_scheduler
     records += serve_scheduler.main(fast=args.fast, smoke=args.smoke)
 
+    section("Fleet router (repro.serve.fleet) — heterogeneous multi-fabric "
+            "A/B + composition sweep")
+    from benchmarks import fleet_router
+    records += fleet_router.main(fast=args.fast, smoke=args.smoke)
+
     if not args.fast:
         section("Measured dispatch/sync scaling on host devices (us)")
         from benchmarks import dispatch_microbench
@@ -154,6 +159,20 @@ def _smoke_gate(records: list[dict]) -> None:
         # record is -1.0 when the calibrator never produced a fitted window
         # — that is a failure, not a pass, hence the lower bound.
         ("pipelined calib MAPE", 0.0 <= by_name["pipe_calib_mape"] <= 2.0),
+        # Fleet A/B (DESIGN.md §8): model-driven routing beats round-robin
+        # on the heterogeneous big+little fleet on BOTH headline metrics.
+        ("fleet model > rr throughput",
+         by_name["fleet_model_vs_rr_throughput_gain"] > 0.0),
+        ("fleet model <= rr p99",
+         by_name["fleet_model_vs_rr_p99_delta"] <= 0.0),
+        # A homogeneous one-fabric fleet reproduces the single-fabric
+        # pipelined serving numbers exactly (the fleet layer composes the
+        # existing machinery — it must not perturb it).
+        ("fleet 1x32 == single fabric",
+         by_name["fleet_single_identity"] == 1.0),
+        # Every per-fabric online calibration stays inside the Eq.-2 bar.
+        ("fleet calib MAPE",
+         0.0 <= by_name["fleet_model_calib_mape_max"] <= 2.0),
     ]
     failed = [name for name, ok in checks if not ok]
     print(f"smoke gate: {len(checks) - len(failed)}/{len(checks)} checks ok")

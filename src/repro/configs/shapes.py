@@ -19,7 +19,6 @@ are precomputed patch *embeddings*; [audio] sequences are EnCodec token ids.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax
@@ -83,7 +82,6 @@ def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
     if not ok:
         raise ValueError(f"{cfg.name} x {shape_name}: {why}")
     b, s = spec["batch"], spec["seq"]
-    f32 = jnp.dtype("float32")
     i32 = jnp.dtype("int32")
     dt = jnp.dtype(cfg.dtype)
 

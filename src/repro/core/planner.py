@@ -24,8 +24,7 @@ same argmin / deadline-inversion logic as ``repro.core.decision``.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 

@@ -343,6 +343,26 @@ PIPELINE_N_GRID = [2048, 4096, 6144, 8192]
 REFERENCE_CLUSTERS = 32
 
 
+def extent_grid(num_clusters: int) -> tuple[int, ...]:
+    """The configurable parallel extents of a fabric of ``num_clusters``.
+
+    Hardware allocates clusters in power-of-two quanta (the paper's M grid
+    1..32 at the reference size); a non-power-of-two fabric additionally
+    exposes its full size as the top extent.  This is the ``available_m``
+    a fleet lane's scheduler plans over (DESIGN.md §8).
+    """
+    if num_clusters < 1:
+        raise ValueError("need at least one cluster")
+    grid = []
+    m = 1
+    while m <= num_clusters:
+        grid.append(m)
+        m *= 2
+    if grid[-1] != num_clusters:
+        grid.append(num_clusters)
+    return tuple(grid)
+
+
 def scaled_hw(num_clusters: int, hw: HWParams = HWParams()) -> HWParams:
     """HWParams for a fabric of ``num_clusters`` clusters.
 

@@ -10,6 +10,11 @@ speedup between them.  This package generalizes that comparison into a sweep:
                            gets its own Eq.-1 least-squares refit + MAPE
     pareto               — (runtime, cost) Pareto front, ranking, Eq.-3
                            deadline-feasible regions
+    fleet.FleetSpace     — the fleet-composition axis (DESIGN.md §8.3): how
+                           to partition a fixed cluster budget into fabrics
+                           (1x32 | 2x16 | 4x8 | 16+8+8), each composition
+                           served end to end and Pareto-scored on
+                           (throughput, p99, cost)
 
 Drivers: ``python -m repro.launch.dse`` (CLI), ``examples/codesign_sweep.py``
 (end to end), and the ``dse`` section of ``benchmarks/run.py --json``.  A
@@ -18,6 +23,10 @@ swept design's refitted model can be served directly:
 coefficients instead of the paper's.
 """
 
+from .fleet import (DEFAULT_COMPOSITIONS, FleetDesign, FleetResult,
+                    FleetSpace, composition_name, evaluate_fleet,
+                    fabric_cost, fleet_cost, fleet_front, fleet_objectives,
+                    summarize_fleets, sweep_fleets)
 from .pareto import (deadline_region, design_objectives, dominates,
                      feasible_ms, front, pareto_front, rank, summarize)
 from .runner import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignResult,
@@ -32,4 +41,7 @@ __all__ = [
     "DEFAULT_M_GRID", "DEFAULT_N_GRID",
     "dominates", "pareto_front", "front", "rank", "design_objectives",
     "feasible_ms", "deadline_region", "summarize",
+    "DEFAULT_COMPOSITIONS", "FleetDesign", "FleetResult", "FleetSpace",
+    "composition_name", "evaluate_fleet", "fabric_cost", "fleet_cost",
+    "fleet_front", "fleet_objectives", "summarize_fleets", "sweep_fleets",
 ]

@@ -1,0 +1,219 @@
+"""Fleet-composition axis of the design-space explorer (DESIGN.md §8.3).
+
+The single-fabric sweep (``repro.dse.runner``) asks which *one* fabric to
+build; at fleet scale the question becomes how to *partition* a fixed
+silicon budget: one big 32-cluster fabric, two mediums, four littles, or a
+heterogeneous big+little mix?  Each composition is served end to end on the
+same open-loop trace (``repro.serve.serve_fleet`` — every fabric with its
+own scaled hardware, its own Eq.-1 prior, its own online calibrator, behind
+the model-driven router) and scored on the three fleet objectives:
+
+    (throughput, p99 latency, silicon cost)
+
+with the Pareto front reported under (maximize, minimize, minimize) — the
+fleet-level analogue of the (t_ref, cost) front of DESIGN.md §3.3.
+
+The cost proxy extends ``design_cost`` to fabric granularity: compute area
+scales with the cluster count, the banked operand bus with its *scaled*
+width (sub-linear, ``simulator.scaled_hw``), and every fabric pays a fixed
+per-fabric increment for its own host core and fabric port — which is why
+splitting a budget into many little fabrics costs more silicon than one big
+one, and why the composition question is not answered by throughput alone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Sequence
+
+from repro.core import simulator as sim
+from repro.serve.fleet import ROUTER_POLICIES, serve_fleet
+from repro.serve.workload import WorkloadSpec
+
+from .pareto import pareto_front
+
+#: Per-fabric fixed cost: host core (CVA6) + completion unit + fabric port.
+PER_FABRIC_COST = 0.20
+#: Default compositions of the paper's 32-cluster budget (DESIGN.md §8.3).
+DEFAULT_COMPOSITIONS = ((32,), (16, 16), (8, 8, 8, 8), (16, 8, 8))
+
+
+def composition_name(sizes: Sequence[int]) -> str:
+    """Compact composition label: ``2x16``, ``16+8+8``, ``1x32``."""
+    sizes = tuple(sizes)
+    if len(set(sizes)) == 1:
+        return f"{len(sizes)}x{sizes[0]}"
+    return "+".join(str(s) for s in sizes)
+
+
+def fabric_cost(num_clusters: int, *, buffering: str = "double") -> float:
+    """Silicon-cost proxy of one fleet fabric (extended design).
+
+    ``design_cost`` (DESIGN.md §3.2) prices the reference 32-cluster fabric;
+    this scales it to fabric granularity: compute area ~ cluster count,
+    bus area ~ the *scaled* banked bus width (``scaled_hw`` — sub-linear,
+    so four 8-cluster buses cost more aggregate bandwidth-silicon than one
+    32-cluster bus), plus the extended design's multicast port (0.15) and
+    credit counter (0.10), the double descriptor buffer (0.05), and the
+    per-fabric host/port overhead (:data:`PER_FABRIC_COST`).
+    """
+    hw = sim.scaled_hw(num_clusters)
+    cost = (num_clusters / sim.REFERENCE_CLUSTERS
+            * (hw.cores_per_cluster / 8.0))
+    cost += hw.bus_bytes_per_cycle / 96.0
+    cost += 0.15 + 0.10                      # multicast port + credit unit
+    if buffering == "double":
+        cost += 0.05
+    return cost + PER_FABRIC_COST
+
+
+def fleet_cost(sizes: Sequence[int], *, buffering: str = "double") -> float:
+    """Silicon-cost proxy of a whole composition (sum over fabrics)."""
+    return sum(fabric_cost(c, buffering=buffering) for c in sizes)
+
+
+@dataclass(frozen=True)
+class FleetDesign:
+    """One point on the fleet-composition axis: sizes + routing policy."""
+
+    sizes: tuple[int, ...]
+    router: str = "model"
+
+    def __post_init__(self):
+        if not self.sizes or any(s < 1 for s in self.sizes):
+            raise ValueError("compositions need >= 1 cluster per fabric")
+        if self.router not in ROUTER_POLICIES:
+            raise ValueError(f"router must be one of {ROUTER_POLICIES}")
+        object.__setattr__(self, "sizes", tuple(int(s) for s in self.sizes))
+
+    @property
+    def name(self) -> str:
+        tag = composition_name(self.sizes)
+        return tag if self.router == "model" else f"{tag} [{self.router}]"
+
+    @property
+    def clusters(self) -> int:
+        return sum(self.sizes)
+
+
+@dataclass(frozen=True)
+class FleetSpace:
+    """Declarative fleet-composition axis under a fixed cluster budget."""
+
+    compositions: tuple[tuple[int, ...], ...] = DEFAULT_COMPOSITIONS
+    routers: tuple[str, ...] = ("model",)
+    budget: int = sim.REFERENCE_CLUSTERS
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "compositions",
+            tuple(tuple(int(s) for s in c) for c in self.compositions))
+        over = [c for c in self.compositions if sum(c) > self.budget]
+        if over:
+            raise ValueError(f"compositions exceed the {self.budget}-cluster "
+                             f"budget: {over}")
+        bad = set(self.routers) - set(ROUTER_POLICIES)
+        if bad:
+            raise ValueError(f"invalid router policies {sorted(bad)}")
+
+    @property
+    def size(self) -> int:
+        return len(self.compositions) * len(self.routers)
+
+    def grid(self) -> Iterator[FleetDesign]:
+        for sizes in self.compositions:
+            for router in self.routers:
+                yield FleetDesign(sizes=sizes, router=router)
+
+
+@dataclass(frozen=True)
+class FleetResult:
+    """One evaluated composition: served trace -> fleet objectives."""
+
+    design: FleetDesign
+    throughput_rps: float
+    p99_us: float
+    cost: float
+    imbalance: float
+    load_cv: float
+    completed: int
+    rejected: int
+    calib_mape_max_pct: float        # worst per-fabric window MAPE (Eq. 2)
+    summary: dict = field(repr=False, default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "design": {"sizes": list(self.design.sizes),
+                       "router": self.design.router,
+                       "name": self.design.name},
+            "throughput_rps": self.throughput_rps,
+            "p99_us": self.p99_us,
+            "cost": self.cost,
+            "imbalance": self.imbalance,
+            "load_cv": self.load_cv,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "calib_mape_max_pct": self.calib_mape_max_pct,
+        }
+
+
+def evaluate_fleet(design: FleetDesign, spec: WorkloadSpec, *,
+                   pipeline: bool = True,
+                   jitter_pct: float = 1.0) -> FleetResult:
+    """Serve one composition on the trace; extract the fleet objectives."""
+    out = serve_fleet(spec, fleet=design.sizes, router=design.router,
+                      pipeline=pipeline, jitter_pct=jitter_pct)
+    s = out["metrics"].summary()
+    mapes = [snap.window_mape_pct for snap in out["calibrations"]
+             if snap.window_mape_pct is not None]
+    # A composition that completes nothing (every request rejected by its
+    # lanes' SLO admission) has no latency distribution: score it strictly
+    # worst on the latency objective instead of crashing the front.
+    p99 = s["latency_us"]["p99"]
+    return FleetResult(
+        design=design,
+        throughput_rps=s["throughput_rps"],
+        p99_us=float(p99) if p99 is not None else float("inf"),
+        cost=fleet_cost(design.sizes,
+                        buffering="double" if pipeline else "single"),
+        imbalance=s["imbalance"],
+        load_cv=s["load_cv"],
+        completed=s["completed"],
+        rejected=s["rejected"],
+        calib_mape_max_pct=max(mapes) if mapes else -1.0,
+        summary=s,
+    )
+
+
+def sweep_fleets(space: FleetSpace | Sequence[FleetDesign],
+                 spec: WorkloadSpec, *, pipeline: bool = True,
+                 jitter_pct: float = 1.0) -> list[FleetResult]:
+    """Evaluate every composition on the same trace (enumeration order)."""
+    designs = (list(space.grid()) if isinstance(space, FleetSpace)
+               else list(space))
+    return [evaluate_fleet(d, spec, pipeline=pipeline,
+                           jitter_pct=jitter_pct) for d in designs]
+
+
+def fleet_objectives(r: FleetResult) -> tuple[float, float, float]:
+    """Minimization vector: (-throughput, p99, cost)."""
+    return (-r.throughput_rps, r.p99_us, r.cost)
+
+
+def fleet_front(results: Sequence[FleetResult]) -> list[FleetResult]:
+    """Pareto front under (max throughput, min p99, min cost)."""
+    return pareto_front(list(results), fleet_objectives)
+
+
+def summarize_fleets(results: Sequence[FleetResult]) -> str:
+    """Human-readable composition table with front membership."""
+    on_front = {id(r) for r in fleet_front(results)}
+    lines = [f"{'fleet':<16} {'thr req/s':>10} {'p99 us':>8} {'cost':>6} "
+             f"{'imbal':>6} {'MAPE%':>6}  front"]
+    for r in sorted(results, key=lambda r: -r.throughput_rps):
+        lines.append(
+            f"{r.design.name:<16} {r.throughput_rps:>10.0f} "
+            f"{r.p99_us:>8.1f} {r.cost:>6.2f} {r.imbalance:>6.2f} "
+            f"{r.calib_mape_max_pct:>6.2f}  "
+            f"{'*' if id(r) in on_front else ''}")
+    return "\n".join(lines)

@@ -16,6 +16,11 @@ A :class:`DesignSpace` names the axes the explorer may vary (DESIGN.md §3):
 uniform random subset of the same product for spaces too large to sweep
 exhaustively.  Each concrete combination is a :class:`DesignPoint` — a frozen,
 picklable value the parallel sweep runner farms out to worker processes.
+
+One level up, :class:`repro.dse.fleet.FleetSpace` is the fleet-composition
+axis (DESIGN.md §8.3): instead of varying one fabric's parameters, it
+partitions a fixed cluster budget into several fabrics and scores each
+composition on served (throughput, p99, cost).
 """
 
 from __future__ import annotations

@@ -11,6 +11,16 @@ measured step times of the same run.
   PYTHONPATH=src python -m repro.launch.serve --no-execute --requests 512
   PYTHONPATH=src python -m repro.launch.serve --no-execute --pipeline
 
+``--fleet`` serves the trace on a multi-fabric fleet behind the
+model-driven router (DESIGN.md §8): one cluster count per fabric, each
+fabric with its own scaled hardware, Eq.-1 prior, and online calibrator.
+
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --fleet 32
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --pipeline \\
+      --fleet 32,8,8 --router model          # big + 2x little, model-routed
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --fleet 16,16 \\
+      --router rr                            # round-robin baseline
+
 ``--one-shot`` keeps the original single-batch driver (one offline offload
 decision per run), used by examples/serve_batch.py and the equivalence test.
 
@@ -70,6 +80,52 @@ def serve(arch: str, *, reduced: bool = True, prompts: int = 4,
         "generated": gen_tokens,
         "offload_decision": rep,
     }
+
+
+def serve_fleet_stream(args) -> dict:
+    """Drive the multi-fabric fleet (DESIGN.md §8) on the open-loop trace."""
+    from repro.serve import WorkloadSpec, serve_fleet
+
+    sizes = tuple(int(s) for s in args.fleet.split(",") if s)
+    if args.fabric != "simulated":
+        raise SystemExit(
+            "--fleet serves on the simulated cycle domain only: routing "
+            "scores per-fabric cycle models, which a wallclock fabric does "
+            "not have (drop --fabric wallclock or --fleet)")
+    spec = WorkloadSpec(
+        num_requests=args.requests,
+        rate_rps=args.rate,
+        slo_fraction=args.slo_fraction,
+        seed=args.seed,
+    )
+    out = serve_fleet(spec, fleet=sizes, router=args.router, arch=args.arch,
+                      reduced=args.reduced, execute=not args.no_execute,
+                      max_batch=args.max_batch,
+                      wave_boundary=args.wave_boundary,
+                      pipeline=args.pipeline, buffering=args.buffering)
+
+    lane_hist: dict[int, int] = {}
+    guarded = 0
+    for d in out["routes"]:
+        lane_hist[d.lane] = lane_hist.get(d.lane, 0) + 1
+        guarded += d.guarded
+        if args.verbose:
+            scores = ", ".join(f"{s:.0f}" for s in d.scores)
+            print(f"[route] request {d.rid} -> lane {d.lane} "
+                  f"(scores [{scores}], pending {list(d.pending)}"
+                  f"{', guarded' if d.guarded else ''})")
+    print(f"router [{out['router']}] over fleet "
+          f"{'+'.join(map(str, sizes))}: lane histogram "
+          f"{dict(sorted(lane_hist.items()))}, "
+          f"{guarded} work-conserving redirects")
+    print(out["metrics"].format_summary())
+    for snap, size in zip(out["calibrations"], sizes):
+        mape = ("n/a" if snap.window_mape_pct is None
+                else f"{snap.window_mape_pct:.2f}%")
+        print(f"  [{size}c] calibrated: a={snap.alpha:.1f} "
+              f"b={snap.beta:.4f} g={snap.gamma:.4f} "
+              f"({snap.source}, {snap.n_samples} samples, MAPE {mape})")
+    return out
 
 
 def serve_stream(args) -> dict:
@@ -153,6 +209,17 @@ def main(argv=None):
     ap.add_argument("--buffering", choices=("single", "double"), default=None,
                     help="fabric job-descriptor depth (default: double when "
                          "--pipeline, else single)")
+    ap.add_argument("--fleet", default=None, metavar="C1[,C2,...]",
+                    help="serve on a multi-fabric fleet: one cluster count "
+                         "per fabric (e.g. 32 / 16,16 / 32,8,8), each with "
+                         "its own scaled hardware + calibrated model "
+                         "(DESIGN.md §8); with --no-execute off, compiles "
+                         "one engine per fabric")
+    ap.add_argument("--router", choices=("model", "rr", "lql"),
+                    default="model",
+                    help="fleet routing policy: model-driven predicted "
+                         "completion (default), round-robin, or "
+                         "least-queued-lane")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the real JAX engine (scheduler machinery only)")
     ap.add_argument("--fabric", choices=("simulated", "wallclock"),
@@ -173,6 +240,8 @@ def main(argv=None):
               f"decode {out['decode_tok_s']:.1f} tok/s")
         print("offload decision (Eq.3):", out["offload_decision"])
         return out
+    if args.fleet:
+        return serve_fleet_stream(args)
     return serve_stream(args)
 
 

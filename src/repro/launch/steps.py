@@ -20,7 +20,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core.sync import emit_credits
 from repro.models import ModelConfig, cross_entropy, decode_step as model_decode

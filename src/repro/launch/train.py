@@ -17,11 +17,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config

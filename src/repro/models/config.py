@@ -14,8 +14,7 @@ and applies the tail blocks outside the scan.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 BLOCK_KINDS = (
     "attn",          # global attention + dense FFN
@@ -190,7 +189,6 @@ class ModelConfig:
 
 def scaled_down(cfg: ModelConfig, **overrides) -> ModelConfig:
     """Reduced config of the same family for CPU smoke tests."""
-    kinds = set(cfg.pattern)
     small = dict(
         num_layers=len(cfg.pattern) * 2 + len(cfg.tail),
         d_model=64,

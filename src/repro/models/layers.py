@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -165,7 +164,7 @@ def chunked_attention(
     q_pos = q_offset + jnp.arange(sq)
 
     def body(carry, inputs):
-        acc, m, l = carry
+        acc, m, lse = carry
         j, (kj, vj) = inputs
         kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
         s = jnp.einsum("bqhd,bshd->bhqs", q, kj,
@@ -178,7 +177,7 @@ def chunked_attention(
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        l_new = lse * corr + p.sum(axis=-1)
         pv = jnp.einsum("bhqs,bshd->bqhd", p.astype(vj.dtype), vj,
                         preferred_element_type=jnp.float32)
         acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
@@ -187,9 +186,9 @@ def chunked_attention(
     acc0 = jnp.zeros((b, sq, h, d), jnp.float32)
     m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(
+    (acc, m, lse), _ = jax.lax.scan(
         body, (acc0, m0, l0), (jnp.arange(n_chunks), (kc, vc)))
-    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    out = acc / jnp.maximum(lse, 1e-30).transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)
 
 
@@ -499,10 +498,10 @@ def ssd_chunked(
 
     a_cum = jnp.cumsum(ar, axis=2)                       # (B,C,Q,H)
     # Intra-chunk (quadratic) term.
-    l = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))       # (B,C,H,Q,Q)
+    decay = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))   # (B,C,H,Q,Q)
     cb = jnp.einsum("bcqn,bckn->bcqk", cr, br,
                     preferred_element_type=jnp.float32)  # (B,C,Q,Q)
-    w = cb[:, :, None] * l                               # (B,C,H,Q,Q)
+    w = cb[:, :, None] * decay                           # (B,C,H,Q,Q)
     y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(x.dtype), xr)
 
     # Per-chunk input state.

@@ -15,6 +15,7 @@ Entry points:
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any
 
@@ -253,9 +254,6 @@ def embed_tokens(params, tokens, cfg: ModelConfig, ctx: ShardCtx):
     return ctx.constrain(h, ctx.dp, None, None)
 
 
-import functools
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
 def _grad_dtype_barrier(x, dtype_str: str):
     """Identity; casts the cotangent back to the primal dtype.
@@ -442,13 +440,13 @@ def merge_cache_slots(live, fresh, slot_mask):
     """
     mask = jnp.asarray(slot_mask, bool)
 
-    def merge_group(l, f):
-        m = mask.reshape((1, mask.shape[0]) + (1,) * (l.ndim - 2))
-        return jnp.where(m, f.astype(l.dtype), l)
+    def merge_group(live_leaf, f):
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (live_leaf.ndim - 2))
+        return jnp.where(m, f.astype(live_leaf.dtype), live_leaf)
 
-    def merge_tail(l, f):
-        m = mask.reshape((mask.shape[0],) + (1,) * (l.ndim - 1))
-        return jnp.where(m, f.astype(l.dtype), l)
+    def merge_tail(live_leaf, f):
+        m = mask.reshape((mask.shape[0],) + (1,) * (live_leaf.ndim - 1))
+        return jnp.where(m, f.astype(live_leaf.dtype), live_leaf)
 
     return {"groups": jax.tree.map(merge_group, live["groups"],
                                    fresh["groups"]),

@@ -11,7 +11,6 @@ Moments are stored in f32 regardless of param dtype; update math is f32.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any
 

@@ -24,9 +24,15 @@ generation requests:
     metrics.ServeMetrics         -> throughput / p99 latency / SLO
                                     attainment / queue delay / occupancy /
                                     goodput
+    fleet.FabricFleet            -> N independent fabrics (each with its own
+                                    scaled HWParams, calibrator, scheduler)
+                                    behind a model-driven Router
+                                    (model|rr|lql) — the horizontal scaling
+                                    layer (DESIGN.md §8)
 
-``serve_workload`` wires the whole stack together; it is what the
-``python -m repro.launch.serve`` CLI and the serve_scheduler benchmark call.
+``serve_workload`` wires the single-fabric stack together; ``serve_fleet``
+is its fleet counterpart.  They are what the ``python -m repro.launch.serve``
+CLI and the serve_scheduler / fleet_router benchmarks call.
 """
 
 from __future__ import annotations
@@ -36,18 +42,21 @@ import dataclasses
 from .batcher import ContinuousBatcher, PendingStep, ServingEngine
 from .calibrator import CalibrationSnapshot, OnlineCalibrator
 from .fabric import CompletedJob, SimulatedFabric, WallClockFabric
-from .metrics import ServeMetrics
+from .fleet import (ROUTER_POLICIES, FabricFleet, FleetLane, RouteDecision,
+                    Router, fabric_prior, serve_fleet)
+from .metrics import FleetMetrics, ServeMetrics
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
 from .workload import CYCLES_PER_SECOND, WorkloadSpec, synthetic_workload
 
 __all__ = [
     "AdmissionDecision", "BatchPlan", "CalibrationSnapshot", "CompletedJob",
-    "ContinuousBatcher", "CYCLES_PER_SECOND", "OffloadAwareScheduler",
-    "OnlineCalibrator", "PendingStep", "Request", "RequestQueue",
-    "RequestState", "ServeMetrics", "ServingEngine", "SimulatedFabric",
-    "WallClockFabric", "WorkloadSpec", "serve_workload",
-    "synthetic_workload",
+    "ContinuousBatcher", "CYCLES_PER_SECOND", "FabricFleet", "FleetLane",
+    "FleetMetrics", "OffloadAwareScheduler", "OnlineCalibrator",
+    "PendingStep", "Request", "RequestQueue", "RequestState",
+    "ROUTER_POLICIES", "RouteDecision", "Router", "ServeMetrics",
+    "ServingEngine", "SimulatedFabric", "WallClockFabric", "WorkloadSpec",
+    "fabric_prior", "serve_fleet", "serve_workload", "synthetic_workload",
 ]
 
 

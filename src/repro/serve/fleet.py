@@ -1,0 +1,349 @@
+"""Fleet-scale serving: model-driven routing across heterogeneous fabrics.
+
+Everything below ``repro.serve.fleet`` makes the paper's offload decision for
+ONE accelerator fabric.  This module lifts the same co-design idea one level
+up (DESIGN.md §8): a :class:`FabricFleet` owns N independent fabrics — each
+its own :class:`~repro.serve.fabric.SimulatedFabric` with its own scaled
+``HWParams`` (``simulator.scaled_hw``; e.g. one 32-cluster "big" fabric and
+two 8-cluster "little" fabrics), its own :class:`OnlineCalibrator` seeded
+with that fabric's *own* Eq.-1 fit, and its own
+:class:`OffloadAwareScheduler` planning over that fabric's extent grid — and
+a :class:`Router` dispatches each request to a fabric at arrival time.
+
+Routing policies (the A/B of ``benchmarks/fleet_router.py``):
+
+  * ``"model"`` — score each request's predicted completion on every fabric:
+    the fabric's current backlog (the router's bookkeeping of outstanding
+    predicted work, i.e. the engine-timeline view available at decision
+    time) plus the per-fabric Eq.-1 prediction of the request's prefill
+    (``scheduler.preview`` — same model and extent selection the lane's
+    planner will use; at routing time this is the fabric's own prior fit,
+    see :class:`Router`) and decode work; dispatch to the argmin.
+  * ``"rr"`` — round-robin, fabric-blind (the classic fleet baseline).
+  * ``"lql"`` — least-queued-lane: fewest outstanding requests, speed-blind
+    (knows *how much* is queued, not how fast each fabric drains).
+
+``model`` and ``lql`` are **work-conserving**: while any fabric is predicted
+idle, new requests go to an idle fabric — the router never queues a job
+behind a busy fabric while another sits empty (property-tested on seeded
+traces in ``tests/test_fleet.py``).  ``rr`` is deliberately not (that is the
+pathology the A/B quantifies).
+
+Execution composes the existing single-fabric machinery unchanged: after
+routing, each fabric lane drains its requests through its own
+:class:`~repro.serve.batcher.ContinuousBatcher` on the shared virtual-time
+axis (arrival timestamps are global, so per-lane clocks line up and the
+fleet span is the max over lanes).  A fleet of ONE reference fabric is
+therefore *bit-identical* to the single-fabric ``serve_workload`` path —
+tokens and metrics — which is the regression anchor for everything here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core import runtime_model, simulator as sim
+from repro.core.runtime_model import PAPER_MODEL, OffloadModel
+
+from .batcher import ContinuousBatcher
+from .calibrator import OnlineCalibrator
+from .fabric import SimulatedFabric
+from .metrics import FleetMetrics, ServeMetrics
+from .queue import Request
+from .scheduler import OffloadAwareScheduler
+from .workload import WorkloadSpec, synthetic_workload
+
+#: Router policies (DESIGN.md §8.2).
+ROUTER_POLICIES = ("model", "rr", "lql")
+
+
+def fabric_prior(num_clusters: int, *,
+                 kernel: sim.KernelSpec = sim.DAXPY) -> OffloadModel:
+    """The per-fabric Eq.-1 prior a fleet lane's calibrator starts from.
+
+    At the paper's reference size the published coefficients ARE the fit
+    (``PAPER_MODEL`` — this is also what keeps a 1x32 fleet bit-identical to
+    the single-fabric path, whose calibrator starts from the same prior).
+    Any other size gets its own least-squares fit over its scaled hardware
+    (``scaled_hw``) and its own extent grid — an 8-cluster fabric has a
+    narrower banked bus (larger beta) and at most 8-way parallelism, and the
+    router must score with *that* model, not the reference one
+    (DESIGN.md §8.1).
+    """
+    if num_clusters == sim.REFERENCE_CLUSTERS and kernel is sim.DAXPY:
+        return PAPER_MODEL
+    model = runtime_model.fit_from_simulator(
+        ms=list(sim.extent_grid(num_clusters)),
+        ns=sim.PAPER_N_GRID_MODEL,
+        hw=sim.scaled_hw(num_clusters), kernel=kernel)
+    assert isinstance(model, OffloadModel)
+    return model
+
+
+@dataclass
+class FleetLane:
+    """One fabric of the fleet plus its private serving machinery."""
+
+    index: int
+    num_clusters: int
+    fabric: SimulatedFabric
+    calibrator: OnlineCalibrator
+    scheduler: OffloadAwareScheduler
+    engine: object | None = None     # optional per-lane ServingEngine
+
+    @property
+    def name(self) -> str:
+        return f"f{self.index}:{self.num_clusters}c"
+
+    def preview(self, req: Request) -> float:
+        """Predicted service cycles for ``req`` on this fabric.
+
+        Prefill via the lane scheduler's side-effect-free preview (same
+        calibrated model + extent selection its planner uses), plus one
+        single-token decode step per generated token — a lower bound on the
+        decode share (decode jobs batch across slots), but the same bound on
+        every fabric, so the *comparison* the router makes is fair.
+        """
+        t = self.scheduler.preview(req.n_prompt_elems,
+                                   deadline=req.slo_cycles)
+        if req.gen_len > 1:
+            t += (req.gen_len - 1) * self.scheduler.preview(1)
+        return t
+
+
+@dataclass(frozen=True)
+class RouteDecision:
+    """One routing decision, with the evidence it was made on."""
+
+    rid: int
+    lane: int
+    policy: str
+    scores: tuple[float, ...]        # predicted completion time per lane
+    pending: tuple[int, ...]         # outstanding requests per lane (before)
+    feasible: tuple[bool, ...]       # Eq.-3 SLO feasibility per lane
+    guarded: bool                    # work-conserving guard redirected it
+
+
+class Router:
+    """Dispatches requests to fleet lanes at arrival time (DESIGN.md §8.2).
+
+    The router's backlog state is *predicted*, not measured: per lane it
+    tracks ``t_free`` (when the fabric is expected to drain everything
+    routed so far) and the predicted completion time of each outstanding
+    request.  Eq. 1 exists so the decision can be made without running the
+    job.  Note the model the router reads per lane is that fabric's own
+    Eq.-1 *prior* fit (:func:`fabric_prior`): in this open-loop replay the
+    whole trace is routed before the lanes serve it, so online refits
+    arrive after every routing decision — they sharpen each lane's
+    in-serving scheduling (``plan``/admission read the live calibrator) and
+    validate the per-fabric fits (window MAPE ≤ the Eq.-2 bar), but cannot
+    influence routing.
+    """
+
+    def __init__(self, lanes: list[FleetLane], policy: str = "model"):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"router policy must be one of "
+                             f"{ROUTER_POLICIES}, got {policy!r}")
+        if not lanes:
+            raise ValueError("a fleet needs at least one fabric")
+        self.lanes = lanes
+        self.policy = policy
+        self._t_free = [0.0] * len(lanes)
+        self._inflight: list[list[float]] = [[] for _ in lanes]
+        self._rr_next = 0
+        self.decisions: list[RouteDecision] = []
+
+    def _drain(self, now: float) -> None:
+        for fl in self._inflight:
+            fl[:] = [t for t in fl if t > now]
+
+    def route(self, req: Request) -> int:
+        """Pick the lane for one request; returns its index."""
+        now = req.arrival
+        self._drain(now)
+        pending = tuple(len(fl) for fl in self._inflight)
+        service = [lane.preview(req) for lane in self.lanes]
+        scores = tuple(max(self._t_free[i], now) + service[i]
+                       for i in range(len(self.lanes)))
+        # Per-lane Eq.-3 feasibility of the request's SLO: a little fabric
+        # (smaller extent grid, narrower banked bus) may be unable to meet a
+        # deadline the big fabric can — its admission control would reject
+        # the request on arrival, so the model/lql policies never send one
+        # there while a feasible lane exists (rr does, and pays in goodput).
+        feasible = tuple(
+            lane.scheduler.fits_deadline(req.n_prompt_elems, req.slo_cycles)
+            for lane in self.lanes)
+        cand = ([i for i in range(len(self.lanes)) if feasible[i]]
+                or list(range(len(self.lanes))))
+
+        if self.policy == "rr":
+            choice = self._rr_next
+            self._rr_next = (self._rr_next + 1) % len(self.lanes)
+        elif self.policy == "lql":
+            choice = min(cand, key=lambda i: (pending[i], scores[i]))
+        else:  # model
+            choice = min(cand, key=lambda i: scores[i])
+
+        # Work-conserving guard (model/lql): while some fabric *that could
+        # serve this request* is predicted idle, never queue behind a busy
+        # one — no feasible fabric may sit empty while another accumulates
+        # >1 outstanding jobs.  rr stays blind; its queueing pathology is
+        # the baseline the A/B measures.
+        guarded = False
+        if self.policy != "rr" and pending[choice] > 0:
+            idle = [i for i in cand if pending[i] == 0]
+            if idle:
+                choice = min(idle, key=lambda i: scores[i])
+                guarded = True
+
+        # A request infeasible on EVERY lane (cand fell back to all lanes)
+        # is rejected instantly by the chosen lane's admission control — it
+        # runs no work, so charging its predicted service to the lane's
+        # backlog would make an idle lane look busy for a phantom duration.
+        if feasible[choice]:
+            done = max(self._t_free[choice], now) + service[choice]
+            self._t_free[choice] = done
+            self._inflight[choice].append(done)
+        self.decisions.append(RouteDecision(
+            rid=req.rid, lane=choice, policy=self.policy, scores=scores,
+            pending=pending, feasible=feasible, guarded=guarded))
+        return choice
+
+
+class FabricFleet:
+    """N independent fabrics + a router, serving one shared request trace.
+
+    ``sizes`` gives the cluster count of each fabric; every fabric gets its
+    own scaled hardware (``simulator.scaled_hw``), its own jitter stream
+    (seed offset by the lane index, so lane 0 of a one-fabric fleet matches
+    the single-fabric path sample for sample), its own calibrator with its
+    own Eq.-1 prior (:func:`fabric_prior`), and its own scheduler over its
+    own extent grid.  ``engines`` optionally attaches one real
+    ``ServingEngine`` per lane (fleet execution compiles one engine per
+    fabric — expensive; the routing benchmarks run ``execute=False``).
+    """
+
+    def __init__(self, sizes, *, router: str = "model",
+                 jitter_pct: float = 1.0, seed: int = 0,
+                 max_batch: int = 4, wave_boundary: bool = False,
+                 pipeline: bool = False, buffering: str | None = None,
+                 engines: list | None = None):
+        sizes = tuple(int(s) for s in sizes)
+        if not sizes:
+            raise ValueError("a fleet needs at least one fabric")
+        if engines is not None and len(engines) != len(sizes):
+            raise ValueError("engines must match the fleet size")
+        buffering = buffering or ("double" if pipeline else "single")
+        self.sizes = sizes
+        self.max_batch = max_batch
+        self.wave_boundary = wave_boundary
+        self.pipeline = pipeline
+        self.lanes: list[FleetLane] = []
+        for i, clusters in enumerate(sizes):
+            calibrator = OnlineCalibrator(prior=fabric_prior(clusters))
+            scheduler = OffloadAwareScheduler(
+                calibrator, available_m=sim.extent_grid(clusters))
+            fabric = SimulatedFabric(jitter_pct=jitter_pct, seed=seed + i,
+                                     num_clusters=clusters,
+                                     buffering=buffering)
+            self.lanes.append(FleetLane(
+                index=i, num_clusters=clusters, fabric=fabric,
+                calibrator=calibrator, scheduler=scheduler,
+                engine=None if engines is None else engines[i]))
+        self.router = Router(self.lanes, router)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request]) -> dict:
+        """Route then serve the whole trace; returns the merged results.
+
+        Routing happens strictly in arrival order (what an online router
+        sees); each lane then drains its routed requests through its own
+        :class:`ContinuousBatcher`.  Lanes share the virtual-time axis —
+        arrival timestamps are global — so per-lane spans line up and the
+        fleet metrics aggregate them directly.
+        """
+        routed: list[list[Request]] = [[] for _ in self.lanes]
+        for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            routed[self.router.route(req)].append(req)
+
+        lane_outs = []
+        for lane, reqs in zip(self.lanes, routed):
+            batcher = ContinuousBatcher(
+                lane.scheduler, lane.calibrator, fabric=lane.fabric,
+                engine=lane.engine,
+                max_batch=None if lane.engine is not None else self.max_batch,
+                wave_boundary=self.wave_boundary, pipeline=self.pipeline)
+            out = batcher.run(reqs)
+            # An unused lane still reports an honest (empty) summary.
+            if not reqs:
+                out["metrics"] = ServeMetrics()
+            lane_outs.append(out)
+
+        merged = sorted((r for out in lane_outs for r in out["requests"]),
+                        key=lambda r: r.rid)
+        return {
+            "requests": merged,
+            "metrics": FleetMetrics([(lane.name, out["metrics"])
+                                     for lane, out in zip(self.lanes,
+                                                          lane_outs)]),
+            "lanes": lane_outs,
+            "routes": self.router.decisions,
+            "router": self.router.policy,
+            "sizes": self.sizes,
+            "calibrations": [out["calibration"] for out in lane_outs],
+        }
+
+
+def serve_fleet(
+    spec: WorkloadSpec | None = None,
+    *,
+    fleet=(sim.REFERENCE_CLUSTERS,),
+    router: str = "model",
+    arch: str = "chatglm3-6b",
+    reduced: bool = True,
+    execute: bool = False,
+    max_batch: int = 4,
+    mesh_shape=(1, 1),
+    jitter_pct: float = 1.0,
+    wave_boundary: bool = False,
+    pipeline: bool = False,
+    buffering: str | None = None,
+) -> dict:
+    """Run the fleet serving stack on a synthetic open-loop workload.
+
+    The fleet analogue of :func:`repro.serve.serve_workload` — same
+    workload generator, same per-lane machinery, with routing in front
+    (DESIGN.md §8).  ``fleet`` is the cluster count per fabric (``(32,)``
+    is the single-fabric reference; ``(16, 8, 8)`` a big+2xlittle fleet).
+    Fleet timing is always the simulated cycle domain: routing is a
+    cycle-model decision, and a wall-clock fabric has no per-fabric model
+    to score with.  ``execute=True`` compiles one real ``ServingEngine``
+    per fabric (expensive — one XLA compile set per lane; benchmarks use
+    the default ``execute=False``).
+    """
+    spec = spec or WorkloadSpec()
+    engines = None
+    if execute:
+        from repro.configs import get_config
+        from repro.models import scaled_down
+
+        from .batcher import ServingEngine
+        cfg = get_config(arch)
+        if reduced:
+            cfg = scaled_down(cfg)
+        spec = dataclasses.replace(spec, vocab_size=cfg.vocab_size)
+        max_len = max(spec.prompt_lens) + max(spec.gen_lens)
+        engines = [ServingEngine(arch, reduced=reduced, max_batch=max_batch,
+                                 max_len=max_len, mesh_shape=mesh_shape)
+                   for _ in fleet]
+
+    requests = synthetic_workload(spec, with_tokens=execute)
+    fleet_obj = FabricFleet(fleet, router=router, jitter_pct=jitter_pct,
+                            seed=spec.seed, max_batch=max_batch,
+                            wave_boundary=wave_boundary, pipeline=pipeline,
+                            buffering=buffering, engines=engines)
+    out = fleet_obj.run(requests)
+    out["arch"] = arch
+    out["spec"] = spec
+    return out

@@ -193,6 +193,130 @@ class ServeMetrics:
         return "\n".join(lines)
 
 
+class FleetMetrics:
+    """Aggregate view over the per-fabric ``ServeMetrics`` of a fleet run.
+
+    Each lane keeps its own full ``ServeMetrics`` (occupancy, overlap and
+    bubble series, wall recorders, ...) — this class does not copy them, it
+    merges the *request-level* outcomes (latency/TTFT samples, completion
+    counters) into fleet totals and derives the two fleet-level health
+    numbers the router A/B cares about (DESIGN.md §8):
+
+      * ``imbalance`` — tail spread: how much of the fleet span the slowest
+        fabric keeps running after the fastest finished,
+        ``(max t_end - min t_end) / span``.  0 on a perfectly balanced
+        fleet; on a heterogeneous fleet a naive router leaves the little
+        fabrics draining long after the big one idles.
+      * ``load_cv`` — coefficient of variation of per-fabric busy cycles
+        (``job_cycles`` totals): dispersion of *work* (not request counts —
+        a model-driven router deliberately sends more tokens to faster
+        fabrics, so request-count balance is the wrong target).
+    """
+
+    def __init__(self, lanes: list[tuple[str, ServeMetrics]]):
+        if not lanes:
+            raise ValueError("a fleet needs at least one fabric")
+        self.lanes = lanes
+
+    # ------------------------------------------------------------------ #
+    def _served(self) -> list[ServeMetrics]:
+        """Lanes that actually ran work; a never-used lane's default
+        ``t_start``/``t_end`` of 0.0 is not a real time and must not enter
+        span or imbalance arithmetic."""
+        served = [m for _, m in self.lanes if m.completed or len(m.job_cycles)]
+        return served or [m for _, m in self.lanes]
+
+    def span_cycles(self) -> float:
+        metrics = self._served()
+        t0 = min(m.t_start for m in metrics)
+        t1 = max(m.t_end for m in metrics)
+        return max(t1 - t0, 1e-9)
+
+    def imbalance(self) -> float:
+        """Tail spread of per-fabric finish times, as a span fraction
+        (over the lanes that served work)."""
+        ends = [m.t_end for m in self._served()]
+        return (max(ends) - min(ends)) / self.span_cycles()
+
+    def load_cv(self) -> float:
+        """Coefficient of variation of per-fabric busy (job) cycles.
+
+        Unlike :meth:`imbalance`, idle lanes count here: zero busy cycles
+        is a *real* load of zero, and the dispersion should show it.
+        """
+        loads = np.array([m.job_cycles.total() for _, m in self.lanes])
+        mean = loads.mean()
+        return float(loads.std() / mean) if mean > 0 else 0.0
+
+    def _merged(self, attr: str) -> Recorder:
+        merged = Recorder()
+        for _, m in self.lanes:
+            for x in getattr(m, attr).series():
+                merged.add(x)
+        return merged
+
+    def _total(self, attr: str) -> int:
+        return sum(getattr(m, attr) for _, m in self.lanes)
+
+    def summary(self) -> dict:
+        span_s = self.span_cycles() / CYCLES_PER_SECOND
+        latency = self._merged("latency_cycles")
+        ttft = self._merged("ttft_cycles")
+        slo_met, slo_missed = (self._total("slo_met"),
+                               self._total("slo_missed"))
+        return {
+            "fabrics": len(self.lanes),
+            "submitted": self._total("submitted"),
+            "admitted": self._total("admitted"),
+            "rejected": self._total("rejected"),
+            "completed": self._total("completed"),
+            "throughput_rps": self._total("completed") / span_s,
+            "goodput_rps": self._total("goodput_completed") / span_s,
+            "tokens_per_s": self._total("tokens_generated") / span_s,
+            "latency_us": {"p50": _us(latency.percentile(50)),
+                           "p99": _us(latency.percentile(99))},
+            "ttft_us": {"p50": _us(ttft.percentile(50)),
+                        "p99": _us(ttft.percentile(99))},
+            "slo_attainment": (slo_met / (slo_met + slo_missed)
+                               if slo_met + slo_missed else None),
+            "imbalance": self.imbalance(),
+            "load_cv": self.load_cv(),
+            "per_fabric": {
+                name: {
+                    "completed": m.completed,
+                    "busy_cycles": m.job_cycles.total(),
+                    "occupancy_mean": m.slot_occupancy.mean(),
+                    "overlap_total_cycles": m.overlap_cycles.total(),
+                    "t_end": m.t_end,
+                }
+                for name, m in self.lanes
+            },
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        lines = [
+            f"fleet: {s['fabrics']} fabrics, {s['submitted']} submitted, "
+            f"{s['rejected']} rejected, {s['completed']} completed",
+            f"throughput: {s['throughput_rps']:.0f} req/s (virtual), "
+            f"goodput {s['goodput_rps']:.0f} req/s, "
+            f"{s['tokens_per_s']:.0f} tok/s",
+            f"latency: p50 {_fmt(s['latency_us']['p50'])} us, "
+            f"p99 {_fmt(s['latency_us']['p99'])} us; "
+            f"ttft p99 {_fmt(s['ttft_us']['p99'])} us",
+            f"balance: imbalance {s['imbalance']:.2f} of span, "
+            f"busy-cycle CV {s['load_cv']:.2f}",
+        ]
+        for name, f in s["per_fabric"].items():
+            occ = ("n/a" if f["occupancy_mean"] is None
+                   else f"{100 * f['occupancy_mean']:.0f}%")
+            lines.append(f"  [{name}] {f['completed']} completed, "
+                         f"{f['busy_cycles']:.0f} busy cy, occupancy {occ}")
+        if s["slo_attainment"] is not None:
+            lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}%")
+        return "\n".join(lines)
+
+
 def _us(cycles: float | None) -> float | None:
     return None if cycles is None else cycles / 1e3   # 1 GHz: cycles == ns
 

@@ -27,7 +27,7 @@ actually receives in the pipeline.  A pipelined prior can be seeded with
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from repro.core import decision, simulator
@@ -126,6 +126,29 @@ class OffloadAwareScheduler:
         return decision.m_min_for_deadline(self.calibrator.model, n_elems,
                                            deadline,
                                            m_max=self.m_max) is not None
+
+    def preview(self, n_elems: int, *,
+                deadline: float | None = None) -> float:
+        """Predicted cycles for an ``n_elems`` job — no plan is recorded.
+
+        The fleet router (DESIGN.md §8) scores a candidate request on every
+        fabric with this: the same calibrated model and extent selection
+        :meth:`plan` would use, but side-effect free (no ``plans`` entry, no
+        admission bookkeeping), since only ONE fabric will actually run the
+        job.  Infeasible deadlines price at the best-effort full fabric,
+        matching :meth:`plan`'s fallback.
+        """
+        model = self.calibrator.model
+        if deadline is not None:
+            m_min = decision.m_min_for_deadline(model, n_elems, deadline,
+                                                m_max=self.m_max)
+            m = (decision.next_available_m(m_min, self.available_m)
+                 if m_min is not None else None)
+            return float(model.predict(m if m is not None else self.m_max,
+                                       n_elems))
+        d = decision.should_offload(model, self.host_model, n_elems,
+                                    self.available_m)
+        return float(d.t_offload if d.offload else d.t_host)
 
     # ------------------------------------------------------------------ #
     def plan(self, n_elems: int, *, deadline: float | None = None,

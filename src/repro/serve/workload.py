@@ -18,7 +18,7 @@ floor alpha + beta*N) to exercise admission control.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

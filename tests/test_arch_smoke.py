@@ -3,17 +3,16 @@ forward + one train-like grad step + one decode step on CPU; asserts output
 shapes and absence of NaNs. Full-size configs are exercised only via the
 dry-run (ShapeDtypeStruct, no allocation)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.configs import ARCH_IDS, all_configs
 from repro.configs.shapes import (SHAPE_NAMES, cell_table, input_specs,
                                   shape_applicable)
-from repro.models import (ModelConfig, cross_entropy, decode_step, forward,
-                          init_cache, init_params, scaled_down)
+from repro.models import (cross_entropy, decode_step, forward, init_cache,
+                          init_params, scaled_down)
 
 
 @pytest.fixture(scope="module")

@@ -1,6 +1,5 @@
 """Tests for the offload-decision layer (paper Eq. 3)."""
 
-import pytest
 
 try:
     from hypothesis import assume, given, settings, strategies as st
@@ -9,7 +8,7 @@ except ImportError:  # no hypothesis: seeded-sampling shim, not a skip
 
 from repro.core import decision as dec
 from repro.core import simulator as sim
-from repro.core.runtime_model import PAPER_MODEL, OffloadModel
+from repro.core.runtime_model import PAPER_MODEL
 
 AVAILABLE = [1, 2, 4, 8, 16, 32]
 

@@ -10,7 +10,7 @@ from repro.core import decision as dec
 from repro.core import simulator as sim
 from repro.core.runtime_model import (LinearDispatchModel, OffloadModel,
                                       PAPER_MODEL)
-from repro.dse import (DEFAULT_M_GRID, DesignPoint, DesignSpace, PAPER_SPACE,
+from repro.dse import (DesignPoint, DesignSpace, PAPER_SPACE,
                        deadline_region, design_cost, dominates, front,
                        pareto_front, refit_design, run_sweep)
 from repro.kernels import ops

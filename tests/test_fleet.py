@@ -1,0 +1,356 @@
+"""Tests for fleet-scale serving (repro.serve.fleet + repro.dse.fleet).
+
+The two load-bearing properties (DESIGN.md §8):
+
+  * a fleet of ONE reference fabric is bit-identical — metrics and tokens —
+    to the single-fabric ``serve_workload`` path (the fleet layer composes
+    the existing machinery; it must not perturb it), and
+  * the model/lql routers are work-conserving on seeded traces: no fabric
+    that could serve a request sits idle while the chosen fabric already
+    has outstanding work.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                               # pragma: no cover
+    from proptest_fallback import given, settings, strategies as st
+
+from repro.core import simulator as sim
+from repro.core.runtime_model import PAPER_MODEL
+from repro.dse.fleet import (DEFAULT_COMPOSITIONS, FleetDesign, FleetSpace,
+                             composition_name, fabric_cost, fleet_cost,
+                             fleet_front, sweep_fleets)
+from repro.serve import (FabricFleet, OffloadAwareScheduler, OnlineCalibrator,
+                         Request, WorkloadSpec, fabric_prior, serve_fleet,
+                         serve_workload, synthetic_workload)
+
+STRAGGLER = WorkloadSpec(num_requests=96, rate_rps=2e6, gen_lens=(4, 16, 64),
+                         seed=7)
+PREFILL_HEAVY = WorkloadSpec(num_requests=96, rate_rps=2e6,
+                             prompt_lens=(1024, 2048, 4096, 8192),
+                             gen_lens=(4, 16, 64), slo_fraction=0.0, seed=7)
+
+
+# --------------------------------------------------------------------------- #
+# Core support: extent grids and per-fabric priors
+# --------------------------------------------------------------------------- #
+def test_extent_grid_powers_of_two_plus_fabric_size():
+    assert sim.extent_grid(32) == (1, 2, 4, 8, 16, 32)
+    assert sim.extent_grid(8) == (1, 2, 4, 8)
+    assert sim.extent_grid(1) == (1,)
+    assert sim.extent_grid(12) == (1, 2, 4, 8, 12)
+    with pytest.raises(ValueError):
+        sim.extent_grid(0)
+
+
+def test_fabric_prior_reference_is_paper_model():
+    assert fabric_prior(32) is PAPER_MODEL
+
+
+def test_fabric_prior_scaled_fabric_fits_its_own_hardware():
+    """A little fabric's prior must track ITS simulator, not the paper's:
+    the banked bus narrows (beta grows) and the wakeup tree shrinks."""
+    prior = fabric_prior(8)
+    assert prior is not PAPER_MODEL
+    assert prior.beta > PAPER_MODEL.beta       # 60 B/cy bus vs 96 B/cy
+    hw = sim.scaled_hw(8)
+    for m in sim.extent_grid(8):
+        for n in sim.PAPER_N_GRID_MODEL:
+            t = sim.offload_runtime(m, n, multicast=True, hw=hw)
+            assert abs(float(prior.predict(m, n)) - t) / t < 0.02
+
+
+def test_scheduler_preview_matches_plan_without_recording():
+    sched = OffloadAwareScheduler(OnlineCalibrator(),
+                                  available_m=(1, 2, 4, 8, 16, 32))
+    for n, deadline in [(16, None), (1024, None), (8192, None),
+                        (1024, 700.0), (1024, 640.0), (4096, 1500.0)]:
+        t_preview = sched.preview(n, deadline=deadline)
+        plan = sched.plan(n, deadline=deadline)
+        assert t_preview == pytest.approx(plan.t_pred)
+    # preview() recorded nothing; plan() recorded one entry per call.
+    assert len(sched.plans) == 6 and len(sched.admissions) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Single-fabric equivalence: the fleet layer must not perturb the stack
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("router", ["model", "rr", "lql"])
+def test_one_fabric_fleet_identical_to_single_path(pipeline, router):
+    single = serve_workload(STRAGGLER, execute=False, pipeline=pipeline)
+    fleet = serve_fleet(STRAGGLER, fleet=(32,), router=router,
+                        pipeline=pipeline)
+    assert (single["metrics"].summary()
+            == fleet["lanes"][0]["metrics"].summary())
+    for a, b in zip(single["requests"], fleet["requests"]):
+        assert a.rid == b.rid
+        assert a.t_done == b.t_done
+        assert a.t_first_token == b.t_first_token
+        assert a.slo_met == b.slo_met
+        assert a.reject_reason == b.reject_reason
+    # The fleet aggregate reproduces the single-fabric headline numbers.
+    ss, fs = single["metrics"].summary(), fleet["metrics"].summary()
+    assert fs["throughput_rps"] == pytest.approx(ss["throughput_rps"])
+    assert fs["latency_us"]["p99"] == pytest.approx(ss["latency_us"]["p99"])
+    assert fs["imbalance"] == 0.0
+
+
+@pytest.mark.slow
+def test_one_fabric_fleet_tokens_identical_with_real_engine():
+    """Bit-identical generated tokens through the fleet layer (real JAX)."""
+    spec = WorkloadSpec(num_requests=6, rate_rps=2e6, prompt_lens=(4, 8),
+                        gen_lens=(2, 3), slo_fraction=0.0, seed=3)
+    single = serve_workload(spec, arch="chatglm3-6b", execute=True,
+                            max_batch=3, pipeline=True)
+    fleet = serve_fleet(spec, fleet=(32,), arch="chatglm3-6b", execute=True,
+                        max_batch=3, pipeline=True)
+    for a, b in zip(single["requests"], fleet["requests"]):
+        assert a.rid == b.rid
+        np.testing.assert_array_equal(a.generated, b.generated)
+
+
+# --------------------------------------------------------------------------- #
+# Router properties
+# --------------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["model", "lql"]))
+def test_router_work_conserving_on_seeded_traces(seed, policy):
+    """No feasible fabric sits idle while the chosen one has queued work:
+    at every decision with an idle feasible lane, an idle lane is chosen."""
+    spec = WorkloadSpec(num_requests=64, rate_rps=3e6, gen_lens=(4, 16, 64),
+                        seed=seed)
+    out = serve_fleet(spec, fleet=(32, 8, 8), router=policy, pipeline=True)
+    checked = 0
+    for d in out["routes"]:
+        idle_feasible = [i for i in range(3)
+                         if d.pending[i] == 0 and d.feasible[i]]
+        if idle_feasible:
+            assert d.lane in idle_feasible, d
+            checked += 1
+    assert checked > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_router_model_prefers_feasible_lanes(seed):
+    """While a lane that can meet the SLO exists, the request goes there."""
+    spec = WorkloadSpec(num_requests=64, rate_rps=3e6, seed=seed)
+    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
+    for d in out["routes"]:
+        if any(d.feasible):
+            assert d.feasible[d.lane], d
+
+
+def test_globally_infeasible_request_charges_no_backlog():
+    """Regression: a request no lane can serve is rejected instantly at
+    admission — routing it must not make the chosen lane look busy."""
+    fleet = FabricFleet((32, 8), router="model", jitter_pct=0.0)
+    # Serial floor of N=1024 exceeds this deadline on every fabric.
+    doomed = [Request(rid=i, arrival=float(i), prompt_len=1024, gen_len=1,
+                      slo_cycles=100.0) for i in range(4)]
+    ok = Request(rid=4, arrival=4.0, prompt_len=1024, gen_len=1)
+    out = fleet.run(doomed + [ok])
+    assert out["metrics"].summary()["rejected"] == 4
+    for d in out["routes"]:
+        assert d.pending == (0, 0)      # phantom work never queued
+
+
+def test_router_rr_cycles_lanes():
+    out = serve_fleet(STRAGGLER, fleet=(16, 16, 16), router="rr",
+                      pipeline=True)
+    lanes = [d.lane for d in out["routes"]]
+    assert lanes[:6] == [0, 1, 2, 0, 1, 2]
+
+
+def test_fleet_routes_cover_trace_and_preserve_requests():
+    out = serve_fleet(STRAGGLER, fleet=(32, 8, 8), router="model",
+                      pipeline=True)
+    assert len(out["routes"]) == STRAGGLER.num_requests
+    assert [r.rid for r in out["requests"]] == \
+        list(range(STRAGGLER.num_requests))
+    m = out["metrics"].summary()
+    assert m["submitted"] == STRAGGLER.num_requests
+    assert m["completed"] + m["rejected"] == m["submitted"]
+    # Per-lane request counts match the routing decisions.
+    from collections import Counter
+    hist = Counter(d.lane for d in out["routes"])
+    for i, lane_out in enumerate(out["lanes"]):
+        assert lane_out["metrics"].submitted == hist.get(i, 0)
+
+
+def test_fleet_per_fabric_calibrators_learn_their_own_hardware():
+    """Each lane's online calibration converges to ITS fabric's scaled
+    coefficients — the big fabric's beta stays near the paper's 1/4, the
+    littles' near 24/60 (the narrower banked bus).  The SLO-carrying trace
+    spreads the chosen extents (Eq. 3), giving every lane the M diversity
+    an online refit needs."""
+    spec = WorkloadSpec(num_requests=128, rate_rps=4e6,
+                        gen_lens=(4, 16, 64), seed=7)
+    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
+    snaps = out["calibrations"]
+    assert all(s.source == "fitted" for s in snaps)
+    assert abs(snaps[0].beta - 0.25) < 0.03
+    for s in snaps[1:]:
+        assert abs(s.beta - 0.40) < 0.05
+    assert all(s.window_mape_pct <= 2.0 for s in snaps)
+
+
+def test_fleet_prior_only_trace_keeps_per_fabric_priors():
+    """Without SLOs every plan picks the same (best) extent, the window
+    lacks M diversity, and each lane keeps serving its own fabric's prior —
+    which already fits that fabric's scaled hardware within the Eq.-2 bar."""
+    out = serve_fleet(PREFILL_HEAVY, fleet=(32, 8, 8), router="model",
+                      pipeline=True)
+    snaps = out["calibrations"]
+    assert all(s.source == "prior" for s in snaps)
+    assert snaps[0].alpha == PAPER_MODEL.alpha
+    assert all(s.window_mape_pct <= 2.0 for s in snaps)
+
+
+def test_heterogeneous_model_routing_beats_round_robin():
+    """The acceptance A/B at test scale: model-driven routing wins both
+    headline metrics on the big+little fleet, same completion set."""
+    outs = {p: serve_fleet(PREFILL_HEAVY, fleet=(32, 8, 8), router=p,
+                           pipeline=True)
+            for p in ("model", "rr")}
+    ms = outs["model"]["metrics"].summary()
+    rs = outs["rr"]["metrics"].summary()
+    assert ms["completed"] == rs["completed"] == PREFILL_HEAVY.num_requests
+    assert ms["throughput_rps"] > rs["throughput_rps"]
+    assert ms["latency_us"]["p99"] <= rs["latency_us"]["p99"]
+
+
+def test_idle_lane_does_not_poison_imbalance():
+    """Regression: a lane the router (correctly) never used has default
+    t_end=0.0 — that is not a finish time, and a healthy light-load run
+    must not report near-total imbalance because of it."""
+    spec = WorkloadSpec(num_requests=16, rate_rps=2e4,
+                        prompt_lens=(4096, 8192), slo_fraction=0.0, seed=3)
+    out = serve_fleet(spec, fleet=(32, 8), router="model", pipeline=True)
+    hist = {d.lane for d in out["routes"]}
+    assert hist == {0}      # light load, long prompts: big lane only
+    s = out["metrics"].summary()
+    assert s["imbalance"] == 0.0            # one served lane, no spread
+    assert s["load_cv"] > 0.9               # the idle lane IS zero load
+
+
+def test_all_rejected_composition_scores_worst_not_crash():
+    """Regression: a composition whose lanes reject every request has no
+    latency distribution; it must rank strictly worst, not crash the
+    Pareto front."""
+    from repro.dse.fleet import evaluate_fleet
+    # Deadlines sampled for the 32-extent grid; an 8-cluster fleet must
+    # reject every SLO-carrying request (needs more clusters than it has).
+    spec = WorkloadSpec(num_requests=24, rate_rps=2e6, slo_fraction=1.0,
+                        infeasible_fraction=0.0, prompt_lens=(1024,),
+                        slack_factor=(1.02, 1.05), m_grid=(32,), seed=5)
+    results = sweep_fleets([FleetDesign(sizes=(8,)),
+                            FleetDesign(sizes=(32,))], spec)
+    bad, good = results
+    assert bad.completed == 0 and bad.p99_us == float("inf")
+    assert good.completed > 0
+    front = fleet_front(results)
+    assert good in front
+    from repro.dse.fleet import summarize_fleets
+    assert "inf" in summarize_fleets(results)
+
+
+def test_fleet_metrics_summary_shapes():
+    out = serve_fleet(STRAGGLER, fleet=(16, 8, 8), router="model")
+    fm = out["metrics"]
+    s = fm.summary()
+    assert s["fabrics"] == 3 and len(s["per_fabric"]) == 3
+    assert 0.0 <= s["imbalance"] and s["load_cv"] >= 0.0
+    assert s["goodput_rps"] <= s["throughput_rps"]
+    text = fm.format_summary()
+    assert "fleet: 3 fabrics" in text and "[f1:8c]" in text
+
+
+def test_fleet_rejects_bad_configuration():
+    with pytest.raises(ValueError):
+        FabricFleet(())
+    with pytest.raises(ValueError):
+        FabricFleet((32,), router="fastest")
+    with pytest.raises(ValueError):
+        FabricFleet((32, 8), engines=[None])
+
+
+# --------------------------------------------------------------------------- #
+# DSE fleet-composition axis
+# --------------------------------------------------------------------------- #
+def test_composition_names():
+    assert composition_name((32,)) == "1x32"
+    assert composition_name((16, 16)) == "2x16"
+    assert composition_name((16, 8, 8)) == "16+8+8"
+
+
+def test_fleet_cost_structure():
+    # Same budget, more fabrics -> more silicon (per-fabric host/bus
+    # overheads; the banked bus scales sub-linearly).
+    assert fleet_cost((16, 16)) > fleet_cost((32,))
+    assert fleet_cost((8, 8, 8, 8)) > fleet_cost((16, 16))
+    assert fleet_cost((32,)) == pytest.approx(fabric_cost(32))
+    # The reference fabric's cost is design_cost-compatible: bus + cores
+    # + multicast + credit + double buffer + per-fabric overhead.
+    assert fabric_cost(32) == pytest.approx(2.50)
+
+
+def test_fleet_space_budget_and_grid():
+    space = FleetSpace()
+    assert space.size == len(DEFAULT_COMPOSITIONS)
+    designs = list(space.grid())
+    assert all(d.clusters <= space.budget for d in designs)
+    with pytest.raises(ValueError):
+        FleetSpace(compositions=((64,),))
+    with pytest.raises(ValueError):
+        FleetSpace(routers=("fastest",))
+    with pytest.raises(ValueError):
+        FleetDesign(sizes=())
+
+
+def test_fleet_sweep_front_non_dominated():
+    spec = WorkloadSpec(num_requests=48, rate_rps=2e6,
+                        prompt_lens=(1024, 2048, 4096, 8192),
+                        gen_lens=(4, 16, 64), slo_fraction=0.0, seed=7)
+    results = sweep_fleets(FleetSpace(), spec)
+    assert len(results) == len(DEFAULT_COMPOSITIONS)
+    front = fleet_front(results)
+    assert front
+    # No front member may be dominated on (throughput, p99, cost).
+    for r in front:
+        for other in results:
+            if other is r:
+                continue
+            assert not (other.throughput_rps >= r.throughput_rps
+                        and other.p99_us <= r.p99_us
+                        and other.cost <= r.cost
+                        and (other.throughput_rps > r.throughput_rps
+                             or other.p99_us < r.p99_us
+                             or other.cost < r.cost))
+    # Composition results are deterministic per seed.
+    again = sweep_fleets(FleetSpace(), spec)
+    assert [r.throughput_rps for r in again] == \
+        [r.throughput_rps for r in results]
+
+
+def test_single_request_goes_to_fastest_feasible_fabric():
+    """With an empty fleet, the model router picks the fabric with the
+    lowest predicted completion — the big one for a long prompt."""
+    fleet = FabricFleet((32, 8, 8), router="model", jitter_pct=0.0)
+    reqs = [Request(rid=0, arrival=0.0, prompt_len=4096, gen_len=1)]
+    out = fleet.run(reqs)
+    assert out["routes"][0].lane == 0
+    assert out["routes"][0].scores[0] == min(out["routes"][0].scores)
+
+
+def test_workload_reuse_across_policies_does_not_mutate_requests():
+    reqs = synthetic_workload(STRAGGLER, with_tokens=False)
+    arrivals = [r.arrival for r in reqs]
+    FabricFleet((16, 8), router="model").run(
+        synthetic_workload(STRAGGLER, with_tokens=False))
+    assert [r.arrival for r in reqs] == arrivals

@@ -1,9 +1,7 @@
 """Data pipeline, checkpointing, and fault-tolerance substrate tests."""
 
-import json
 import threading
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

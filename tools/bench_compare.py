@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Diff benchmark records against a committed baseline; fail on regression.
+
+The benchmark aggregator (``benchmarks/run.py --json``) emits a flat list of
+``{section, name, value, unit}`` records.  This tool compares the *headline*
+records — speedups and virtual-domain throughputs, which are deterministic
+per seed — of a fresh run against a committed baseline (the BENCH_*.json
+trajectory), and exits 1 when any of them regressed by more than the
+tolerance.  CI runs it after the smoke benchmark, so a perf regression
+fails the build with a named record instead of rotting silently:
+
+    python -m benchmarks.run --fast --smoke --json BENCH_SMOKE.json
+    python tools/bench_compare.py BENCH_SMOKE.json \\
+        benchmarks/baselines/BENCH_SMOKE.json --tolerance 10
+
+Headline selection is pattern-based (fnmatch on the record name); the
+default set covers every speedup and virtual-throughput record and nothing
+wall-clock-dependent.  ``--pattern`` replaces it (repeatable; prefix a
+pattern with ``~`` for lower-is-better records such as latencies).  A
+headline record present in the baseline but missing from the current run is
+a failure too — silently dropping a tracked number is how trajectories rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from fnmatch import fnmatch
+from pathlib import Path
+
+#: Default headline patterns: name glob -> True when higher is better.
+#: Speedups and virtual-domain (simulated-cycle) throughputs only — every
+#: one deterministic per seed, none wall-clock-dependent.
+DEFAULT_PATTERNS: list[tuple[str, bool]] = [
+    ("*speedup*", True),          # fig1 speedups, engine steady-state, DSE
+    ("*_throughput", True),       # serve + fleet + composition req/s-virtual
+    ("*_goodput", True),
+    ("*_tokens_per_s", True),
+]
+
+
+def load_records(path: Path) -> dict[tuple[str, str], dict]:
+    records = json.loads(path.read_text())
+    return {(r["section"], r["name"]): r for r in records}
+
+
+def headline(name: str, patterns: list[tuple[str, bool]]) -> bool | None:
+    """Higher-is-better flag when ``name`` is a headline, else None."""
+    for pattern, higher in patterns:
+        if fnmatch(name, pattern):
+            return higher
+    return None
+
+
+def compare(current: dict, baseline: dict, *, tolerance_pct: float,
+            patterns: list[tuple[str, bool]]) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes) comparing headline records."""
+    failures: list[str] = []
+    notes: list[str] = []
+    for key, base in sorted(baseline.items()):
+        higher = headline(base["name"], patterns)
+        if higher is None:
+            continue
+        section, name = key
+        if key not in current:
+            failures.append(f"{section}/{name}: headline record missing "
+                            f"from current run (baseline {base['value']:g})")
+            continue
+        cur, ref = current[key]["value"], base["value"]
+        if ref == 0:
+            notes.append(f"{section}/{name}: zero baseline, skipped")
+            continue
+        # Signed delta normalized by |baseline|: a plain ratio would invert
+        # the regression direction for negative-valued baselines (e.g. a
+        # p99 *delta* record shrinking from -62% toward 0 is a regression
+        # under a ~lower-is-better pattern, not an improvement).
+        change_pct = (cur - ref) / abs(ref) * 100.0
+        worse = -change_pct if higher else change_pct
+        line = (f"{section}/{name}: {ref:g} -> {cur:g} "
+                f"({change_pct:+.1f}%)")
+        if worse > tolerance_pct:
+            failures.append(f"{line} REGRESSED beyond {tolerance_pct:g}%")
+        elif worse < -tolerance_pct:
+            notes.append(f"{line} improved — consider refreshing the "
+                         "baseline")
+        else:
+            notes.append(line)
+    return failures, notes
+
+
+def parse_patterns(raw: list[str] | None) -> list[tuple[str, bool]]:
+    if not raw:
+        return DEFAULT_PATTERNS
+    return [(p[1:], False) if p.startswith("~") else (p, True) for p in raw]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("current", type=Path,
+                    help="records of the run under test (benchmarks/run.py "
+                         "--json output)")
+    ap.add_argument("baseline", type=Path,
+                    help="committed baseline records (BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=10.0, metavar="PCT",
+                    help="allowed relative regression per headline record "
+                         "(default 10%%)")
+    ap.add_argument("--pattern", action="append", metavar="GLOB",
+                    help="replace the default headline set (repeatable; "
+                         "prefix with ~ for lower-is-better records)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print failures only")
+    args = ap.parse_args(argv)
+
+    current = load_records(args.current)
+    baseline = load_records(args.baseline)
+    patterns = parse_patterns(args.pattern)
+    failures, notes = compare(current, baseline,
+                              tolerance_pct=args.tolerance,
+                              patterns=patterns)
+
+    if not args.quiet:
+        for line in notes:
+            print(f"  {line}")
+    compared = len(notes) + len(failures)
+    if failures:
+        print(f"bench compare: {len(failures)}/{compared} headline "
+              f"record(s) regressed beyond {args.tolerance:g}%:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print(f"bench compare: {compared} headline record(s) within "
+          f"{args.tolerance:g}% of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
