@@ -93,6 +93,34 @@ def analyze(dryrun_dir: Path, mesh: str = "single") -> list[dict]:
     return rows
 
 
+def records(rows: list[dict]) -> list[dict]:
+    """Flat {section, name, value, unit} records for ``benchmarks/run.py``.
+
+    These are *analytic* descriptors of the roofline (which term binds each
+    cell, the MFU at the bound), deterministic given the model code — their
+    names deliberately avoid the trajectory gate's headline globs
+    (tools/bench_compare.py), since nothing here is a measured win.
+    """
+    live = [r for r in rows if not r.get("skipped")]
+    if not live:
+        return []
+    out: list[dict] = []
+
+    def rec(name, value, unit):
+        out.append({"section": "roofline", "name": name,
+                    "value": float(value), "unit": unit})
+
+    rec("cells_analyzed", len(live), "cells")
+    rec("mfu_at_bound_best", max(r["mfu_at_bound"] for r in live), "frac")
+    rec("mfu_at_bound_mean",
+        sum(r["mfu_at_bound"] for r in live) / len(live), "frac")
+    for dom in ("compute", "memory", "collective"):
+        rec(f"{dom}_bound_cells",
+            sum(r["dominant"] == dom for r in live), "cells")
+    rec("bound_s_worst", max(r["bound_s"] for r in live), "s")
+    return out
+
+
 def to_markdown(rows: list[dict]) -> str:
     out = ["| arch | shape | compute s | memory s | collective s | dominant "
            "| MFU@bound | useful FLOP ratio | peak GiB/dev |",

@@ -148,7 +148,8 @@ class OffloadEngine:
     """
 
     def __init__(self, *, hw: HWParams = HWParams(),
-                 buffering: str = "single"):
+                 buffering: str = "single", tracer=None,
+                 proc: str = "fabric"):
         if buffering not in BUFFERING_MODES:
             raise ValueError(
                 f"buffering must be one of {BUFFERING_MODES}, "
@@ -156,10 +157,20 @@ class OffloadEngine:
         self.hw = hw
         self.buffering = buffering
         self.depth = _DEPTH[buffering]
+        # Optional span tracer (repro.obs): per-job dispatch/exec/sync phase
+        # spans on the proc's host/fabric/sync tracks.  None keeps every
+        # event site at a single attribute check (the zero-overhead default).
+        self.tracer = tracer
+        self.proc = proc
         self.jobs: list[JobRecord] = []
         self._host = _HostTimeline()
         self._fabric_free = 0.0         # fabric execution is FIFO
         self._fabric_busy = 0.0         # total fabric-busy cycles
+        # Per-phase busy totals (DESIGN.md §9): same decomposition as the
+        # traced spans, so trace counters and utilization() agree.
+        self._dispatch_busy = 0.0       # host descriptor-construction cycles
+        self._sync_busy = 0.0           # exec_done -> t_done cycles per job
+        self._host_busy = 0.0           # reserved host cycles (all sources)
         self._last_exec: tuple[float, float] | None = None
         self._fabric_tdones: list[float] = []   # retire times, FIFO order
         self._completed_upto = 0        # poll() cursor
@@ -242,12 +253,33 @@ class OffloadEngine:
 
         for start, end in host_busy:
             self._host.reserve(start, end)
+            self._host_busy += end - start
         self._fabric_free = e_done
         self._fabric_busy += e_cycles
+        self._dispatch_busy += d_cycles
+        self._sync_busy += t_done - e_done
         self._last_exec = (e_start, e_done)
         self._fabric_tdones.append(t_done)
         self.jobs.append(rec)
+        if self.tracer is not None:
+            self._trace_offload(rec)
         return rec
+
+    def _trace_offload(self, rec: JobRecord) -> None:
+        """Phase spans of one offload: dispatch (host), exec (fabric), sync
+        (completion signal + host return).  The three durations partition
+        [dispatch_start, t_done) exactly for an isolated job, so they sum
+        to the Eq.-1 closed form (property-tested in tests/test_obs.py)."""
+        t = self.tracer
+        ident = {"job": rec.job_id, "n": rec.n_elems, "m": rec.m_clusters}
+        t.span(self.proc, "host", "dispatch", rec.dispatch_start,
+               rec.dispatch_done - rec.dispatch_start, args=ident)
+        t.span(self.proc, "fabric", "exec", rec.exec_start,
+               rec.exec_done - rec.exec_start,
+               args={**ident, "bubble": rec.bubble, "overlap": rec.overlap})
+        t.span(self.proc, "sync", "sync", rec.exec_done,
+               rec.t_done - rec.exec_done,
+               args={**ident, "sync": rec.sync})
 
     def _submit_host(self, n, kernel, t_submit, exec_scale) -> JobRecord:
         cycles = math.ceil(
@@ -266,7 +298,12 @@ class OffloadEngine:
             lo, hi = self._last_exec
             rec.overlap = max(0.0, min(done, hi) - max(start, lo))
         self._host.reserve(start, done)
+        self._host_busy += done - start
         self.jobs.append(rec)
+        if self.tracer is not None:
+            self.tracer.span(self.proc, "host", "host", start, done - start,
+                             args={"job": rec.job_id, "n": n,
+                                   "overlap": rec.overlap})
         return rec
 
     # ------------------------------------------------------------------ #
@@ -286,17 +323,36 @@ class OffloadEngine:
 
     # ------------------------------------------------------------------ #
     def utilization(self) -> dict:
-        """Aggregate overlap/bubble accounting over every submitted job."""
+        """Aggregate overlap/bubble + per-phase busy accounting.
+
+        ``fabric_busy`` is the execution-phase total (``exec_total`` is its
+        explicit alias); ``dispatch_total``/``sync_total`` are the host-side
+        and completion-path phase totals of the same decomposition the
+        traced spans use, and ``host_busy`` sums every reserved host
+        interval (dispatch + completion handling + host-fallback jobs +
+        poll busy-waits) — so trace counters and this dict agree
+        (DESIGN.md §9).  A single-instant schedule (every event at one
+        timestamp, e.g. only zero-cycle jobs) has ``span == 0``; the
+        utilization ratios are defined as 0.0 there, not NaN.
+        """
         offloads = [r for r in self.jobs if r.offload]
         span = (max(r.t_done for r in self.jobs)
                 - min(r.dispatch_start for r in self.jobs)
                 if self.jobs else 0.0)
+        single_instant = span <= 0.0
         return {
             "jobs": len(self.jobs),
             "offloads": len(offloads),
             "span": span,
             "fabric_busy": self._fabric_busy,
-            "fabric_util": self._fabric_busy / span if span else 0.0,
+            "dispatch_total": self._dispatch_busy,
+            "exec_total": self._fabric_busy,
+            "sync_total": self._sync_busy,
+            "host_busy": self._host_busy,
+            "fabric_util": (0.0 if single_instant
+                            else self._fabric_busy / span),
+            "host_util": (0.0 if single_instant
+                          else self._host_busy / span),
             "overlap_total": sum(r.overlap for r in self.jobs),
             "bubble_total": sum(r.bubble for r in offloads),
         }

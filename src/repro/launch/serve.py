@@ -82,6 +82,39 @@ def serve(arch: str, *, reduced: bool = True, prompts: int = 4,
     }
 
 
+def _make_obs(args):
+    """Tracer + residual tracker when a tracing flag is set (else no-ops).
+
+    Tracing is strictly opt-in: without ``--trace``/``--trace-jsonl`` the
+    serving stack runs with ``tracer=None`` and pays nothing (DESIGN.md §9).
+    """
+    if not (args.trace or args.trace_jsonl):
+        return None, None
+    from repro.obs import ResidualTracker, Tracer
+    return Tracer(), ResidualTracker()
+
+
+def _finish_obs(args, out, tracer, residuals) -> None:
+    """Write the requested trace/metrics artifacts and the drift summary."""
+    import json
+
+    if residuals is not None and residuals.lanes():
+        print(residuals.format_summary())
+    if tracer is not None and args.trace:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(tracer, args.trace)
+        print(f"trace: {len(tracer.events)} events -> {args.trace} "
+              f"(load in Perfetto or chrome://tracing)")
+    if tracer is not None and args.trace_jsonl:
+        from repro.obs import write_jsonl
+        write_jsonl(tracer, args.trace_jsonl)
+        print(f"trace event log -> {args.trace_jsonl}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(out["metrics"].summary(), f, indent=2, sort_keys=True)
+        print(f"metrics summary -> {args.metrics_json}")
+
+
 def serve_fleet_stream(args) -> dict:
     """Drive the multi-fabric fleet (DESIGN.md §8) on the open-loop trace."""
     from repro.serve import WorkloadSpec, serve_fleet
@@ -98,11 +131,13 @@ def serve_fleet_stream(args) -> dict:
         slo_fraction=args.slo_fraction,
         seed=args.seed,
     )
+    tracer, residuals = _make_obs(args)
     out = serve_fleet(spec, fleet=sizes, router=args.router, arch=args.arch,
                       reduced=args.reduced, execute=not args.no_execute,
                       max_batch=args.max_batch,
                       wave_boundary=args.wave_boundary,
-                      pipeline=args.pipeline, buffering=args.buffering)
+                      pipeline=args.pipeline, buffering=args.buffering,
+                      tracer=tracer, residuals=residuals)
 
     lane_hist: dict[int, int] = {}
     guarded = 0
@@ -125,6 +160,7 @@ def serve_fleet_stream(args) -> dict:
         print(f"  [{size}c] calibrated: a={snap.alpha:.1f} "
               f"b={snap.beta:.4f} g={snap.gamma:.4f} "
               f"({snap.source}, {snap.n_samples} samples, MAPE {mape})")
+    _finish_obs(args, out, tracer, residuals)
     return out
 
 
@@ -138,11 +174,13 @@ def serve_stream(args) -> dict:
         slo_fraction=args.slo_fraction,
         seed=args.seed,
     )
+    tracer, residuals = _make_obs(args)
     out = serve_workload(spec, arch=args.arch, reduced=args.reduced,
                          execute=not args.no_execute,
                          max_batch=args.max_batch, fabric=args.fabric,
                          wave_boundary=args.wave_boundary,
-                         pipeline=args.pipeline, buffering=args.buffering)
+                         pipeline=args.pipeline, buffering=args.buffering,
+                         tracer=tracer, residuals=residuals)
 
     if args.verbose:
         for adm in out["admissions"]:
@@ -177,6 +215,7 @@ def serve_stream(args) -> dict:
     if snap.window_mape_pct is not None:
         print(f"calibration MAPE vs measured step times: "
               f"{snap.window_mape_pct:.2f}%")
+    _finish_obs(args, out, tracer, residuals)
     return out
 
 
@@ -231,6 +270,16 @@ def main(argv=None):
                          "expect the model to learn they are infeasible)")
     ap.add_argument("--verbose", action="store_true",
                     help="log every admission decision and prefill plan")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run as a Chrome/Perfetto trace "
+                         "(docs/observability.md); tracing is off — and "
+                         "costs nothing — without this flag")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="also write the raw trace events as JSON lines "
+                         "(one event per line, for ad-hoc analysis)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the machine-readable metrics summary() dict "
+                         "as JSON (single-fabric and fleet)")
     args = ap.parse_args(argv)
 
     if args.one_shot:

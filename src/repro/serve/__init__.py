@@ -76,6 +76,8 @@ def serve_workload(
     wave_boundary: bool = False,
     pipeline: bool = False,
     buffering: str | None = None,
+    tracer=None,
+    residuals=None,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
 
@@ -107,6 +109,13 @@ def serve_workload(
     design's hardware/dispatch/sync/kernel, and — unless an explicit
     ``calibrator`` is passed — the scheduler's prior becomes the design's own
     Eq.-1 refit rather than ``PAPER_MODEL`` (DESIGN.md §3.4).
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the run as structured
+    spans — engine phases, request lifecycle, scheduler/calibrator decisions
+    — and ``residuals`` (a :class:`repro.obs.ResidualTracker`) pairs every
+    prediction with its measured outcome (DESIGN.md §9).  The trace process
+    is named like a one-lane fleet's lane 0 (``f0:{clusters}c``), so a 1x32
+    fleet trace is event-identical to this path modulo routing.
     """
     spec = spec or WorkloadSpec()
     if design is not None and fabric != "simulated":
@@ -156,8 +165,17 @@ def serve_workload(
         host_model = lambda n: float("inf")  # noqa: E731
     else:
         raise ValueError(f"unknown fabric {fabric!r}")
+    proc = f"f0:{max(available_m)}c"
+    if tracer is not None:
+        calibrator.tracer = tracer
+        calibrator.proc = proc
+        if isinstance(fabric_src, SimulatedFabric):
+            fabric_src.proc = proc
+            fabric_src.engine.tracer = tracer
+            fabric_src.engine.proc = proc
     scheduler = OffloadAwareScheduler(calibrator, available_m=available_m,
-                                      host_model=host_model)
+                                      host_model=host_model,
+                                      tracer=tracer, proc=proc)
 
     engine = None
     if execute:
@@ -179,7 +197,8 @@ def serve_workload(
     batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
                                 engine=engine, max_batch=max_batch,
                                 wave_boundary=wave_boundary,
-                                pipeline=pipeline)
+                                pipeline=pipeline, tracer=tracer,
+                                residuals=residuals, proc=proc)
     out = batcher.run(requests)
     out["arch"] = arch
     out["spec"] = spec

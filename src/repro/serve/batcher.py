@@ -314,11 +314,14 @@ class ContinuousBatcher:
                  max_batch: int | None = None,
                  metrics: ServeMetrics | None = None,
                  wave_boundary: bool = False,
-                 pipeline: bool = False):
+                 pipeline: bool = False,
+                 tracer=None, residuals=None,
+                 proc: str = "fabric", flow: bool = False):
         self.scheduler = scheduler
         self.calibrator = calibrator
         self.fabric = fabric or SimulatedFabric(
-            buffering="double" if pipeline else "single")
+            buffering="double" if pipeline else "single",
+            tracer=tracer, proc=proc)
         self.engine = engine
         self.max_batch = (engine.max_batch if engine is not None
                           else (max_batch or 4))
@@ -332,6 +335,21 @@ class ContinuousBatcher:
                              "async protocol (submit/ready/complete)")
         self.wave_boundary = wave_boundary
         self.pipeline = pipeline
+        # Observability (repro.obs) — all optional, zero-cost when unset:
+        #   tracer    span/instant/counter sink (request lifecycle on the
+        #             "requests" track, scheduled jobs on "jobs", slot
+        #             occupancy on "slots", drift instants on "residuals");
+        #   residuals ResidualTracker pairing every plan's t_pred with the
+        #             measured job time (the calibrator's sample stream);
+        #   proc      trace process name (the lane name under a fleet);
+        #   flow      close router->execution flow arrows (fleet only, so
+        #             single-fabric traces stay event-identical to a 1-lane
+        #             fleet modulo routing).
+        self.tracer = tracer
+        self.residuals = residuals
+        self.proc = proc
+        self.flow = flow
+        self._wall_t = 0.0   # wall-domain trace clock (real engine steps)
         # With a real engine attached, at most one decode may overlap an
         # in-flight prefill: the prefill is chained on that decode's cache
         # future (JAX buffer donation makes the cache pytree a linear
@@ -358,10 +376,15 @@ class ContinuousBatcher:
         wave_deadline: float | None = None
         for req in list(queue.arrived(clock)):
             if req.t_admitted is None:  # admission control runs once
-                verdict = self.scheduler.admit(req)
+                verdict = self.scheduler.admit(req, now=clock)
                 if not verdict.admitted:
                     queue.reject(req, verdict.reason)
                     self.metrics.rejected += 1
+                    if self.tracer is not None and self.flow:
+                        # Terminate the router's flow arrow here: the
+                        # request's journey ends at this lane's admission.
+                        self.tracer.flow_end(self.proc, "requests", "route",
+                                             clock, flow=req.rid)
                     continue
                 req.t_admitted = clock
                 self.metrics.admitted += 1
@@ -429,6 +452,10 @@ class ContinuousBatcher:
         m.latency_cycles.add(r.latency())
         if r.slo_met is not False:
             m.goodput_completed += 1
+        if self.tracer is not None:
+            self.tracer.instant(self.proc, "requests", "done", now,
+                                args={"rid": r.rid, "latency": r.latency(),
+                                      "slo_met": r.slo_met})
 
     def _record_prefill_member(self, r: Request, t_job: float,
                                clock: float) -> None:
@@ -446,19 +473,65 @@ class ContinuousBatcher:
                 m.slo_missed += 1
 
     def _account_job(self, plan: BatchPlan, t_cycles: float,
-                     n_exec: int | None = None) -> None:
-        """Feed counters and — for offloaded jobs — the online calibrator."""
+                     n_exec: int | None = None, now: float = 0.0) -> None:
+        """Feed counters and — for offloaded jobs — the online calibrator.
+
+        ``now`` is the job's virtual completion time: it timestamps refit
+        trace events and the residual series, never the fit itself.
+        """
         if plan.offload:
             self.calibrator.observe(plan.m,
                                     plan.n_elems if n_exec is None
-                                    else n_exec, t_cycles)
+                                    else n_exec, t_cycles, now=now)
             if plan.kind == "prefill":
                 self.metrics.prefill_jobs += 1
             else:
                 self.metrics.decode_jobs += 1
+            if self.residuals is not None:
+                # Drift telemetry: the scheduler's prediction for this job
+                # vs the measured time the calibrator just windowed — same
+                # sample population, so the windowed residual MAPE tracks
+                # the calibrator's window MAPE (tested to <= 1pp).
+                res = self.residuals.observe(self.proc, plan.kind,
+                                             plan.t_pred, t_cycles, t=now)
+                if res is not None and self.tracer is not None:
+                    self.tracer.instant(
+                        self.proc, "residuals", f"residual:{plan.kind}", now,
+                        args={"predicted": res.predicted,
+                              "actual": res.actual,
+                              "ape_pct": res.ape_pct,
+                              "window_mape_pct": self.residuals.mape(
+                                  self.proc, plan.kind)})
         else:
             self.metrics.host_jobs += 1
         self.metrics.job_cycles.add(t_cycles)
+
+    def _trace_job(self, plan: BatchPlan, t0: float, dur: float) -> None:
+        """One scheduled job as a span on this lane's "jobs" track."""
+        if self.tracer is not None:
+            self.tracer.span(self.proc, "jobs", f"job:{plan.kind}", t0, dur,
+                             args={"n": plan.n_elems, "m": plan.m,
+                                   "offload": plan.offload,
+                                   "t_pred": plan.t_pred})
+
+    def _trace_occupancy(self, ts: float, occupied: int) -> None:
+        if self.tracer is not None:
+            self.tracer.counter(self.proc, "slots", "slots_occupied", ts,
+                                occupied)
+
+    def _record_wall(self, wall_s: float, name: str) -> None:
+        """One measured real-engine step: metrics + a wall-domain span.
+
+        Wall seconds share no epoch with the virtual cycle clock, so these
+        spans live on their own time axis (the exporter renders them as a
+        separate ``wall:`` process, DESIGN.md §9): consecutive measured
+        steps laid end to end.
+        """
+        self.metrics.step_wall_s.add(wall_s)
+        if self.tracer is not None:
+            self.tracer.span(self.proc, "engine", name, self._wall_t, wall_s,
+                             domain="wall_s", args={"wall_s": wall_s})
+        self._wall_t += wall_s
 
     # ------------------------------------------------------------------ #
     def run(self, requests: list[Request]) -> dict:
@@ -541,14 +614,18 @@ class ContinuousBatcher:
                 continue
 
             # One decode step over every occupied slot (per-slot lengths).
-            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode")
+            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode",
+                                       now=clock)
             wall = None
             if self.engine is not None:
                 next_tok, caches, wall = self.engine.decode(tok, caches, lens)
-                self.metrics.step_wall_s.add(wall)
+                self._record_wall(wall, "decode")
             t_dec = self._job_runtime(plan, wall)
-            self._account_job(plan, t_dec, self._executed_n(plan, None))
+            self._account_job(plan, t_dec, self._executed_n(plan, None),
+                              now=clock + t_dec)
             m.slot_occupancy.add(len(occ) / nb)
+            self._trace_job(plan, clock, t_dec)
+            self._trace_occupancy(clock, len(occ))
             clock += t_dec
             for i in occ:
                 lens[i] += 1
@@ -570,7 +647,16 @@ class ContinuousBatcher:
         deadline = min(slos) if slos else None
         for r in batch:
             self.metrics.queue_delay_cycles.add(clock - r.arrival)
-        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
+            if self.tracer is not None:
+                # Queue-delay span: arrival -> the prefill that serves it.
+                self.tracer.span(self.proc, "requests", "queued", r.arrival,
+                                 clock - r.arrival, args={"rid": r.rid})
+                if self.flow:
+                    # Close the router's flow arrow at the executing lane.
+                    self.tracer.flow_end(self.proc, "requests", "route",
+                                         clock, flow=r.rid)
+        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill",
+                                   now=clock)
         return plan, prompt_len
 
     def _stage_prefill_inputs(self, batch: list[Request], take: list[int],
@@ -613,9 +699,11 @@ class ContinuousBatcher:
             tokens, mask = self._stage_prefill_inputs(batch, take, prompt_len)
             next_tok, caches, wall = self.engine.prefill_into_slots(
                 tokens, caches, mask, self.metrics)
-            self.metrics.step_wall_s.add(wall)
+            self._record_wall(wall, "prefill")
         t_job = self._job_runtime(plan, wall)
-        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
+        self._account_job(plan, t_job, self._executed_n(plan, prompt_len),
+                          now=clock + t_job)
+        self._trace_job(plan, clock, t_job)
         clock += t_job
         self._place_prefilled(batch, take, slots, emitted, gen_buf, lens,
                               tok, t_job, clock, next_tok)
@@ -689,7 +777,8 @@ class ContinuousBatcher:
 
             # One decode step over the occupied slots, overlapped under the
             # in-flight prefill when there is one.
-            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode")
+            plan = self.scheduler.plan(len(occ), deadline=None, kind="decode",
+                                       now=clock)
             pending_d = None
             wall = None
             if self.engine is not None:
@@ -712,16 +801,18 @@ class ContinuousBatcher:
                 t_submit=clock, offload=plan.offload)
             if self.engine is not None:
                 next_tok, caches_d, wall = self.engine.wait_step(pending_d)
-                m.step_wall_s.add(wall)
+                self._record_wall(wall, "decode")
                 if inflight is None or inflight.pending is None:
                     caches = caches_d
                 # else: the decode's caches were donated into the in-flight
                 # prefill; the merged pytree arrives when it retires.
             job = self._complete(handle_d, wall)
             self._account_job(plan, job.effective,
-                              self._executed_n(plan, None))
+                              self._executed_n(plan, None), now=job.t_done)
             m.record_job_pipeline(job)
             m.slot_occupancy.add(len(occ) / nb)
+            self._trace_job(plan, job.t_done - job.total, job.total)
+            self._trace_occupancy(clock, len(occ))
             clock = max(clock, job.t_done)
             for i in occ:
                 lens[i] += 1
@@ -780,11 +871,13 @@ class ContinuousBatcher:
                 inflight.pending = self.engine.prefill_into_slots_async(
                     inflight.tokens, caches, inflight.mask, m)
             next_tok, caches, wall = self.engine.wait_step(inflight.pending)
-            m.step_wall_s.add(wall)
+            self._record_wall(wall, "prefill")
         job = self._complete(inflight.handle, wall)
         plan = inflight.plan
         self._account_job(plan, job.effective,
-                          self._executed_n(plan, inflight.prompt_len))
+                          self._executed_n(plan, inflight.prompt_len),
+                          now=job.t_done)
+        self._trace_job(plan, job.t_done - job.total, job.total)
         m.record_job_pipeline(job)
         if job.overlap > 0 or inflight.overlapped > 0:
             m.pipelined_prefills += 1
@@ -802,16 +895,10 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------ #
     def _serve_wave(self, wave: list[Request], queue: RequestQueue,
                     clock: float) -> float:
-        prompt_len = wave[0].prompt_len
-        n_job = sum(r.n_prompt_elems for r in wave)
-        slos = [r.slo_cycles for r in wave if r.slo_cycles is not None]
-        deadline = min(slos) if slos else None
         m = self.metrics
-        for r in wave:
-            m.queue_delay_cycles.add(clock - r.arrival)
 
         # --- prefill: one offload job for the whole wave ----------------
-        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill")
+        plan, prompt_len = self._plan_prefill(wave, clock)
         caches = None
         next_tok = None
         wall = None
@@ -820,9 +907,11 @@ class ContinuousBatcher:
             for slot, r in enumerate(wave):
                 tokens[slot] = r.tokens
             next_tok, caches, wall = self.engine.prefill(tokens, self.metrics)
-            self.metrics.step_wall_s.add(wall)
+            self._record_wall(wall, "prefill")
         t_job = self._job_runtime(plan, wall)
-        self._account_job(plan, t_job, self._executed_n(plan, prompt_len))
+        self._account_job(plan, t_job, self._executed_n(plan, prompt_len),
+                          now=clock + t_job)
+        self._trace_job(plan, clock, t_job)
         clock += t_job
 
         gen_buf: list[list[int]] = [[] for _ in wave]
@@ -841,16 +930,19 @@ class ContinuousBatcher:
             if not active:
                 break
             plan_d = self.scheduler.plan(len(active), deadline=None,
-                                         kind="decode")
+                                         kind="decode", now=clock)
             wall = None
             if self.engine is not None:
                 next_tok, caches, wall = self.engine.decode(
                     tok, caches, prompt_len + step)
-                self.metrics.step_wall_s.add(wall)
+                self._record_wall(wall, "decode")
                 tok = next_tok[:, None].astype(np.int32)
             t_dec = self._job_runtime(plan_d, wall)
-            self._account_job(plan_d, t_dec, self._executed_n(plan_d, None))
+            self._account_job(plan_d, t_dec, self._executed_n(plan_d, None),
+                              now=clock + t_dec)
             m.slot_occupancy.add(len(active) / self.max_batch)
+            self._trace_job(plan_d, clock, t_dec)
+            self._trace_occupancy(clock, len(active))
             clock += t_dec
             for slot, r in enumerate(wave):
                 if r.gen_len > step + 1:

@@ -54,7 +54,8 @@ class OnlineCalibrator:
 
     def __init__(self, *, prior: OffloadModel = PAPER_MODEL,
                  window: int = 512, min_samples: int = 12,
-                 refit_interval: int = 8):
+                 refit_interval: int = 8, tracer=None,
+                 proc: str = "fabric"):
         if window < min_samples:
             raise ValueError("window smaller than min_samples")
         self.prior = prior
@@ -66,35 +67,58 @@ class OnlineCalibrator:
         self._since_refit = 0
         self.n_observed = 0
         self.n_refits = 0
+        # Optional span tracer (repro.obs): refit instants with the
+        # before/after coefficients, on this lane's "calibrator" track.
+        self.tracer = tracer
+        self.proc = proc
 
     # ------------------------------------------------------------------ #
-    def observe(self, m: int, n: int, t_cycles: float) -> None:
-        """One completed offload: parallel extent m, job size n, measured t."""
+    def observe(self, m: int, n: int, t_cycles: float, *,
+                now: float = 0.0) -> None:
+        """One completed offload: parallel extent m, job size n, measured t.
+
+        ``now`` is the virtual-clock time of the observation — it only
+        timestamps trace events, never enters the fit.
+        """
         if t_cycles <= 0:
             return  # clock glitch; a non-positive runtime can't be real
         self._samples.append((int(m), int(n), float(t_cycles)))
         self.n_observed += 1
         self._since_refit += 1
         if self._since_refit >= self.refit_interval:
-            self._refit()
+            self._refit(now)
 
     def _diverse(self) -> bool:
         ms = {m for m, _, _ in self._samples}
         ns = {n for _, n, _ in self._samples}
         return len(ms) >= 2 and len(ns) >= 2
 
-    def _refit(self) -> None:
+    def _refit(self, now: float = 0.0) -> None:
         self._since_refit = 0
         if len(self._samples) < self.min_samples or not self._diverse():
             return
         fitted = runtime_model.fit(self._samples)
+        before = self._model
         # Accept only a model that explains the window at least as well as
         # whatever is currently being served (prior included).
-        if (runtime_model.mape(fitted, self._samples)
-                <= runtime_model.mape(self._model, self._samples)):
+        fitted_mape = runtime_model.mape(fitted, self._samples)
+        served_mape = runtime_model.mape(before, self._samples)
+        accepted = fitted_mape <= served_mape
+        if accepted:
             self._model = fitted
             self._source = "fitted"
             self.n_refits += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.proc, "calibrator", "refit", now,
+                args={"accepted": accepted,
+                      "before": {"alpha": before.alpha, "beta": before.beta,
+                                 "gamma": before.gamma},
+                      "after": {"alpha": fitted.alpha, "beta": fitted.beta,
+                                "gamma": fitted.gamma},
+                      "window_mape_pct": fitted_mape if accepted
+                      else served_mape,
+                      "n_samples": len(self._samples)})
 
     # ------------------------------------------------------------------ #
     @property

@@ -78,7 +78,8 @@ class SimulatedFabric:
                  dispatch: str | None = None, sync: str | None = None,
                  jitter_pct: float = 1.0, seed: int = 0,
                  num_clusters: int | None = None,
-                 buffering: str = "single"):
+                 buffering: str = "single", tracer=None,
+                 proc: str = "fabric"):
         # Fabric-size experiments: scale the interconnect parameters to a
         # fabric of ``num_clusters`` clusters (identity at the paper's 32).
         if num_clusters is not None:
@@ -95,10 +96,13 @@ class SimulatedFabric:
         self.jitter_pct = jitter_pct
         self.buffering = buffering
         self._rng = np.random.default_rng(seed)
+        self.proc = proc
         # The async protocol's resource timeline, shared by every job this
         # fabric serves (descriptor buffering is a property of the fabric,
-        # not of a job).
-        self.engine = OffloadEngine(hw=hw, buffering=buffering)
+        # not of a job).  The engine inherits the tracer, so pipelined jobs
+        # get per-phase spans on this fabric's host/fabric/sync tracks.
+        self.engine = OffloadEngine(hw=hw, buffering=buffering,
+                                    tracer=tracer, proc=proc)
 
     @classmethod
     def for_design(cls, point, *, jitter_pct: float = 1.0, seed: int = 0):

@@ -141,7 +141,8 @@ class Router:
     influence routing.
     """
 
-    def __init__(self, lanes: list[FleetLane], policy: str = "model"):
+    def __init__(self, lanes: list[FleetLane], policy: str = "model", *,
+                 tracer=None):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"router policy must be one of "
                              f"{ROUTER_POLICIES}, got {policy!r}")
@@ -153,6 +154,10 @@ class Router:
         self._inflight: list[list[float]] = [[] for _ in lanes]
         self._rr_next = 0
         self.decisions: list[RouteDecision] = []
+        # Optional span tracer (repro.obs): each decision becomes an instant
+        # on the "router" process carrying its evidence, plus a flow arrow
+        # the chosen lane's batcher closes at the serving prefill.
+        self.tracer = tracer
 
     def _drain(self, now: float) -> None:
         for fl in self._inflight:
@@ -208,6 +213,14 @@ class Router:
         self.decisions.append(RouteDecision(
             rid=req.rid, lane=choice, policy=self.policy, scores=scores,
             pending=pending, feasible=feasible, guarded=guarded))
+        if self.tracer is not None:
+            self.tracer.instant(
+                "router", "routes", f"route:{self.policy}", now,
+                args={"rid": req.rid, "lane": self.lanes[choice].name,
+                      "scores": list(scores), "pending": list(pending),
+                      "feasible": list(feasible), "guarded": guarded})
+            self.tracer.flow_start("router", "routes", "route", now,
+                                   flow=req.rid)
         return choice
 
 
@@ -228,7 +241,7 @@ class FabricFleet:
                  jitter_pct: float = 1.0, seed: int = 0,
                  max_batch: int = 4, wave_boundary: bool = False,
                  pipeline: bool = False, buffering: str | None = None,
-                 engines: list | None = None):
+                 engines: list | None = None, tracer=None, residuals=None):
         sizes = tuple(int(s) for s in sizes)
         if not sizes:
             raise ValueError("a fleet needs at least one fabric")
@@ -239,19 +252,28 @@ class FabricFleet:
         self.max_batch = max_batch
         self.wave_boundary = wave_boundary
         self.pipeline = pipeline
+        # Observability (repro.obs): one trace process per lane (named
+        # ``f{i}:{clusters}c``) plus a "router" process; the shared residual
+        # tracker keys drift series by the same lane names.
+        self.tracer = tracer
+        self.residuals = residuals
         self.lanes: list[FleetLane] = []
         for i, clusters in enumerate(sizes):
-            calibrator = OnlineCalibrator(prior=fabric_prior(clusters))
+            proc = f"f{i}:{clusters}c"
+            calibrator = OnlineCalibrator(prior=fabric_prior(clusters),
+                                          tracer=tracer, proc=proc)
             scheduler = OffloadAwareScheduler(
-                calibrator, available_m=sim.extent_grid(clusters))
+                calibrator, available_m=sim.extent_grid(clusters),
+                tracer=tracer, proc=proc)
             fabric = SimulatedFabric(jitter_pct=jitter_pct, seed=seed + i,
                                      num_clusters=clusters,
-                                     buffering=buffering)
+                                     buffering=buffering,
+                                     tracer=tracer, proc=proc)
             self.lanes.append(FleetLane(
                 index=i, num_clusters=clusters, fabric=fabric,
                 calibrator=calibrator, scheduler=scheduler,
                 engine=None if engines is None else engines[i]))
-        self.router = Router(self.lanes, router)
+        self.router = Router(self.lanes, router, tracer=tracer)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: list[Request]) -> dict:
@@ -273,7 +295,9 @@ class FabricFleet:
                 lane.scheduler, lane.calibrator, fabric=lane.fabric,
                 engine=lane.engine,
                 max_batch=None if lane.engine is not None else self.max_batch,
-                wave_boundary=self.wave_boundary, pipeline=self.pipeline)
+                wave_boundary=self.wave_boundary, pipeline=self.pipeline,
+                tracer=self.tracer, residuals=self.residuals,
+                proc=lane.name, flow=True)
             out = batcher.run(reqs)
             # An unused lane still reports an honest (empty) summary.
             if not reqs:
@@ -282,6 +306,19 @@ class FabricFleet:
 
         merged = sorted((r for out in lane_outs for r in out["requests"]),
                         key=lambda r: r.rid)
+        if self.residuals is not None:
+            # Routing drift, post hoc: the predicted-completion score the
+            # router chose on vs the request's actual completion time.
+            # Looser than the per-job residuals by construction (the score's
+            # decode share is a lower bound), but trended per lane it shows
+            # where the routing model drifts.
+            done = {r.rid: r.t_done for r in merged if r.t_done is not None}
+            for d in self.router.decisions:
+                actual = done.get(d.rid)
+                if actual is not None:
+                    self.residuals.observe(self.lanes[d.lane].name, "route",
+                                           d.scores[d.lane], actual,
+                                           t=actual)
         return {
             "requests": merged,
             "metrics": FleetMetrics([(lane.name, out["metrics"])
@@ -309,6 +346,8 @@ def serve_fleet(
     wave_boundary: bool = False,
     pipeline: bool = False,
     buffering: str | None = None,
+    tracer=None,
+    residuals=None,
 ) -> dict:
     """Run the fleet serving stack on a synthetic open-loop workload.
 
@@ -342,7 +381,8 @@ def serve_fleet(
     fleet_obj = FabricFleet(fleet, router=router, jitter_pct=jitter_pct,
                             seed=spec.seed, max_batch=max_batch,
                             wave_boundary=wave_boundary, pipeline=pipeline,
-                            buffering=buffering, engines=engines)
+                            buffering=buffering, engines=engines,
+                            tracer=tracer, residuals=residuals)
     out = fleet_obj.run(requests)
     out["arch"] = arch
     out["spec"] = spec

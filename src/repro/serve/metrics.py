@@ -20,16 +20,41 @@ from .workload import CYCLES_PER_SECOND
 
 
 class Recorder:
-    """Streaming collection with percentile summaries."""
+    """Streaming collection with percentile summaries.
 
-    def __init__(self):
+    The default keeps every sample (exact percentiles; ``series()`` is the
+    full recording).  ``reservoir=k`` is the bounded mode for long traced
+    runs: memory stays flat at k samples while ``len``/``mean``/``total``
+    remain *exact* via O(1) streaming accumulators — only percentiles
+    become estimates, computed over a uniform reservoir (Vitter's
+    Algorithm R, deterministic per recorder).  While the sample count is
+    still <= k the reservoir holds every sample, so ``summary()`` output is
+    unchanged on small runs (regression-tested in tests/test_obs.py).
+    """
+
+    def __init__(self, reservoir: int | None = None):
+        if reservoir is not None and reservoir < 1:
+            raise ValueError("reservoir must be >= 1 (or None for exact)")
         self._xs: list[float] = []
+        self._cap = reservoir
+        self._count = 0
+        self._total = 0.0
+        self._rng = (np.random.default_rng(0) if reservoir is not None
+                     else None)
 
     def add(self, x: float) -> None:
-        self._xs.append(float(x))
+        x = float(x)
+        self._count += 1
+        self._total += x
+        if self._cap is None or len(self._xs) < self._cap:
+            self._xs.append(x)
+        else:
+            j = int(self._rng.integers(0, self._count))
+            if j < self._cap:
+                self._xs[j] = x
 
     def __len__(self) -> int:
-        return len(self._xs)
+        return self._count
 
     def percentile(self, p: float) -> float | None:
         if not self._xs:
@@ -37,13 +62,23 @@ class Recorder:
         return float(np.percentile(np.asarray(self._xs), p))
 
     def mean(self) -> float | None:
-        return float(np.mean(self._xs)) if self._xs else None
+        if not self._count:
+            return None
+        # Exact mode reproduces numpy's pairwise summation bit-for-bit (the
+        # identity tests compare summaries across serving paths); bounded
+        # mode serves the O(1) streaming accumulator.
+        if self._cap is None:
+            return float(np.mean(self._xs))
+        return self._total / self._count
 
     def total(self) -> float:
-        return float(np.sum(self._xs)) if self._xs else 0.0
+        if self._cap is None:
+            return float(np.sum(self._xs)) if self._xs else 0.0
+        return self._total
 
     def series(self) -> list[float]:
-        """The raw samples in recording order (one point per event)."""
+        """The raw samples in recording order — or, in bounded mode, the
+        current reservoir (a uniform sample of everything observed)."""
         return list(self._xs)
 
 

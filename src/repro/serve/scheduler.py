@@ -65,7 +65,8 @@ class OffloadAwareScheduler:
 
     def __init__(self, calibrator: OnlineCalibrator | OffloadModel, *,
                  available_m: Sequence[int] = (1, 2, 4, 8, 16, 32),
-                 host_model: Callable[[int], float] | None = None):
+                 host_model: Callable[[int], float] | None = None,
+                 tracer=None, proc: str = "fabric"):
         if not available_m:
             raise ValueError("no cluster configurations available")
         if isinstance(calibrator, LinearDispatchModel):
@@ -83,14 +84,23 @@ class OffloadAwareScheduler:
         self.host_model = host_model or simulator.host_runtime
         self.admissions: list[AdmissionDecision] = []
         self.plans: list[BatchPlan] = []
+        # Optional span tracer (repro.obs): plan/admission instants carrying
+        # the prediction and the Eq.-3 verdict, on this lane's tracks.
+        self.tracer = tracer
+        self.proc = proc
 
     @property
     def m_max(self) -> int:
         return self.available_m[-1]
 
     # ------------------------------------------------------------------ #
-    def admit(self, req: Request) -> AdmissionDecision:
-        """Eq.-3 feasibility of the request's own prefill deadline."""
+    def admit(self, req: Request, *,
+              now: float | None = None) -> AdmissionDecision:
+        """Eq.-3 feasibility of the request's own prefill deadline.
+
+        ``now`` is the virtual-clock time of the decision — trace-event
+        timestamp only, never an input to the verdict.
+        """
         model = self.calibrator.model
         if req.slo_cycles is None:
             d = AdmissionDecision(req.rid, True, None, "no SLO")
@@ -110,6 +120,11 @@ class OffloadAwareScheduler:
                     req.rid, True, m_min,
                     f"feasible with M >= {m_min} for N={n}")
         self.admissions.append(d)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.proc, "scheduler", "admit" if d.admitted else "reject",
+                req.arrival if now is None else now,
+                args={"rid": d.rid, "m_min": d.m_min, "reason": d.reason})
         return d
 
     def fits_deadline(self, n_elems: int, deadline: float | None) -> bool:
@@ -152,8 +167,11 @@ class OffloadAwareScheduler:
 
     # ------------------------------------------------------------------ #
     def plan(self, n_elems: int, *, deadline: float | None = None,
-             kind: str = "prefill") -> BatchPlan:
-        """Choose the parallel extent for one batch-job of ``n_elems``."""
+             kind: str = "prefill", now: float | None = None) -> BatchPlan:
+        """Choose the parallel extent for one batch-job of ``n_elems``.
+
+        ``now`` timestamps the trace event only (the choice is time-free).
+        """
         model = self.calibrator.model
         if deadline is not None:
             m_min = decision.m_min_for_deadline(model, n_elems, deadline,
@@ -187,4 +205,13 @@ class OffloadAwareScheduler:
                 t_pred=(d.t_offload if d.offload else d.t_host),
                 slo_at_risk=False, reason=d.reason)
         self.plans.append(plan)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.proc, "scheduler", f"plan:{kind}",
+                0.0 if now is None else now,
+                args={"n": plan.n_elems, "offload": plan.offload,
+                      "m": plan.m, "m_min": plan.m_min,
+                      "t_pred": plan.t_pred,
+                      "slo_at_risk": plan.slo_at_risk,
+                      "reason": plan.reason})
         return plan

@@ -1,0 +1,416 @@
+"""Tier-1 tests for repro.obs (DESIGN.md §9): trace fidelity, exporters,
+drift telemetry, and the bounded-recorder regression.
+
+The load-bearing guarantees:
+
+  * **phase-sum exactness** — an isolated single-buffered offload's traced
+    dispatch/exec/sync spans partition [dispatch_start, t_done) and sum to
+    the Eq.-1 closed form, exactly (property-tested over the same strategy
+    as tests/test_engine.py);
+  * **fleet identity** — a 1x32 fleet lane's trace is event-identical to
+    the single-fabric path (modulo the router proc and flow binds);
+  * **drift consistency** — per-lane residual MAPE agrees with the online
+    calibrator's window MAPE within 1pp (same sample population);
+  * **zero-cost disabled** — tracing off leaves serving summaries
+    bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from proptest_fallback import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import simulator as sim
+from repro.obs import (NULL, ResidualTracker, Tracer, read_jsonl, to_chrome,
+                       write_chrome_trace, write_jsonl)
+from repro.serve import serve_workload
+from repro.serve.fleet import serve_fleet
+from repro.serve.metrics import Recorder, ServeMetrics
+from repro.serve.workload import WorkloadSpec
+
+REPO = Path(__file__).resolve().parent.parent
+HW_DEFAULT = sim.HWParams()
+ADAMW_ISH = sim.KernelSpec(name="fused_adamw_ish", bytes_per_elem=48,
+                           cycles_per_elem=7.5, host_cycles_per_elem=11.0)
+
+
+# --------------------------------------------------------------------------- #
+# Tracer primitives
+# --------------------------------------------------------------------------- #
+def test_tracer_records_events_and_null_is_noop():
+    tr = Tracer()
+    assert tr and tr.enabled
+    tr.span("f0:32c", "host", "dispatch", 10.0, 5.0, args={"job": 0})
+    tr.instant("f0:32c", "scheduler", "admit", 11.0)
+    tr.counter("f0:32c", "slots", "slots_occupied", 12.0, 3)
+    tr.flow_start("router", "routes", "route", 10.0, flow=7)
+    tr.flow_end("f0:32c", "requests", "route", 12.0, flow=7)
+    assert len(tr) == 5
+    assert tr.procs() == ["f0:32c", "router"]
+    # lane_events excludes flow linkage — the fleet-identity comparator.
+    kinds = [t[0] for t in tr.lane_events("f0:32c")]
+    assert kinds == ["X", "i", "C"]
+
+    assert not NULL and not NULL.enabled
+    NULL.span("p", "t", "x", 0.0, 1.0)
+    NULL.instant("p", "t", "x", 0.0)
+    NULL.counter("p", "t", "x", 0.0, 1)
+    NULL.flow_start("p", "t", "x", 0.0, 1)
+    NULL.flow_end("p", "t", "x", 0.0, 1)
+    assert len(NULL) == 0 and NULL.events == []
+
+
+# --------------------------------------------------------------------------- #
+# Trace fidelity: traced phases sum exactly to the Eq.-1 closed form
+# --------------------------------------------------------------------------- #
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=1 << 14),
+    dispatch=st.sampled_from(sim.DISPATCH_MODES),
+    sync=st.sampled_from(sim.SYNC_MODES),
+    kernel=st.sampled_from([sim.DAXPY, ADAMW_ISH]),
+    host_setup=st.integers(min_value=1, max_value=600),
+    wakeup=st.integers(min_value=1, max_value=200),
+    bus=st.integers(min_value=8, max_value=512),
+    cores=st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=100, deadline=None)
+def test_traced_phases_partition_closed_form_exactly(m, n, dispatch, sync,
+                                                     kernel, host_setup,
+                                                     wakeup, bus, cores):
+    hw = dataclasses.replace(HW_DEFAULT, host_setup=host_setup,
+                             cluster_wakeup=wakeup, bus_bytes_per_cycle=bus,
+                             cores_per_cluster=cores)
+    closed = sim.simulate_offload(m, n, dispatch=dispatch, sync=sync, hw=hw,
+                                  kernel=kernel)
+    tr = Tracer()
+    rec = eng.OffloadEngine(hw=hw, buffering="single", tracer=tr,
+                            proc="lane").submit(
+        n, m_clusters=m, dispatch=dispatch, sync=sync, kernel=kernel)
+    spans = {e.track: e for e in tr.events if e.ph == "X"}
+    assert set(spans) == {"host", "fabric", "sync"}
+    d, x, s = spans["host"], spans["fabric"], spans["sync"]
+    assert (d.name, x.name, s.name) == ("dispatch", "exec", "sync")
+    # The three phases tile [dispatch_start, t_done) with no gap/overlap...
+    assert d.ts == rec.dispatch_start
+    assert d.ts + d.dur == x.ts
+    assert x.ts + x.dur == s.ts
+    assert s.ts + s.dur == rec.t_done
+    # ...so their durations sum to the Eq.-1 closed form, exactly.
+    assert d.dur + x.dur + s.dur == closed.total
+    assert s.ts + s.dur == closed.total
+
+
+def test_utilization_per_phase_totals_match_traced_spans():
+    tr = Tracer()
+    engine = eng.OffloadEngine(tracer=tr, proc="lane")
+    t = 0.0
+    for _ in range(4):
+        t = engine.submit(1024, m_clusters=8, t_submit=t).t_done
+    engine.submit(256, offload=False, t_submit=t)
+    u = engine.utilization()
+    sums: dict[tuple[str, str], float] = {}
+    for e in tr.events:
+        if e.ph == "X":
+            key = (e.track, e.name)
+            sums[key] = sums.get(key, 0.0) + e.dur
+    assert sums[("host", "dispatch")] == u["dispatch_total"]
+    assert sums[("fabric", "exec")] == u["exec_total"] == u["fabric_busy"]
+    assert sums[("sync", "sync")] == u["sync_total"]
+    assert sums[("host", "host")] > 0.0          # the host-fallback job
+    # host_busy covers dispatch + completion handling + host jobs — at
+    # least everything the host/dispatch tracks show.
+    assert u["host_busy"] >= sums[("host", "dispatch")]
+    assert u["jobs"] == 5 and u["offloads"] == 4
+
+
+def test_utilization_span_zero_guard():
+    # No jobs at all: ratios are defined 0.0, not NaN.
+    u = eng.OffloadEngine().utilization()
+    assert u["jobs"] == 0 and u["span"] == 0.0
+    assert u["fabric_util"] == 0.0 and u["host_util"] == 0.0
+    # A single-instant schedule (one zero-cycle job): same guard, with jobs.
+    engine = eng.OffloadEngine()
+    engine.submit(4, offload=False, exec_scale=0.0)
+    u = engine.utilization()
+    assert u["jobs"] == 1 and u["span"] == 0.0
+    assert u["fabric_util"] == 0.0 and u["host_util"] == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Exporters
+# --------------------------------------------------------------------------- #
+def _sample_tracer() -> Tracer:
+    tr = Tracer()
+    tr.span("f0:32c", "host", "dispatch", 1000.0, 500.0, args={"job": 0})
+    tr.span("f0:32c", "fabric", "exec", 1500.0, 2000.0,
+            args={"job": 0, "bubble": 0.0})
+    tr.span("f0:32c", "engine", "decode", 0.0, 0.25, domain="wall_s")
+    tr.instant("router", "routes", "route:model", 900.0, args={"rid": 1})
+    tr.counter("f0:32c", "slots", "slots_occupied", 1000.0, 3)
+    tr.flow_start("router", "routes", "route", 900.0, flow=1)
+    tr.flow_end("f0:32c", "requests", "route", 1000.0, flow=1)
+    return tr
+
+
+def test_chrome_export_structure():
+    doc = to_chrome(_sample_tracer())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    json.dumps(doc)                                    # serializable
+    meta = [e for e in evs if e["ph"] == "M"]
+    # Metadata sorts first; wall-domain events get their own process.
+    assert all(e["ph"] == "M" for e in evs[:len(meta)])
+    pnames = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+    assert pnames == {"f0:32c", "wall:f0:32c", "router"}
+    tnames = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"host", "fabric", "engine", "routes", "slots"} <= tnames
+    # Microsecond conversion: cycles / 1e3, wall seconds * 1e6.
+    x = next(e for e in evs if e.get("name") == "dispatch")
+    assert x["ts"] == 1.0 and x["dur"] == 0.5
+    w = next(e for e in evs if e.get("name") == "decode")
+    assert w["ts"] == 0.0 and w["dur"] == pytest.approx(0.25e6)
+    assert w["pid"] != x["pid"]                        # separate time axes
+    # Flow events keep their id pairing and bind to the enclosing slice.
+    s = next(e for e in evs if e["ph"] == "s")
+    f = next(e for e in evs if e["ph"] == "f")
+    assert s["id"] == f["id"] == 1 and f["bp"] == "e"
+    # Every non-metadata event lands on a labeled (pid, tid).
+    labeled = {(e["pid"], e["tid"]) for e in meta if e["name"] ==
+               "thread_name"}
+    assert {(e["pid"], e["tid"]) for e in evs if e["ph"] != "M"} <= labeled
+
+
+def test_jsonl_roundtrip(tmp_path):
+    tr = _sample_tracer()
+    path = write_jsonl(tr, tmp_path / "t.jsonl")
+    back = read_jsonl(path)
+    assert back == [e.as_dict() for e in tr.events]
+    assert back[0]["proc"] == "f0:32c" and back[0]["dur"] == 500.0
+    assert back[2]["domain"] == "wall_s"               # native units kept
+
+
+# --------------------------------------------------------------------------- #
+# Serving traces: validator, reporter, fleet identity, disabled invariance
+# --------------------------------------------------------------------------- #
+def _serve_traced(num_requests=16, **kw):
+    tr, res = Tracer(), ResidualTracker()
+    out = serve_workload(WorkloadSpec(num_requests=num_requests),
+                         execute=False, pipeline=True,
+                         tracer=tr, residuals=res, **kw)
+    return tr, res, out
+
+
+def _run_tool(tool: str, *args: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, str(REPO / "tools" / tool),
+                           *args], capture_output=True, text=True)
+
+
+def test_check_trace_passes_on_serving_trace(tmp_path):
+    tr, _, _ = _serve_traced()
+    assert len(tr) > 100
+    path = write_chrome_trace(tr, tmp_path / "trace.json")
+    r = _run_tool("check_trace.py", str(path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_check_trace_fails_on_corrupted_traces(tmp_path):
+    tr, _, _ = _serve_traced(num_requests=8)
+    doc = to_chrome(tr)
+
+    # (a) metadata stripped: every used pid/tid is unlabeled.
+    bad = dict(doc, traceEvents=[e for e in doc["traceEvents"]
+                                 if e["ph"] != "M"])
+    p = tmp_path / "no_meta.json"
+    p.write_text(json.dumps(bad))
+    r = _run_tool("check_trace.py", str(p))
+    assert r.returncode == 1 and "no process_name" in r.stdout
+
+    # (b) an unpaired flow start.
+    bad = dict(doc, traceEvents=doc["traceEvents"]
+               + [{"ph": "s", "name": "route", "cat": "route", "pid": 1,
+                   "tid": 1, "ts": 1e12, "id": 999_999}])
+    p = tmp_path / "open_flow.json"
+    p.write_text(json.dumps(bad))
+    r = _run_tool("check_trace.py", str(p))
+    assert r.returncode == 1 and "never finishes" in r.stdout
+
+    # (c) overlapping spans on a serial track.
+    tr2 = Tracer()
+    tr2.span("p", "host", "a", 0.0, 100_000.0)
+    tr2.span("p", "host", "b", 50_000.0, 100_000.0)
+    p = write_chrome_trace(tr2, tmp_path / "overlap.json")
+    r = _run_tool("check_trace.py", str(p))
+    assert r.returncode == 1 and "overlapping spans" in r.stdout
+
+
+def test_trace_report_renders_both_formats(tmp_path):
+    tr, res, _ = _serve_traced()
+    chrome = write_chrome_trace(tr, tmp_path / "t.json")
+    jsonl = write_jsonl(tr, tmp_path / "t.jsonl")
+    for path in (chrome, jsonl):
+        r = _run_tool("trace_report.py", str(path))
+        assert r.returncode == 0, r.stdout + r.stderr
+        for section in ("top fabric bubbles", "queue delay",
+                        "residual drift", "track utilization"):
+            assert section in r.stdout
+        assert "[f0:32c]" in r.stdout
+
+
+def test_fleet_1x32_trace_event_identical_to_single_fabric():
+    spec = WorkloadSpec(num_requests=24)
+    tr_fleet = Tracer()
+    serve_fleet(spec, fleet=(32,), pipeline=True, tracer=tr_fleet,
+                residuals=ResidualTracker())
+    tr_single = Tracer()
+    serve_workload(spec, execute=False, pipeline=True, tracer=tr_single,
+                   residuals=ResidualTracker())
+    lane = tr_single.lane_events("f0:32c")
+    assert len(lane) > 100
+    assert tr_fleet.lane_events("f0:32c") == lane
+    # The routing layer is the only legitimate extra proc.
+    assert set(tr_fleet.procs()) - set(tr_single.procs()) == {"router"}
+
+
+def test_tracing_disabled_leaves_summary_bit_identical():
+    spec = WorkloadSpec(num_requests=24)
+    plain = serve_workload(spec, execute=False, pipeline=True)
+    tr, res, traced = _serve_traced(num_requests=24)
+    assert traced["metrics"].summary() == plain["metrics"].summary()
+    assert len(tr) > 0 and len(res) > 0
+
+
+# --------------------------------------------------------------------------- #
+# Drift telemetry
+# --------------------------------------------------------------------------- #
+def test_residual_tracker_windowed_mape():
+    res = ResidualTracker(window=2)
+    assert res.observe("l0", "prefill", 100.0, 0.0) is None   # dropped
+    r = res.observe("l0", "prefill", 110.0, 100.0, t=1.0)
+    assert r.ape_pct == pytest.approx(10.0)
+    res.observe("l0", "prefill", 100.0, 100.0, t=2.0)
+    res.observe("l0", "prefill", 95.0, 100.0, t=3.0)
+    # Window of 2: the first (10%) sample aged out -> mean(0%, 5%).
+    assert res.mape("l0", "prefill") == pytest.approx(2.5)
+    series = res.series("l0", "prefill")
+    assert [t for t, _ in series] == [1.0, 2.0, 3.0]
+    assert series[-1][1] == pytest.approx(2.5)
+    # kind=None combines scheduler streams and excludes "route".
+    res.observe("l0", "route", 200.0, 100.0, t=4.0)
+    assert res.mape("l0") == pytest.approx(2.5)
+    assert res.mape("l0", "route") == pytest.approx(100.0)
+    assert res.lanes() == ["l0"]
+    summ = res.summary()["l0"]
+    assert summ["prefill"]["count"] == 3 and summ["prefill"]["window"] == 2
+    assert summ["combined_mape_pct"] == pytest.approx(2.5)
+    assert "[l0]" in res.format_summary()
+    with pytest.raises(ValueError):
+        ResidualTracker(window=0)
+
+
+def test_fleet_residual_mape_tracks_calibrator_within_1pp():
+    tr, res = Tracer(), ResidualTracker()
+    out = serve_fleet(WorkloadSpec(num_requests=96), fleet=(32, 8, 8),
+                      pipeline=True, tracer=tr, residuals=res)
+    lanes = [f"f{i}:{c}c" for i, c in enumerate((32, 8, 8))]
+    checked = 0
+    for lane, calib in zip(lanes, out["calibrations"]):
+        observed = res.mape(lane)           # prefill+decode, route excluded
+        if observed is None or calib.window_mape_pct is None:
+            continue
+        assert abs(observed - calib.window_mape_pct) <= 1.0, (
+            f"{lane}: residual MAPE {observed:.2f}% vs calibrator "
+            f"window MAPE {calib.window_mape_pct:.2f}%")
+        checked += 1
+    assert checked >= 2
+    # The same telemetry reached the trace as residual instants.
+    names = {e.name for e in tr.events if e.ph == "i"}
+    assert "residual:prefill" in names and any(
+        n.startswith("route:") for n in names)
+
+
+# --------------------------------------------------------------------------- #
+# Bounded-reservoir Recorder (serve.metrics satellite)
+# --------------------------------------------------------------------------- #
+def _approx_tree(got, want):
+    assert type(got) is type(want) or (
+        isinstance(got, (int, float)) and isinstance(want, (int, float)))
+    if isinstance(want, dict):
+        assert set(got) == set(want)
+        for k in want:
+            _approx_tree(got[k], want[k])
+    elif isinstance(want, float):
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-12)
+    else:
+        assert got == want
+
+
+def test_recorder_reservoir_identical_while_under_cap():
+    exact, bounded = Recorder(), Recorder(reservoir=64)
+    xs = [float((i * 37) % 101) for i in range(64)]
+    for x in xs:
+        exact.add(x)
+        bounded.add(x)
+    assert len(exact) == len(bounded) == 64
+    assert bounded.series() == exact.series() == xs
+    for p in (0, 50, 99, 100):
+        assert bounded.percentile(p) == exact.percentile(p)
+    assert bounded.mean() == pytest.approx(exact.mean(), rel=1e-12)
+    assert bounded.total() == pytest.approx(exact.total(), rel=1e-12)
+
+
+def test_recorder_reservoir_streams_exactly_beyond_cap():
+    bounded = Recorder(reservoir=64)
+    xs = [float((i * 37) % 1009) for i in range(10_000)]
+    for x in xs:
+        bounded.add(x)
+    assert len(bounded) == 10_000
+    assert len(bounded.series()) == 64                 # memory stays flat
+    assert bounded.total() == pytest.approx(sum(xs), rel=1e-9)
+    assert bounded.mean() == pytest.approx(sum(xs) / len(xs), rel=1e-9)
+    # Percentiles become estimates over a uniform reservoir, but stay
+    # inside the observed range and deterministic per recorder.
+    p50 = bounded.percentile(50)
+    assert min(xs) <= p50 <= max(xs)
+    again = Recorder(reservoir=64)
+    for x in xs:
+        again.add(x)
+    assert again.series() == bounded.series()
+    with pytest.raises(ValueError):
+        Recorder(reservoir=0)
+
+
+def test_serve_metrics_summary_unchanged_with_bounded_recorders():
+    def build(reservoir):
+        m = ServeMetrics()
+        if reservoir is not None:
+            for f in dataclasses.fields(ServeMetrics):
+                if isinstance(getattr(m, f.name), Recorder):
+                    setattr(m, f.name, Recorder(reservoir=reservoir))
+        m.submitted = m.admitted = m.completed = 50
+        m.slo_met, m.slo_missed = 40, 10
+        m.tokens_generated, m.goodput_completed = 400, 40
+        m.t_start, m.t_end = 0.0, 1e6
+        for i in range(50):
+            m.latency_cycles.add(1_000.0 + 13.0 * i)
+            m.ttft_cycles.add(400.0 + 7.0 * i)
+            m.queue_delay_cycles.add(float(i % 17))
+            m.slot_occupancy.add((i % 4) / 4.0)
+            m.overlap_cycles.add(float(i))
+            m.bubble_cycles.add(float(50 - i))
+            m.step_wall_s.add(1e-4 * (i + 1))
+        return m
+
+    _approx_tree(build(reservoir=256).summary(), build(None).summary())

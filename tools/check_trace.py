@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Validate a Chrome Trace Event JSON file emitted by ``repro.obs``.
+
+CI runs this on the smoke trace (``--trace`` on the serving CLI) so a broken
+exporter — or an instrumentation change that starts emitting malformed spans
+— fails the build instead of producing a file Perfetto silently mis-renders.
+
+Checks (each failure is reported with the offending event):
+
+  * the file parses and has a ``traceEvents`` list;
+  * every event carries the keys its phase requires (``ts`` everywhere but
+    metadata; ``dur`` on complete spans), with finite, non-negative values;
+  * every ``pid`` has a ``process_name`` metadata record and every
+    ``(pid, tid)`` a ``thread_name`` — unlabeled tracks mean the exporter's
+    metadata pass is broken;
+  * duration-event begins/ends (``B``/``E``) balance per track — an
+    unclosed span renders as running forever;
+  * flow arrows pair up: every start (``s``) id has a finish (``f``) and
+    vice versa;
+  * non-metadata events are sorted by non-decreasing timestamp (the
+    exporter's contract);
+  * counter events carry numeric args;
+  * spans on **serial** tracks — threads named ``host`` or ``fabric``, which
+    model exclusive hardware resources — do not overlap (the ``sync`` track
+    may: poll-sync busy-waits legitimately overlap gap-inserted dispatch
+    work on the host timeline, see DESIGN.md §9).
+
+Usage: ``python tools/check_trace.py trace.json [more.json ...]``
+Exits 1 with one line per failure.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+#: Threads that model exclusive hardware resources: spans must not overlap.
+SERIAL_TRACKS = ("host", "fabric")
+
+#: Tolerance (us) for float round-off in overlap/ordering checks: spans are
+#: converted from cycles with a single division, so genuine overlaps are
+#: orders of magnitude larger than this.
+EPS_US = 1e-6
+
+
+def _fmt(e: dict) -> str:
+    return (f"ph={e.get('ph')!r} name={e.get('name')!r} "
+            f"pid={e.get('pid')} tid={e.get('tid')} ts={e.get('ts')}")
+
+
+def check_trace(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable or invalid JSON: {exc}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents list"]
+    if not events:
+        return [f"{path}: empty traceEvents"]
+
+    proc_names: dict[int, str] = {}
+    thread_names: dict[tuple[int, int], str] = {}
+    used_pids: set[int] = set()
+    used_tids: set[tuple[int, int]] = set()
+    spans: dict[tuple[int, int], list[tuple[float, float, str]]] = {}
+    open_begins: dict[tuple[int, int], int] = {}
+    flow_starts: set = set()
+    flow_ends: set = set()
+    last_ts: float | None = None
+
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        where = f"{path}[{i}]"
+        if ph is None or "name" not in e or "pid" not in e or "tid" not in e:
+            errors.append(f"{where}: missing ph/name/pid/tid ({_fmt(e)})")
+            continue
+        key = (e["pid"], e["tid"])
+
+        if ph == "M":
+            if e["name"] == "process_name":
+                proc_names[e["pid"]] = e.get("args", {}).get("name", "")
+            elif e["name"] == "thread_name":
+                thread_names[key] = e.get("args", {}).get("name", "")
+            continue
+
+        used_pids.add(e["pid"])
+        used_tids.add(key)
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) \
+                or ts < 0:
+            errors.append(f"{where}: bad ts {ts!r} ({_fmt(e)})")
+            continue
+        if last_ts is not None and ts < last_ts - EPS_US:
+            errors.append(f"{where}: timestamps not sorted "
+                          f"({ts} after {last_ts}; {_fmt(e)})")
+        last_ts = max(ts, last_ts if last_ts is not None else ts)
+
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) \
+                    or dur < 0:
+                errors.append(f"{where}: bad dur {dur!r} ({_fmt(e)})")
+            else:
+                spans.setdefault(key, []).append((ts, dur, e["name"]))
+        elif ph == "B":
+            open_begins[key] = open_begins.get(key, 0) + 1
+        elif ph == "E":
+            open_begins[key] = open_begins.get(key, 0) - 1
+        elif ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and math.isfinite(v)
+                    for v in args.values()):
+                errors.append(f"{where}: counter without numeric args "
+                              f"({_fmt(e)})")
+        elif ph == "s":
+            flow_starts.add(e.get("id"))
+        elif ph == "f":
+            flow_ends.add(e.get("id"))
+
+    for pid in sorted(used_pids):
+        if pid not in proc_names:
+            errors.append(f"{path}: pid {pid} has no process_name metadata")
+    for key in sorted(used_tids):
+        if key not in thread_names:
+            errors.append(f"{path}: pid/tid {key} has no thread_name "
+                          f"metadata")
+    for key, depth in sorted(open_begins.items()):
+        if depth > 0:
+            errors.append(f"{path}: {depth} unclosed B span(s) on "
+                          f"pid/tid {key}")
+        elif depth < 0:
+            errors.append(f"{path}: {-depth} E event(s) without B on "
+                          f"pid/tid {key}")
+    for fid in sorted(flow_starts - flow_ends, key=repr):
+        errors.append(f"{path}: flow start id={fid!r} never finishes")
+    for fid in sorted(flow_ends - flow_starts, key=repr):
+        errors.append(f"{path}: flow finish id={fid!r} never started")
+
+    for key, track_spans in sorted(spans.items()):
+        if thread_names.get(key) not in SERIAL_TRACKS:
+            continue
+        track_spans.sort()
+        for (t0, d0, n0), (t1, _, n1) in zip(track_spans, track_spans[1:]):
+            if t1 < t0 + d0 - EPS_US:
+                errors.append(
+                    f"{path}: overlapping spans on serial track "
+                    f"{proc_names.get(key[0], key[0])}/"
+                    f"{thread_names[key]}: {n0!r}@{t0}+{d0} then {n1!r}@{t1}")
+                break   # one report per track keeps the output readable
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: python tools/check_trace.py TRACE.json [...]")
+        return 2
+    failures: list[str] = []
+    for arg in argv:
+        path = Path(arg)
+        errs = check_trace(path)
+        failures.extend(errs)
+        if not errs:
+            n = len(json.loads(path.read_text())["traceEvents"])
+            print(f"{path}: OK ({n} events)")
+    for line in failures:
+        print(f"FAIL {line}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Summarize a ``repro.obs`` trace: bubbles, queue delay, drift, utilization.
+
+Input is either export format of the serving CLI (docs/observability.md):
+
+  * the JSONL event log (``--trace-jsonl``) — native units, preferred;
+  * the Chrome Trace Event JSON (``--trace``) — timestamps come back in
+    microseconds, so cycle figures are reported in us.
+
+Sections:
+
+  * **top bubbles** — the largest fabric idle gaps, straight from the
+    ``exec`` span args the engine records (the overlap accounting of
+    DESIGN.md §7): where the pipeline failed to hide the offload constant;
+  * **queue delay** — distribution of the ``queued`` request spans per
+    lane: how long admitted requests waited for their serving prefill;
+  * **residual drift** — the predicted-vs-actual telemetry instants: the
+    windowed MAPE trend per lane and kind (Eq.-2 domain, DESIGN.md §9);
+  * **track utilization** — busy fraction of every cycle-domain track
+    (span-sum over trace extent), the at-a-glance load picture.
+
+Usage: ``python tools/trace_report.py trace.jsonl [--top N]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_events(path: Path) -> list[dict]:
+    """Read either a JSONL event log or a Chrome trace into raw events.
+
+    Chrome events are mapped back to the tracer's vocabulary: pid/tid
+    labels from the metadata become ``proc``/``track``, times stay in us.
+    """
+    text = path.read_text()
+    if '"traceEvents"' in text[:200]:
+        doc = json.loads(text)
+        procs: dict[int, str] = {}
+        tracks: dict[tuple[int, int], str] = {}
+        out = []
+        for e in doc.get("traceEvents", []):
+            if e.get("ph") == "M":
+                if e["name"] == "process_name":
+                    procs[e["pid"]] = e["args"]["name"]
+                elif e["name"] == "thread_name":
+                    tracks[(e["pid"], e["tid"])] = e["args"]["name"]
+                continue
+            out.append({"ph": e.get("ph"), "name": e.get("name"),
+                        "proc": procs.get(e.get("pid"), str(e.get("pid"))),
+                        "track": tracks.get((e.get("pid"), e.get("tid")),
+                                            str(e.get("tid"))),
+                        "ts": e.get("ts", 0.0), "dur": e.get("dur"),
+                        "domain": "us", "args": e.get("args") or {}})
+        return out
+    return [json.loads(line) for line in text.splitlines() if line]
+
+
+def _pct(xs: list[float], p: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1))))]
+
+
+def _unit(events: list[dict]) -> str:
+    return "us" if any(e.get("domain") == "us" for e in events) else "cy"
+
+
+def report(events: list[dict], top: int = 5) -> str:
+    lines: list[str] = []
+    unit = _unit(events)
+    spans = [e for e in events if e.get("ph") == "X"
+             and e.get("dur") is not None]
+    cyc = [e for e in spans if e.get("domain") in ("cycles", "us")]
+
+    # --- top bubbles -----------------------------------------------------
+    execs = [e for e in spans if e["name"] == "exec"
+             and "bubble" in (e.get("args") or {})]
+    bubbles = sorted(execs, key=lambda e: e["args"]["bubble"], reverse=True)
+    lines.append(f"top fabric bubbles ({unit} idle before an exec):")
+    if not bubbles or bubbles[0]["args"]["bubble"] <= 0:
+        lines.append("  none — every execution started back-to-back")
+    for e in bubbles[:top]:
+        if e["args"]["bubble"] <= 0:
+            break
+        lines.append(f"  [{e['proc']}] job {e['args'].get('job', '?')} "
+                     f"@{e['ts']:.0f}: bubble {e['args']['bubble']:.0f}, "
+                     f"exec {e['dur']:.0f} (N={e['args'].get('n', '?')}, "
+                     f"M={e['args'].get('m', '?')})")
+
+    # --- queue delay -----------------------------------------------------
+    lines.append(f"queue delay (arrival -> serving prefill, {unit}):")
+    by_proc: dict[str, list[float]] = {}
+    for e in spans:
+        if e["name"] == "queued":
+            by_proc.setdefault(e["proc"], []).append(float(e["dur"]))
+    if not by_proc:
+        lines.append("  no queued requests in trace")
+    for proc in sorted(by_proc):
+        xs = by_proc[proc]
+        lines.append(f"  [{proc}] n={len(xs)} mean {sum(xs)/len(xs):.0f} "
+                     f"p50 {_pct(xs, 50):.0f} p99 {_pct(xs, 99):.0f} "
+                     f"max {max(xs):.0f}")
+
+    # --- residual drift --------------------------------------------------
+    lines.append("residual drift (windowed MAPE, % of actual):")
+    last: dict[tuple[str, str], dict] = {}
+    counts: dict[tuple[str, str], int] = {}
+    for e in events:
+        if e.get("ph") == "i" and str(e.get("name", "")).startswith(
+                "residual:"):
+            key = (e["proc"], e["name"].split(":", 1)[1])
+            last[key] = e.get("args") or {}
+            counts[key] = counts.get(key, 0) + 1
+    if not last:
+        lines.append("  no residual telemetry in trace")
+    for (proc, kind) in sorted(last):
+        args = last[(proc, kind)]
+        mape = args.get("window_mape_pct")
+        lines.append(f"  [{proc}] {kind}: n={counts[(proc, kind)]}, "
+                     f"window MAPE "
+                     f"{'n/a' if mape is None else f'{mape:.2f}%'} "
+                     f"(last ape {args.get('ape_pct', float('nan')):.2f}%)")
+
+    # --- track utilization ----------------------------------------------
+    lines.append(f"track utilization (busy/{unit} of trace extent):")
+    tracks: dict[tuple[str, str], list[dict]] = {}
+    for e in cyc:
+        tracks.setdefault((e["proc"], e["track"]), []).append(e)
+    extent = 0.0
+    for es in tracks.values():
+        extent = max(extent, max(e["ts"] + e["dur"] for e in es))
+    for (proc, track) in sorted(tracks):
+        es = tracks[(proc, track)]
+        busy = sum(e["dur"] for e in es)
+        util = busy / extent if extent > 0 else 0.0
+        lines.append(f"  [{proc}] {track}: {len(es)} spans, "
+                     f"busy {busy:.0f} ({util:.1%} of {extent:.0f})")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize a repro.obs trace (JSONL log or Chrome JSON)")
+    ap.add_argument("trace", help="trace file from --trace/--trace-jsonl")
+    ap.add_argument("--top", type=int, default=5,
+                    help="bubbles to list (default 5)")
+    args = ap.parse_args(argv)
+    events = load_events(Path(args.trace))
+    if not events:
+        print(f"{args.trace}: no events")
+        return 1
+    print(report(events, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
