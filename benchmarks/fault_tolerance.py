@@ -1,0 +1,138 @@
+"""Fault-tolerance benchmark: kill a fabric mid-serve, measure the recovery.
+
+The chaos A/B of DESIGN.md §10 on the heterogeneous big+little fleet
+(32 + 8 + 8 clusters): the same saturating trace is served three times —
+
+  * **fault-free baseline** — no injector; the reference timeline every
+    identity check compares against;
+  * **recovery** — ``crash@1:0.45`` kills the first little fabric at 45% of
+    the arrival horizon; orphans are requeued with their KV state restored
+    from the lane's last checkpoint (the restore priced as an Eq.-1
+    offload) and re-routed across the survivors;
+  * **naive drop** — same crash, ``recovery="drop"``: orphans are FAILED.
+
+Headline records (all deterministic per seed; none wall-clock):
+
+  * ``ft_recovery_attainment`` / ``ft_drop_attainment`` — fraction of
+    submitted requests that completed.  The smoke gate requires recovery
+    >= 0.9 and recovery > drop: recovery must actually buy goodput back.
+  * ``ft_unaffected_identity`` — 1.0 iff every request that completed
+    before the crash was *detected* (and was never requeued) finished
+    bit-identically to the fault-free baseline: same (t_done, latency,
+    slo_met) per rid.  Fault handling must be pay-as-you-go — the blast
+    radius of a crash is the crashed lane's in-flight work, nothing else.
+  * ``ft_restore_jobs`` — KV-restore offloads actually priced + executed
+    (the gate requires >= 1, so the checkpoint path is genuinely
+    exercised, not silently bypassed by all-queued orphans).
+
+The trace is deliberately *saturating* (1.5M req/s open-loop against ~3
+fabrics): the crashed lane holds queued and in-flight work at crash time,
+so recovery exercises requeue, re-prefill AND checkpoint-restore paths.
+
+Prints human summaries and returns machine-readable records
+(section, name, value, unit) for ``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+from repro.serve import WorkloadSpec, serve_fleet
+
+#: The heterogeneous A/B fleet (same shape as benchmarks/fleet_router.py).
+FT_FLEET = (32, 8, 8)
+#: Crash the first little fabric at 45% of the arrival horizon.
+FT_FAULTS = "crash@1:0.45"
+#: Saturating mixed trace: long-ish prompts + long generations keep decode
+#: state alive across checkpoint intervals, so the crash reliably orphans
+#: *running* slots (restore path) as well as queued requests.  Feasible
+#: SLOs only: rejections stay an admission-policy constant across arms.
+FT_SPEC = WorkloadSpec(num_requests=256, rate_rps=1_500_000.0,
+                       prompt_lens=(512, 1024, 2048), gen_lens=(64, 128),
+                       slo_fraction=0.5, infeasible_fraction=0.0, seed=11)
+#: Tiny-extent variant for the CI smoke tier (same shape, fewer requests).
+SMOKE_SPEC = WorkloadSpec(num_requests=96, rate_rps=1_500_000.0,
+                          prompt_lens=(512, 1024, 2048), gen_lens=(64, 128),
+                          slo_fraction=0.5, infeasible_fraction=0.0, seed=11)
+
+
+def _rec(records, name, value, unit):
+    records.append({"section": "fault_tolerance", "name": name,
+                    "value": float(value), "unit": unit})
+
+
+def _attainment(out) -> float:
+    """Fraction of submitted requests that completed (drops + rejects both
+    count against it — the user-visible goodput share of the trace)."""
+    s = out["metrics"].summary()
+    return s["completed"] / s["submitted"]
+
+
+def _unaffected_identity(baseline_out, fault_out) -> tuple[float, int]:
+    """1.0 iff pre-detect completions match the fault-free run exactly.
+
+    "Unaffected" = completed at or before the crash was detected, never
+    requeued.  Later completions legitimately shift (survivor lanes absorb
+    re-routed load); earlier ones must not move by a single cycle.
+    """
+    inj = fault_out["faults"]
+    detect = min(inj.detect_time(lane) for lane in inj.crashed_lanes())
+    base = {r.rid: r for r in baseline_out["requests"]}
+    checked = mismatched = 0
+    for r in fault_out["requests"]:
+        if r.t_done is None or r.t_done > detect or r.requeues:
+            continue
+        checked += 1
+        b = base.get(r.rid)
+        if b is None or (b.t_done, b.latency(), b.slo_met) != \
+                (r.t_done, r.latency(), r.slo_met):
+            mismatched += 1
+    return (1.0 if mismatched == 0 else 0.0), checked
+
+
+def main(fast: bool = False, smoke: bool = False) -> list[dict]:
+    del fast  # every experiment here is simulated (no subprocess tier)
+    records: list[dict] = []
+    spec = SMOKE_SPEC if smoke else FT_SPEC
+
+    baseline = serve_fleet(spec, fleet=FT_FLEET, router="model",
+                           pipeline=True)
+    print(f"--- fault-free baseline ({spec.num_requests} requests) ---")
+    print(baseline["metrics"].format_summary())
+
+    arms = {}
+    for mode in ("restore", "drop"):
+        out = serve_fleet(spec, fleet=FT_FLEET, router="model",
+                          pipeline=True, faults=FT_FAULTS, recovery=mode)
+        arms[mode] = out
+        s = out["metrics"].summary()
+        ft = s["faults"]
+        print(f"--- {FT_FAULTS}, recovery={mode} ---")
+        print(out["metrics"].format_summary())
+        print(f"recovery: {ft['orphaned']} orphaned -> {ft['recovered']} "
+              f"recovered ({ft['restore_jobs']} KV restores), "
+              f"{ft['dropped']} dropped; dead lanes "
+              f"{out['dead_lanes']}")
+
+    att_rec = _attainment(arms["restore"])
+    att_drop = _attainment(arms["drop"])
+    ident, checked = _unaffected_identity(baseline, arms["restore"])
+    ftr = arms["restore"]["metrics"].summary()["faults"]
+    print(f"--- recovery attainment {att_rec:.3f} vs naive drop "
+          f"{att_drop:.3f}; unaffected identity "
+          f"{'OK' if ident else 'MISMATCH'} over {checked} pre-detect "
+          f"completions ---")
+
+    _rec(records, "ft_recovery_attainment", att_rec, "fraction")
+    _rec(records, "ft_drop_attainment", att_drop, "fraction")
+    _rec(records, "ft_unaffected_identity", ident, "bool")
+    _rec(records, "ft_unaffected_checked", checked, "requests")
+    _rec(records, "ft_orphaned", ftr["orphaned"], "requests")
+    _rec(records, "ft_recovered", ftr["recovered"], "requests")
+    _rec(records, "ft_dropped_naive",
+         arms["drop"]["metrics"].summary()["faults"]["dropped"],
+         "requests")
+    _rec(records, "ft_restore_jobs", ftr["restore_jobs"], "jobs")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -113,6 +113,11 @@ def main(argv=None) -> None:
     from benchmarks import fleet_router
     records += fleet_router.main(fast=args.fast, smoke=args.smoke)
 
+    section("Fault tolerance (repro.serve + repro.runtime.fault) — "
+            "kill-a-fabric recovery A/B")
+    from benchmarks import fault_tolerance
+    records += fault_tolerance.main(fast=args.fast, smoke=args.smoke)
+
     if not args.fast:
         section("Measured dispatch/sync scaling on host devices (us)")
         from benchmarks import dispatch_microbench
@@ -176,6 +181,19 @@ def _smoke_gate(records: list[dict]) -> None:
         # Every per-fabric online calibration stays inside the Eq.-2 bar.
         ("fleet calib MAPE",
          0.0 <= by_name["fleet_model_calib_mape_max"] <= 2.0),
+        # Fault tolerance (DESIGN.md §10): recovery buys goodput back after
+        # a mid-serve fabric crash, and must beat the naive-drop baseline.
+        ("ft recovery attainment >= 0.9",
+         by_name["ft_recovery_attainment"] >= 0.9),
+        ("ft recovery > naive drop",
+         by_name["ft_recovery_attainment"] > by_name["ft_drop_attainment"]),
+        # Blast-radius containment: every completion that predates crash
+        # detection is bit-identical to the fault-free run.
+        ("ft unaffected identity",
+         by_name["ft_unaffected_identity"] == 1.0),
+        # The checkpoint-restore path is genuinely exercised (>= 1 Eq.-1
+        # priced KV restore), not bypassed by all-queued orphans.
+        ("ft restore exercised", by_name["ft_restore_jobs"] >= 1.0),
     ]
     failed = [name for name, ok in checks if not ok]
     print(f"smoke gate: {len(checks) - len(failed)}/{len(checks)} checks ok")

@@ -1,7 +1,7 @@
 """Checkpointing: atomic numpy-shard snapshots, async save, elastic restore."""
 
-from .checkpoint import (CheckpointManager, latest_step, restore_checkpoint,
-                         save_checkpoint)
+from .checkpoint import (CheckpointManager, latest_step, list_steps,
+                         restore_checkpoint, save_checkpoint)
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "latest_step", "list_steps"]

@@ -70,12 +70,17 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any,
     return final
 
 
-def latest_step(directory: str | Path) -> int | None:
+def list_steps(directory: str | Path) -> list[int]:
+    """All retained checkpoint steps, ascending (empty if none/missing)."""
     directory = Path(directory)
     if not directory.exists():
-        return None
-    steps = sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
-                   if p.is_dir() and p.name.startswith("step_"))
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                  if p.is_dir() and p.name.startswith("step_"))
+
+
+def latest_step(directory: str | Path) -> int | None:
+    steps = list_steps(directory)
     return steps[-1] if steps else None
 
 
@@ -84,7 +89,13 @@ def restore_checkpoint(directory: str | Path, tree_like: Any,
                        shardings: Any = None) -> tuple[Any, int, dict]:
     """Restore into the structure of ``tree_like``; place with ``shardings``
     (one multicast device_put) when given — works for ANY mesh shape
-    (elastic restart)."""
+    (elastic restart).
+
+    Leaves in ``tree_like`` are shape *references*: an array-shaped leaf is
+    checked against the manifest, while a shapeless placeholder leaf (e.g.
+    ``0``) matches by name only — callers that cannot know the saved shape
+    up front (the serving KV restore, DESIGN.md §10) pass scalars.
+    """
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)

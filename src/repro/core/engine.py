@@ -59,6 +59,11 @@ BUFFERING_MODES = ("single", "double")
 _DEPTH = {"single": 1, "double": 2}
 
 
+class FabricHalted(RuntimeError):
+    """Raised on ``submit`` after :meth:`OffloadEngine.halt` — the fabric
+    timeline is dead and can never schedule another job (DESIGN.md §10)."""
+
+
 @dataclass
 class JobRecord:
     """One scheduled job: absolute event times on the engine timeline."""
@@ -89,6 +94,9 @@ class JobRecord:
     #: closed-form total whose constant is α).  This is the sample the
     #: overlap-aware runtime-model fit consumes (DESIGN.md §7).
     effective: float = 0.0
+    #: True when a fabric halt retired the job before its scheduled
+    #: completion — its results never materialized (DESIGN.md §10).
+    aborted: bool = False
 
     @property
     def total(self) -> float:
@@ -174,6 +182,7 @@ class OffloadEngine:
         self._last_exec: tuple[float, float] | None = None
         self._fabric_tdones: list[float] = []   # retire times, FIFO order
         self._completed_upto = 0        # poll() cursor
+        self.halted_at: float | None = None     # set by halt()
 
     # ------------------------------------------------------------------ #
     def submit(self, n_elems: int, *, m_clusters: int | None = None,
@@ -186,6 +195,10 @@ class OffloadEngine:
         hook measured-noise models (fabric jitter) use; dispatch and sync
         constants are host-side and stay exact.
         """
+        if self.halted_at is not None:
+            raise FabricHalted(
+                f"fabric {self.proc!r} halted at {self.halted_at:.0f} cy; "
+                f"submit at t={t_submit:.0f} is impossible")
         if offload:
             return self._submit_offload(n_elems, m_clusters, dispatch, sync,
                                         kernel, t_submit, exec_scale)
@@ -322,6 +335,45 @@ class OffloadEngine:
         return rec
 
     # ------------------------------------------------------------------ #
+    def halt(self, t: float) -> list[JobRecord]:
+        """Fail the fabric at time ``t``: the timeline ends here.
+
+        Jobs whose retirement lies beyond ``t`` are marked ``aborted`` (their
+        results never materialized) and returned; any later ``submit``
+        raises :class:`FabricHalted`.
+
+        The engine schedules eagerly — ``submit`` traces a job's phase spans
+        the moment it is accepted, because the simulator knows the future.
+        A crash retracts the part of that future that never happened: this
+        proc's cycle-domain complete spans starting at or after ``t`` are
+        dropped from the tracer and spans crossing ``t`` truncated, so the
+        exported trace stays consistent with a dead lane
+        (``tools/check_trace.py`` enforces that no span on a crashed proc
+        starts after its ``fault:crash`` instant; DESIGN.md §10).
+        """
+        if self.halted_at is not None:
+            raise FabricHalted(f"fabric {self.proc!r} already halted at "
+                               f"{self.halted_at:.0f} cy")
+        self.halted_at = t
+        aborted = []
+        for rec in self.jobs:
+            if rec.t_done > t:
+                rec.aborted = True
+                aborted.append(rec)
+        if self.tracer is not None:
+            kept = []
+            for e in self.tracer.events:
+                if (e.proc == self.proc and e.ph == "X"
+                        and e.domain == "cycles"):
+                    if e.ts >= t:
+                        continue
+                    if e.ts + (e.dur or 0.0) > t:
+                        e.dur = t - e.ts
+                kept.append(e)
+            self.tracer.events[:] = kept
+        return aborted
+
+    # ------------------------------------------------------------------ #
     def utilization(self) -> dict:
         """Aggregate overlap/bubble + per-phase busy accounting.
 
@@ -355,6 +407,8 @@ class OffloadEngine:
                           else self._host_busy / span),
             "overlap_total": sum(r.overlap for r in self.jobs),
             "bubble_total": sum(r.bubble for r in offloads),
+            "aborted": sum(1 for r in self.jobs if r.aborted),
+            "halted_at": self.halted_at,
         }
 
 

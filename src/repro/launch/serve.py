@@ -21,6 +21,17 @@ fabric with its own scaled hardware, Eq.-1 prior, and online calibrator.
   PYTHONPATH=src python -m repro.launch.serve --no-execute --fleet 16,16 \\
       --router rr                            # round-robin baseline
 
+``--faults`` injects a deterministic fault schedule (DESIGN.md §10) into
+the run — crash a lane mid-serve and watch the fleet requeue, restore, and
+re-route its orphans:
+
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --pipeline \\
+      --fleet 32,8,8 --faults crash@1:0.45 --recovery restore
+  PYTHONPATH=src python -m repro.launch.serve --no-execute --fleet 32,8 \\
+      --faults 'skew@1:0.3+0.5x1.5'          # poisoned measurement channel
+  PYTHONPATH=src python -m repro.launch.serve --no-execute \\
+      --faults stall@0:0.5+0.1       # single fabric: stalls freeze the clock
+
 ``--one-shot`` keeps the original single-batch driver (one offline offload
 decision per run), used by examples/serve_batch.py and the equivalence test.
 
@@ -115,6 +126,26 @@ def _finish_obs(args, out, tracer, residuals) -> None:
         print(f"metrics summary -> {args.metrics_json}")
 
 
+def _fault_report(out) -> None:
+    """Print the injected fault schedule and the recovery outcome."""
+    inj = out.get("faults")
+    if inj is None:
+        return
+    print(f"fault schedule ({len(inj)} event(s), boundary-injected):")
+    for ev in inj.events:
+        extra = ""
+        if ev.duration:
+            extra += f" +{ev.duration:.0f}cy"
+        if ev.factor != 1.0:
+            extra += f" x{ev.factor:g}"
+        print(f"  {ev.kind}@lane{ev.lane} t={ev.t:.0f}{extra}")
+    if "recovery" in out:
+        print(f"recovery [{out['recovery']}]: dead lanes "
+              f"{list(out.get('dead_lanes', []))}, quarantined "
+              f"{list(out.get('quarantined_lanes', []))}, "
+              f"{len(out.get('dropped', []))} undeliverable dropped")
+
+
 def serve_fleet_stream(args) -> dict:
     """Drive the multi-fabric fleet (DESIGN.md §8) on the open-loop trace."""
     from repro.serve import WorkloadSpec, serve_fleet
@@ -137,7 +168,10 @@ def serve_fleet_stream(args) -> dict:
                       max_batch=args.max_batch,
                       wave_boundary=args.wave_boundary,
                       pipeline=args.pipeline, buffering=args.buffering,
-                      tracer=tracer, residuals=residuals)
+                      tracer=tracer, residuals=residuals,
+                      faults=args.faults, fault_seed=args.fault_seed,
+                      recovery=args.recovery, tie_seed=args.tie_seed)
+    _fault_report(out)
 
     lane_hist: dict[int, int] = {}
     guarded = 0
@@ -180,7 +214,9 @@ def serve_stream(args) -> dict:
                          max_batch=args.max_batch, fabric=args.fabric,
                          wave_boundary=args.wave_boundary,
                          pipeline=args.pipeline, buffering=args.buffering,
-                         tracer=tracer, residuals=residuals)
+                         tracer=tracer, residuals=residuals,
+                         faults=args.faults, fault_seed=args.fault_seed)
+    _fault_report(out)
 
     if args.verbose:
         for adm in out["admissions"]:
@@ -259,6 +295,26 @@ def main(argv=None):
                     help="fleet routing policy: model-driven predicted "
                          "completion (default), round-robin, or "
                          "least-queued-lane")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault schedule (DESIGN.md §10): "
+                         "comma-separated KIND@LANE:T[+DUR][xFACTOR] with "
+                         "KIND in crash/stall/skew and T/DUR as cycles or "
+                         "horizon fractions (<=1.0), e.g. 'crash@1:0.45' or "
+                         "'stall@0:0.3+0.1,skew@2:0.5+0.2x1.5'; or "
+                         "'random:N' for N seeded random events")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for 'random:N' fault schedules (default: "
+                         "derive_seed(--seed, 'faults') — one workload seed "
+                         "reproduces the whole chaos run)")
+    ap.add_argument("--recovery", choices=("restore", "reprefill", "drop"),
+                    default="restore",
+                    help="fleet crash recovery mode: requeue orphans with "
+                         "KV restore priced as an Eq.-1 offload (default), "
+                         "requeue with full re-prefill, or drop them (the "
+                         "naive baseline the A/B benchmark measures against)")
+    ap.add_argument("--tie-seed", type=int, default=None,
+                    help="seed the router's tie-break RNG (default: "
+                         "deterministic first-lane ties)")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the real JAX engine (scheduler machinery only)")
     ap.add_argument("--fabric", choices=("simulated", "wallclock"),

@@ -92,6 +92,16 @@ class ResidualTracker:
             seen.setdefault(lane)
         return list(seen)
 
+    def reset_lane(self, lane: str) -> None:
+        """Drop one lane's APE windows (``mape`` returns None until new
+        samples arrive).  The historical drift ``series`` and the raw
+        observations are kept — this clears the *current* signal, not the
+        record.  Used when a quarantined lane is released: its window is
+        full of the poisoned-era errors, which must not re-trigger
+        quarantine on the first post-release check (DESIGN.md §10.4)."""
+        for key in [k for k in self._apes if k[0] == lane]:
+            self._apes[key].clear()
+
     def mape(self, lane: str, kind: str | None = None) -> float | None:
         """Windowed MAPE (%) of one lane, over one kind or all combined.
 

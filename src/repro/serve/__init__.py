@@ -39,24 +39,28 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.runtime.fault import FaultEvent, FaultInjector
+
 from .batcher import ContinuousBatcher, PendingStep, ServingEngine
 from .calibrator import CalibrationSnapshot, OnlineCalibrator
 from .fabric import CompletedJob, SimulatedFabric, WallClockFabric
-from .fleet import (ROUTER_POLICIES, FabricFleet, FleetLane, RouteDecision,
-                    Router, fabric_prior, serve_fleet)
+from .fleet import (RECOVERY_MODES, ROUTER_POLICIES, FabricFleet, FleetLane,
+                    RouteDecision, Router, fabric_prior, serve_fleet)
 from .metrics import FleetMetrics, ServeMetrics
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
-from .workload import CYCLES_PER_SECOND, WorkloadSpec, synthetic_workload
+from .workload import (CYCLES_PER_SECOND, WorkloadSpec, derive_seed,
+                       synthetic_workload)
 
 __all__ = [
     "AdmissionDecision", "BatchPlan", "CalibrationSnapshot", "CompletedJob",
-    "ContinuousBatcher", "CYCLES_PER_SECOND", "FabricFleet", "FleetLane",
-    "FleetMetrics", "OffloadAwareScheduler", "OnlineCalibrator",
-    "PendingStep", "Request", "RequestQueue", "RequestState",
-    "ROUTER_POLICIES", "RouteDecision", "Router", "ServeMetrics",
-    "ServingEngine", "SimulatedFabric", "WallClockFabric", "WorkloadSpec",
-    "fabric_prior", "serve_fleet", "serve_workload", "synthetic_workload",
+    "ContinuousBatcher", "CYCLES_PER_SECOND", "FabricFleet", "FaultEvent",
+    "FaultInjector", "FleetLane", "FleetMetrics", "OffloadAwareScheduler",
+    "OnlineCalibrator", "PendingStep", "RECOVERY_MODES", "Request",
+    "RequestQueue", "RequestState", "ROUTER_POLICIES", "RouteDecision",
+    "Router", "ServeMetrics", "ServingEngine", "SimulatedFabric",
+    "WallClockFabric", "WorkloadSpec", "derive_seed", "fabric_prior",
+    "serve_fleet", "serve_workload", "synthetic_workload",
 ]
 
 
@@ -78,8 +82,17 @@ def serve_workload(
     buffering: str | None = None,
     tracer=None,
     residuals=None,
+    faults=None,
+    fault_seed: int | None = None,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
+
+    ``faults`` attaches a :class:`repro.runtime.fault.FaultInjector` (or a
+    ``--faults`` spec string) against lane 0: stalls freeze the clock, skew
+    poisons the calibrator's measurement channel, and a crash halts the
+    fabric — with no fleet behind this path there is nowhere to recover to,
+    so crash orphans are FAILED and reported as ``dropped`` (single-fabric
+    crash recovery IS the fleet, DESIGN.md §10).
 
     ``execute=False`` skips the real JAX engine (no tokens generated) and
     exercises only the queue/scheduler/calibrator/clock machinery — the
@@ -194,12 +207,27 @@ def serve_workload(
             engine.warmup(spec.prompt_lens, slots=not wave_boundary)
 
     requests = synthetic_workload(spec, with_tokens=execute)
+    if isinstance(faults, str):
+        horizon = max((r.arrival for r in requests), default=0.0)
+        faults = FaultInjector.parse(
+            faults, horizon=horizon, num_lanes=1,
+            seed=(derive_seed(spec.seed, "faults")
+                  if fault_seed is None else fault_seed))
     batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
                                 engine=engine, max_batch=max_batch,
                                 wave_boundary=wave_boundary,
                                 pipeline=pipeline, tracer=tracer,
-                                residuals=residuals, proc=proc)
+                                residuals=residuals, proc=proc,
+                                faults=faults, fault_lane=0)
     out = batcher.run(requests)
+    if out["orphans"]:
+        # No fleet behind this path: a crash's orphans have nowhere to go.
+        for r in out["orphans"]:
+            r.state = RequestState.FAILED
+            batcher.metrics.dropped += 1
+        out["requests"] = sorted(out["requests"] + out["orphans"],
+                                 key=lambda r: r.rid)
     out["arch"] = arch
     out["spec"] = spec
+    out["faults"] = faults
     return out

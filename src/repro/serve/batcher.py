@@ -316,7 +316,9 @@ class ContinuousBatcher:
                  wave_boundary: bool = False,
                  pipeline: bool = False,
                  tracer=None, residuals=None,
-                 proc: str = "fabric", flow: bool = False):
+                 proc: str = "fabric", flow: bool = False,
+                 faults=None, fault_lane: int = 0,
+                 ckpt=None, ckpt_every: int = 4):
         self.scheduler = scheduler
         self.calibrator = calibrator
         self.fabric = fabric or SimulatedFabric(
@@ -349,6 +351,21 @@ class ContinuousBatcher:
         self.residuals = residuals
         self.proc = proc
         self.flow = flow
+        # Fault injection (DESIGN.md §10) — all optional, zero-cost when
+        # unset.  ``faults`` is a runtime.fault.FaultInjector; ``fault_lane``
+        # selects which of its lanes this batcher is.  The injector is
+        # polled at job/loop boundaries only — faults take effect at the
+        # next engine-timeline point, never mid-span.  ``ckpt`` is a
+        # ckpt.CheckpointManager snapshotting decode state every
+        # ``ckpt_every`` decode steps, so a crashed lane's requests can be
+        # restored instead of re-prefilled from scratch.
+        self.faults = faults
+        self.fault_lane = fault_lane
+        self.ckpt = ckpt
+        self.ckpt_every = max(1, ckpt_every)
+        self.orphans: list[Request] = []
+        self._decode_count = 0
+        self._ckpt_max_gen = 1
         self._wall_t = 0.0   # wall-domain trace clock (real engine steps)
         # With a real engine attached, at most one decode may overlap an
         # in-flight prefill: the prefill is chained on that decode's cache
@@ -393,6 +410,7 @@ class ContinuousBatcher:
             # slots, or breaking the batch deadline) stay queued for a later
             # job.
             if wave and (req.prompt_len != wave[0].prompt_len
+                         or req.restore_len != wave[0].restore_len
                          or len(wave) >= limit):
                 continue
             cand_n = wave_n + req.n_prompt_elems
@@ -461,6 +479,12 @@ class ContinuousBatcher:
                                clock: float) -> None:
         """Per-request prefill accounting (TTFT/SLO/first token), shared by
         both serving paths."""
+        if r.t_first_token is not None:
+            # Recovered request: its first token, TTFT sample and SLO
+            # verdict were produced on the lane that later died — re-serving
+            # must not double-count them (the verdict stands: the client
+            # already received that token before the crash).
+            return
         r.t_first_token = clock
         m = self.metrics
         m.ttft_cycles.add(r.ttft())
@@ -480,11 +504,32 @@ class ContinuousBatcher:
         trace events and the residual series, never the fit itself.
         """
         if plan.offload:
+            # A latency-skew fault poisons the MEASUREMENT channel only:
+            # the timer the calibrator reads lies by ``factor``, while the
+            # job's true time still drives the virtual clock.  Feeding the
+            # skewed value to both the calibrator window and the residual
+            # series is what lets drift telemetry *catch* the poisoning
+            # (DESIGN.md §10): predictions diverge from reports, the
+            # residual MAPE blows past the quarantine bar, and the fleet
+            # resets this lane's window.
+            t_report = t_cycles
+            if self.faults is not None:
+                f = self.faults.skew_factor(self.fault_lane, now)
+                if f != 1.0:
+                    t_report = t_cycles * f
+                    self.metrics.skewed_jobs += 1
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            self.proc, "faults", "fault:skew", now,
+                            args={"factor": f, "t_true": t_cycles,
+                                  "t_report": t_report})
             self.calibrator.observe(plan.m,
                                     plan.n_elems if n_exec is None
-                                    else n_exec, t_cycles, now=now)
+                                    else n_exec, t_report, now=now)
             if plan.kind == "prefill":
                 self.metrics.prefill_jobs += 1
+            elif plan.kind == "restore":
+                self.metrics.restore_jobs += 1
             else:
                 self.metrics.decode_jobs += 1
             if self.residuals is not None:
@@ -493,7 +538,7 @@ class ContinuousBatcher:
                 # sample population, so the windowed residual MAPE tracks
                 # the calibrator's window MAPE (tested to <= 1pp).
                 res = self.residuals.observe(self.proc, plan.kind,
-                                             plan.t_pred, t_cycles, t=now)
+                                             plan.t_pred, t_report, t=now)
                 if res is not None and self.tracer is not None:
                     self.tracer.instant(
                         self.proc, "residuals", f"residual:{plan.kind}", now,
@@ -534,18 +579,149 @@ class ContinuousBatcher:
         self._wall_t += wall_s
 
     # ------------------------------------------------------------------ #
-    def run(self, requests: list[Request]) -> dict:
-        """Serve the whole trace; returns requests + metrics + logs."""
+    # Fault injection (DESIGN.md §10).  All hooks early-return when no
+    # injector is attached, keeping the fault-free paths bit-identical.
+    # ------------------------------------------------------------------ #
+    def _crash_t(self) -> float | None:
+        if self.faults is None:
+            return None
+        return self.faults.crash_time(self.fault_lane)
+
+    def _crashed(self, clock: float) -> bool:
+        t = self._crash_t()
+        return t is not None and clock >= t
+
+    def _apply_stall(self, clock: float) -> float:
+        """Absorb any stall window covering ``clock``: the lane freezes
+        until the window ends (chained windows are absorbed one poll at a
+        time — the loop re-enters this before dispatching anything)."""
+        if self.faults is None:
+            return clock
+        end = self.faults.stall_end(self.fault_lane, clock)
+        if end is None or end <= clock:
+            return clock
+        m = self.metrics
+        m.stalls += 1
+        m.stall_cycles += end - clock
+        if self.tracer is not None:
+            self.tracer.span(self.proc, "faults", "fault:stall", clock,
+                             end - clock, args={"lane": self.fault_lane})
+        return end
+
+    def _cap_idle_jump(self, clock: float) -> float:
+        """An idle lane still dies at its scheduled crash time: cap the
+        idle-advance at the crash so the abort is stamped honestly instead
+        of at some far-future arrival."""
+        crash_t = self._crash_t()
+        if crash_t is not None and clock > crash_t:
+            return crash_t
+        return clock
+
+    def _abort_crash(self, queue: RequestQueue, running: list[Request],
+                     clock: float) -> float:
+        """The fabric crashed: halt the engine timeline at ``clock`` (the
+        first job boundary at/after the scheduled crash) and orphan every
+        request on board — in slots, in flight, and still queued (open-loop
+        routing already bound future arrivals to this lane).  Recovery is
+        the fleet's job (serve/fleet.py); the dead lane only reports."""
+        m = self.metrics
+        m.faults_crash += 1
+        drained = queue.drain()
+        orphans = list(running) + drained
+        for r in orphans:
+            r.state = RequestState.ORPHANED
+        m.orphaned += len(orphans)
+        eng = getattr(self.fabric, "engine", None)
+        if eng is not None and getattr(eng, "halted_at", 0.0) is None:
+            eng.halt(clock)
+        if self.tracer is not None:
+            self.tracer.instant(self.proc, "faults", "fault:crash", clock,
+                                args={"lane": self.fault_lane,
+                                      "orphaned": len(orphans)})
+            for r in orphans:
+                self.tracer.instant(self.proc, "requests", "orphaned", clock,
+                                    args={"rid": r.rid})
+            if self.flow:
+                # Only queued orphans still hold an open router flow arrow;
+                # running ones closed theirs at their (now lost) prefill.
+                for r in drained:
+                    self.tracer.flow_end(self.proc, "requests", "route",
+                                         clock, flow=r.rid)
+        self.orphans.extend(orphans)
+        return clock
+
+    def _maybe_checkpoint(self, slots, emitted, lens, gen_buf,
+                          clock: float) -> None:
+        """Snapshot decode state every ``ckpt_every`` decode steps.
+
+        The checkpoint is the per-slot resume record: request ids, tokens
+        emitted, cache lengths, and the generated-token rows — enough for
+        ``restore_checkpoint`` to rebuild a crashed slot's decode position
+        on another lane (the restore is then priced as an Eq.-1 offload,
+        serve/fleet.py)."""
+        if self.ckpt is None:
+            return
+        self._decode_count += 1
+        if self._decode_count % self.ckpt_every:
+            return
+        nb = self.max_batch
+        rids = np.full(nb, -1, np.int64)
+        em = np.zeros(nb, np.int64)
+        ln = np.zeros(nb, np.int64)
+        gen = np.full((nb, self._ckpt_max_gen), -1, np.int64)
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            rids[i] = r.rid
+            em[i] = emitted[i]
+            ln[i] = int(lens[i])
+            row = gen_buf[i][:self._ckpt_max_gen]
+            if row:
+                gen[i, :len(row)] = row
+        self.ckpt.save(self._decode_count,
+                       {"rids": rids, "emitted": em, "lens": ln, "gen": gen},
+                       {"clock": clock})
+        if self.tracer is not None:
+            self.tracer.instant(self.proc, "faults", "checkpoint", clock,
+                                args={"step": self._decode_count,
+                                      "occupied": int((rids >= 0).sum())})
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request], *, start_clock: float | None = None,
+            requeued: bool = False) -> dict:
+        """Serve the whole trace; returns requests + metrics + logs.
+
+        ``requeued=True`` is the fleet's recovery pass: the same batcher
+        re-serves requests orphaned by another lane's crash — they count as
+        ``requeued`` (not ``submitted``; the client submitted them once) and
+        the clock resumes from ``start_clock`` (this lane's previous
+        ``t_end``), never from zero.
+        """
         queue = RequestQueue(requests)
         m = self.metrics
-        m.submitted += len(requests)
+        if requeued:
+            m.requeued += len(requests)
+        else:
+            m.submitted += len(requests)
+        if requests and self.ckpt is not None:
+            self._ckpt_max_gen = max(self._ckpt_max_gen,
+                                     max(r.gen_len for r in requests))
+        self.orphans = []
         clock = queue.next_arrival() or 0.0
-        m.t_start = clock
+        if start_clock is not None:
+            clock = max(clock, start_clock)
+        if not requeued:
+            m.t_start = clock
 
         if self.wave_boundary:
             while not queue.empty:
+                clock = self._apply_stall(clock)
+                if self._crashed(clock):
+                    clock = self._abort_crash(queue, [], clock)
+                    break
                 if not queue.arrived(clock):
-                    clock = queue.next_arrival()
+                    clock = self._cap_idle_jump(queue.next_arrival())
+                    continue
                 wave = self._form_wave(queue, clock)
                 if not wave:
                     continue  # everything that had arrived was rejected
@@ -560,6 +736,7 @@ class ContinuousBatcher:
         return {
             "requests": sorted(queue.finished + queue.rejected,
                                key=lambda r: r.rid),
+            "orphans": list(self.orphans),
             "metrics": m,
             "plans": self.scheduler.plans,
             "admissions": self.scheduler.admissions,
@@ -587,6 +764,10 @@ class ContinuousBatcher:
             slots[i] = None
 
         while True:
+            clock = self._apply_stall(clock)
+            if self._crashed(clock):
+                return self._abort_crash(
+                    queue, [slots[i] for i in occupied()], clock)
             free = [i for i in range(nb) if slots[i] is None]
             occ_before = len(occupied())
             if free and queue.arrived(clock):
@@ -610,7 +791,7 @@ class ContinuousBatcher:
                 nxt = queue.next_arrival()
                 if nxt is None:  # pragma: no cover - defensive
                     return clock
-                clock = max(clock, nxt)
+                clock = self._cap_idle_jump(max(clock, nxt))
                 continue
 
             # One decode step over every occupied slot (per-slot lengths).
@@ -636,27 +817,51 @@ class ContinuousBatcher:
                     gen_buf[i].append(int(next_tok[i]))
                 if emitted[i] >= slots[i].gen_len:
                     finish(i, clock)
+            self._maybe_checkpoint(slots, emitted, lens, gen_buf, clock)
 
     def _plan_prefill(self, batch: list[Request],
                       clock: float) -> tuple[BatchPlan, int]:
         """Queue-delay accounting + Eq.-3 plan for one admission batch,
-        shared by the sequential and pipelined prefill paths."""
+        shared by the sequential and pipelined prefill paths.
+
+        A batch of recovered requests carrying checkpointed decode state
+        (``restore_len > 0``, uniform across the batch by ``_form_wave``'s
+        bucketing) becomes a ``"restore"`` job: its N additionally counts
+        the KV tokens being re-materialized, and the SAME Eq.-1 closed form
+        prices it — recovery is dispatch + copy + sync like any other
+        offload (DESIGN.md §10).  Restore jobs carry no deadline: the SLO
+        verdict fell at the original prefill, on the lane that died.
+        """
         prompt_len = batch[0].prompt_len
-        n_job = sum(r.n_prompt_elems for r in batch)
-        slos = [r.slo_cycles for r in batch if r.slo_cycles is not None]
+        restore = batch[0].restore_len > 0
+        n_job = sum(r.n_prompt_elems + r.restore_len for r in batch)
+        slos = ([] if restore else
+                [r.slo_cycles for r in batch if r.slo_cycles is not None])
         deadline = min(slos) if slos else None
         for r in batch:
-            self.metrics.queue_delay_cycles.add(clock - r.arrival)
+            delay = clock - r.effective_arrival
+            self.metrics.queue_delay_cycles.add(delay)
+            if r.t_enqueued is not None:
+                self.metrics.recovered += 1
+                self.metrics.recovery_delay_cycles.add(delay)
             if self.tracer is not None:
-                # Queue-delay span: arrival -> the prefill that serves it.
-                self.tracer.span(self.proc, "requests", "queued", r.arrival,
-                                 clock - r.arrival, args={"rid": r.rid})
+                # Queue-delay span: arrival -> the prefill that serves it
+                # (requeue instant -> re-prefill for recovered requests).
+                self.tracer.span(self.proc, "requests", "queued",
+                                 r.effective_arrival, delay,
+                                 args={"rid": r.rid})
+                if r.t_enqueued is not None:
+                    self.tracer.instant(
+                        self.proc, "requests", "recovered", clock,
+                        args={"rid": r.rid, "restore_len": r.restore_len,
+                              "requeues": r.requeues})
                 if self.flow:
                     # Close the router's flow arrow at the executing lane.
                     self.tracer.flow_end(self.proc, "requests", "route",
                                          clock, flow=r.rid)
-        plan = self.scheduler.plan(n_job, deadline=deadline, kind="prefill",
-                                   now=clock)
+        plan = self.scheduler.plan(
+            n_job, deadline=deadline,
+            kind="restore" if restore else "prefill", now=clock)
         return plan, prompt_len
 
     def _stage_prefill_inputs(self, batch: list[Request], take: list[int],
@@ -676,6 +881,18 @@ class ContinuousBatcher:
         per-request TTFT/SLO/first-token accounting."""
         for slot, r in zip(take, batch):
             slots[slot] = r
+            if r.restore_len > 0:
+                # KV restore: the slot resumes where the checkpoint left it
+                # — restore_len tokens already emitted, cache primed past
+                # them.  No new token is produced by the restore job itself.
+                emitted[slot] = r.restore_len
+                gen_buf[slot] = ([int(t) for t in r.restored_tokens]
+                                 if r.restored_tokens is not None else [])
+                lens[slot] = r.prompt_len + r.restore_len
+                if gen_buf[slot]:
+                    tok[slot, 0] = gen_buf[slot][-1]
+                self._record_prefill_member(r, t_job, clock)
+                continue
             emitted[slot] = 1          # the prefill emits the first token
             gen_buf[slot] = []
             lens[slot] = r.prompt_len
@@ -750,6 +967,14 @@ class ContinuousBatcher:
             slots[i] = None
 
         while True:
+            clock = self._apply_stall(clock)
+            if self._crashed(clock):
+                running = [s for s in slots if s is not None]
+                if inflight is not None:
+                    # The in-flight prefill dies with the fabric: its batch
+                    # never reached a slot, so its requests are orphans too.
+                    running += list(inflight.batch)
+                return self._abort_crash(queue, running, clock)
             if inflight is None:
                 free = [i for i in range(nb) if slots[i] is None]
                 if free and queue.arrived(clock):
@@ -772,7 +997,7 @@ class ContinuousBatcher:
                 nxt = queue.next_arrival()
                 if nxt is None:  # pragma: no cover - defensive
                     return clock
-                clock = max(clock, nxt)
+                clock = self._cap_idle_jump(max(clock, nxt))
                 continue
 
             # One decode step over the occupied slots, overlapped under the
@@ -823,6 +1048,7 @@ class ContinuousBatcher:
                     gen_buf[i].append(int(next_tok[i]))
                 if emitted[i] >= slots[i].gen_len:
                     finish(i, clock)
+            self._maybe_checkpoint(slots, emitted, lens, gen_buf, clock)
 
             if inflight is not None:
                 inflight.overlapped += 1

@@ -67,6 +67,7 @@ class OnlineCalibrator:
         self._since_refit = 0
         self.n_observed = 0
         self.n_refits = 0
+        self.n_quarantines = 0
         # Optional span tracer (repro.obs): refit instants with the
         # before/after coefficients, on this lane's "calibrator" track.
         self.tracer = tracer
@@ -119,6 +120,27 @@ class OnlineCalibrator:
                       "window_mape_pct": fitted_mape if accepted
                       else served_mape,
                       "n_samples": len(self._samples)})
+
+    def quarantine(self, *, now: float = 0.0) -> None:
+        """Poisoned-window reset (DESIGN.md §10): drop every sample and
+        revert to the prior.
+
+        The fleet calls this when drift telemetry (obs/residual.py) shows
+        this lane's predictions diverging — e.g. a latency-skew fault fed
+        the window fabricated timings.  A poisoned window cannot be
+        salvaged sample-by-sample (the calibrator cannot tell which
+        observations lied), so the whole window is discarded; the prior
+        serves until *fresh* observations rebuild a trustworthy fit, and
+        the router readmits the lane once the refit MAPE recovers
+        (``FabricFleet.refresh_quarantine``)."""
+        self._samples.clear()
+        self._model = self.prior
+        self._source = "prior"
+        self._since_refit = 0
+        self.n_quarantines += 1
+        if self.tracer is not None:
+            self.tracer.instant(self.proc, "calibrator", "quarantine", now,
+                                args={"n_quarantines": self.n_quarantines})
 
     # ------------------------------------------------------------------ #
     @property

@@ -41,7 +41,10 @@ tokens and metrics — which is the regression anchor for everything here.
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.core import runtime_model, simulator as sim
 from repro.core.runtime_model import PAPER_MODEL, OffloadModel
@@ -50,12 +53,22 @@ from .batcher import ContinuousBatcher
 from .calibrator import OnlineCalibrator
 from .fabric import SimulatedFabric
 from .metrics import FleetMetrics, ServeMetrics
-from .queue import Request
+from .queue import Request, RequestState
 from .scheduler import OffloadAwareScheduler
-from .workload import WorkloadSpec, synthetic_workload
+from .workload import WorkloadSpec, derive_seed, synthetic_workload
 
 #: Router policies (DESIGN.md §8.2).
 ROUTER_POLICIES = ("model", "rr", "lql")
+
+#: What the fleet does with a dead lane's orphans (DESIGN.md §10):
+#:   * "restore"   — re-route and resume from the lane's last decode
+#:                   checkpoint (the restore job re-materializes KV and is
+#:                   priced by the same Eq.-1 closed form as any offload);
+#:   * "reprefill" — re-route and recompute from the request record (no
+#:                   checkpoint; the new lane re-runs the full prefill);
+#:   * "drop"      — fail the orphans outright (the naive baseline the
+#:                   kill-a-fabric A/B measures recovery against).
+RECOVERY_MODES = ("restore", "reprefill", "drop")
 
 
 def fabric_prior(num_clusters: int, *,
@@ -123,6 +136,7 @@ class RouteDecision:
     pending: tuple[int, ...]         # outstanding requests per lane (before)
     feasible: tuple[bool, ...]       # Eq.-3 SLO feasibility per lane
     guarded: bool                    # work-conserving guard redirected it
+    requeued: bool = False           # crash-recovery re-route (second pass)
 
 
 class Router:
@@ -142,7 +156,7 @@ class Router:
     """
 
     def __init__(self, lanes: list[FleetLane], policy: str = "model", *,
-                 tracer=None):
+                 tracer=None, tie_seed: int | None = None):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"router policy must be one of "
                              f"{ROUTER_POLICIES}, got {policy!r}")
@@ -154,19 +168,87 @@ class Router:
         self._inflight: list[list[float]] = [[] for _ in lanes]
         self._rr_next = 0
         self.decisions: list[RouteDecision] = []
+        # Fault state (DESIGN.md §10): a lane marked dead at time t is
+        # excluded from every decision whose request arrives at/after t —
+        # decisions *before* t stay bit-identical to the fault-free run
+        # (failure detection takes DETECTION_CYCLES; the router cannot act
+        # on a crash it has not observed).  Quarantine is score-less
+        # exclusion while a lane's calibrator is distrusted.
+        self._dead: dict[int, float] = {}
+        self._quarantined: dict[int, float] = {}
+        # Tie-break stream (seeded via workload.derive_seed): with no seed,
+        # exact score ties resolve to the lowest lane index — bit-identical
+        # to the historical min() behavior.
+        self._tie_rng = (None if tie_seed is None
+                         else np.random.default_rng(tie_seed))
         # Optional span tracer (repro.obs): each decision becomes an instant
         # on the "router" process carrying its evidence, plus a flow arrow
         # the chosen lane's batcher closes at the serving prefill.
         self.tracer = tracer
 
+    # ------------------------------------------------------------------ #
+    # Fault state
+    # ------------------------------------------------------------------ #
+    def mark_dead(self, lane: int, t_detect: float) -> None:
+        """Lane ``lane`` is known dead from ``t_detect`` on (crash time +
+        the detection delay).  From then on its score is effectively
+        zeroed — it is no longer a candidate for any request arriving
+        at/after ``t_detect``.  Nothing else is touched: decisions *before*
+        the detect time must stay bit-identical to the fault-free run (the
+        router cannot act on a crash it has not observed yet)."""
+        self._dead[lane] = min(t_detect, self._dead.get(lane, t_detect))
+
+    def quarantine(self, lane: int, now: float = 0.0) -> None:
+        """Exclude a lane whose calibrator is distrusted (poisoned window)
+        until :meth:`release` — used by FabricFleet when drift telemetry
+        crosses the quarantine bar."""
+        self._quarantined.setdefault(lane, now)
+
+    def release(self, lane: int) -> None:
+        self._quarantined.pop(lane, None)
+
+    @property
+    def dead_lanes(self) -> tuple[int, ...]:
+        return tuple(sorted(self._dead))
+
+    @property
+    def quarantined_lanes(self) -> tuple[int, ...]:
+        return tuple(sorted(self._quarantined))
+
+    def _excluded(self, i: int, now: float) -> bool:
+        t = self._dead.get(i)
+        if t is not None and now >= t:
+            return True
+        return i in self._quarantined
+
+    def _argmin(self, cand: list[int], key) -> int:
+        """Lowest-key candidate; exact ties go through the tie-break RNG
+        when one is seeded (lowest index otherwise — the historical
+        behavior, preserved bit-for-bit)."""
+        best = min(key(i) for i in cand)
+        ties = [i for i in cand if key(i) == best]
+        if len(ties) > 1 and self._tie_rng is not None:
+            return int(ties[int(self._tie_rng.integers(len(ties)))])
+        return ties[0]
+
     def _drain(self, now: float) -> None:
         for fl in self._inflight:
             fl[:] = [t for t in fl if t > now]
 
-    def route(self, req: Request) -> int:
-        """Pick the lane for one request; returns its index."""
-        now = req.arrival
+    def route(self, req: Request, *, requeued: bool = False) -> int:
+        """Pick the lane for one request; returns its index.
+
+        Raises ``RuntimeError`` when every lane is dead or quarantined —
+        the fleet turns that into a dropped request rather than a crash.
+        """
+        now = req.effective_arrival
         self._drain(now)
+        alive = [i for i in range(len(self.lanes))
+                 if not self._excluded(i, now)]
+        if not alive:
+            raise RuntimeError(f"no live lane for rid={req.rid} at "
+                               f"t={now:.0f} (dead={self.dead_lanes}, "
+                               f"quarantined={self.quarantined_lanes})")
         pending = tuple(len(fl) for fl in self._inflight)
         service = [lane.preview(req) for lane in self.lanes]
         scores = tuple(max(self._t_free[i], now) + service[i]
@@ -179,16 +261,22 @@ class Router:
         feasible = tuple(
             lane.scheduler.fits_deadline(req.n_prompt_elems, req.slo_cycles)
             for lane in self.lanes)
-        cand = ([i for i in range(len(self.lanes)) if feasible[i]]
-                or list(range(len(self.lanes))))
+        cand = [i for i in alive if feasible[i]] or alive
 
         if self.policy == "rr":
-            choice = self._rr_next
-            self._rr_next = (self._rr_next + 1) % len(self.lanes)
+            # Round-robin over the *live* lanes: advance the pointer until
+            # it lands on one (identical sequence while nothing is dead).
+            choice = alive[0]
+            for _ in range(len(self.lanes)):
+                c = self._rr_next
+                self._rr_next = (self._rr_next + 1) % len(self.lanes)
+                if c in alive:
+                    choice = c
+                    break
         elif self.policy == "lql":
-            choice = min(cand, key=lambda i: (pending[i], scores[i]))
+            choice = self._argmin(cand, lambda i: (pending[i], scores[i]))
         else:  # model
-            choice = min(cand, key=lambda i: scores[i])
+            choice = self._argmin(cand, lambda i: scores[i])
 
         # Work-conserving guard (model/lql): while some fabric *that could
         # serve this request* is predicted idle, never queue behind a busy
@@ -199,7 +287,7 @@ class Router:
         if self.policy != "rr" and pending[choice] > 0:
             idle = [i for i in cand if pending[i] == 0]
             if idle:
-                choice = min(idle, key=lambda i: scores[i])
+                choice = self._argmin(idle, lambda i: scores[i])
                 guarded = True
 
         # A request infeasible on EVERY lane (cand fell back to all lanes)
@@ -212,13 +300,17 @@ class Router:
             self._inflight[choice].append(done)
         self.decisions.append(RouteDecision(
             rid=req.rid, lane=choice, policy=self.policy, scores=scores,
-            pending=pending, feasible=feasible, guarded=guarded))
+            pending=pending, feasible=feasible, guarded=guarded,
+            requeued=requeued))
         if self.tracer is not None:
             self.tracer.instant(
                 "router", "routes", f"route:{self.policy}", now,
                 args={"rid": req.rid, "lane": self.lanes[choice].name,
-                      "scores": list(scores), "pending": list(pending),
-                      "feasible": list(feasible), "guarded": guarded})
+                      "scores": [s if np.isfinite(s) else None
+                                 for s in scores],
+                      "pending": list(pending),
+                      "feasible": list(feasible), "guarded": guarded,
+                      "requeued": requeued})
             self.tracer.flow_start("router", "routes", "route", now,
                                    flow=req.rid)
         return choice
@@ -241,17 +333,36 @@ class FabricFleet:
                  jitter_pct: float = 1.0, seed: int = 0,
                  max_batch: int = 4, wave_boundary: bool = False,
                  pipeline: bool = False, buffering: str | None = None,
-                 engines: list | None = None, tracer=None, residuals=None):
+                 engines: list | None = None, tracer=None, residuals=None,
+                 faults=None, recovery: str = "restore",
+                 ckpt_every: int = 4, quarantine_mape_pct: float = 10.0,
+                 release_mape_pct: float = 2.0,
+                 tie_seed: int | None = None):
         sizes = tuple(int(s) for s in sizes)
         if not sizes:
             raise ValueError("a fleet needs at least one fabric")
         if engines is not None and len(engines) != len(sizes):
             raise ValueError("engines must match the fleet size")
+        if recovery not in RECOVERY_MODES:
+            raise ValueError(f"recovery must be one of {RECOVERY_MODES}, "
+                             f"got {recovery!r}")
         buffering = buffering or ("double" if pipeline else "single")
         self.sizes = sizes
         self.max_batch = max_batch
         self.wave_boundary = wave_boundary
         self.pipeline = pipeline
+        # Fault tolerance (DESIGN.md §10): ``faults`` is a
+        # runtime.fault.FaultInjector shared by every lane (each batcher
+        # polls its own lane index).  Skew quarantine needs drift telemetry,
+        # so a fleet under fault injection always carries a ResidualTracker.
+        self.faults = faults
+        self.recovery = recovery
+        self.ckpt_every = ckpt_every
+        self.quarantine_mape_pct = quarantine_mape_pct
+        self.release_mape_pct = release_mape_pct
+        if faults is not None and residuals is None:
+            from repro.obs.residual import ResidualTracker
+            residuals = ResidualTracker()
         # Observability (repro.obs): one trace process per lane (named
         # ``f{i}:{clusters}c``) plus a "router" process; the shared residual
         # tracker keys drift series by the same lane names.
@@ -273,7 +384,23 @@ class FabricFleet:
                 index=i, num_clusters=clusters, fabric=fabric,
                 calibrator=calibrator, scheduler=scheduler,
                 engine=None if engines is None else engines[i]))
-        self.router = Router(self.lanes, router, tracer=tracer)
+        self.router = Router(self.lanes, router, tracer=tracer,
+                             tie_seed=tie_seed)
+        # Per-lane checkpoint managers, only where they can matter: a lane
+        # with a scheduled crash snapshots its decode state so "restore"
+        # recovery can resume orphans elsewhere.  The backing directory
+        # lives for the fleet object's lifetime.
+        self._ckpt_tmp = None
+        self._ckpts: dict[int, object] = {}
+        if (faults is not None and recovery == "restore"
+                and faults.crashed_lanes()):
+            from repro.ckpt import CheckpointManager
+            self._ckpt_tmp = tempfile.TemporaryDirectory(
+                prefix="repro-fleet-ckpt-")
+            for i in faults.crashed_lanes():
+                if 0 <= i < len(self.lanes):
+                    self._ckpts[i] = CheckpointManager(
+                        f"{self._ckpt_tmp.name}/lane{i}", keep=2)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: list[Request]) -> dict:
@@ -284,12 +411,35 @@ class FabricFleet:
         :class:`ContinuousBatcher`.  Lanes share the virtual-time axis —
         arrival timestamps are global — so per-lane spans line up and the
         fleet metrics aggregate them directly.
+
+        Under fault injection (DESIGN.md §10) serving is two-phase:
+
+          1. dead lanes are pre-registered with the router at their
+             *detect* time (crash + detection lag) — every decision before
+             that stays bit-identical to the fault-free run — and each lane
+             drains with its own fault view; a crashed lane halts and
+             reports its orphans;
+          2. orphans are requeued at the detect time, re-routed (dead lane
+             excluded, quarantined calibrators excluded) and re-served on
+             the surviving lanes' batchers with their clocks resumed —
+             restored from the dead lane's last decode checkpoint when
+             ``recovery="restore"`` and one exists, re-prefilled from the
+             request record otherwise.  ``recovery="drop"`` fails them
+             outright (the naive A/B baseline).
         """
+        self.refresh_quarantine()
+        if self.faults is not None:
+            for i in self.faults.crashed_lanes():
+                if 0 <= i < len(self.lanes):
+                    self.router.mark_dead(i, self.faults.detect_time(i))
+
         routed: list[list[Request]] = [[] for _ in self.lanes]
-        for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+        for req in sorted(requests,
+                          key=lambda r: (r.effective_arrival, r.rid)):
             routed[self.router.route(req)].append(req)
 
         lane_outs = []
+        batchers: list[ContinuousBatcher] = []
         for lane, reqs in zip(self.lanes, routed):
             batcher = ContinuousBatcher(
                 lane.scheduler, lane.calibrator, fabric=lane.fabric,
@@ -297,15 +447,22 @@ class FabricFleet:
                 max_batch=None if lane.engine is not None else self.max_batch,
                 wave_boundary=self.wave_boundary, pipeline=self.pipeline,
                 tracer=self.tracer, residuals=self.residuals,
-                proc=lane.name, flow=True)
+                proc=lane.name, flow=True,
+                faults=self.faults, fault_lane=lane.index,
+                ckpt=self._ckpts.get(lane.index),
+                ckpt_every=self.ckpt_every)
+            batchers.append(batcher)
             out = batcher.run(reqs)
             # An unused lane still reports an honest (empty) summary.
             if not reqs:
                 out["metrics"] = ServeMetrics()
             lane_outs.append(out)
 
-        merged = sorted((r for out in lane_outs for r in out["requests"]),
-                        key=lambda r: r.rid)
+        dropped = self._recover(batchers, lane_outs)
+
+        merged = sorted(
+            [r for out in lane_outs for r in out["requests"]] + dropped,
+            key=lambda r: r.rid)
         if self.residuals is not None:
             # Routing drift, post hoc: the predicted-completion score the
             # router chose on vs the request's actual completion time.
@@ -313,12 +470,25 @@ class FabricFleet:
             # decode share is a lower bound), but trended per lane it shows
             # where the routing model drifts.
             done = {r.rid: r.t_done for r in merged if r.t_done is not None}
-            for d in self.router.decisions:
+            last = {d.rid: k for k, d in enumerate(self.router.decisions)}
+            for k, d in enumerate(self.router.decisions):
+                # Only a request's LAST routing decision pairs with its
+                # completion — a recovered request's first decision sent it
+                # to a lane that died under it.
+                if last[d.rid] != k:
+                    continue
                 actual = done.get(d.rid)
                 if actual is not None:
                     self.residuals.observe(self.lanes[d.lane].name, "route",
                                            d.scores[d.lane], actual,
                                            t=actual)
+        if self.faults is not None:
+            # Skew-only schedules never enter the crash-recovery path, so
+            # run the drift check here too (quarantine fires for the next
+            # trace this fleet serves).
+            t_last = max((out["metrics"].t_end for out in lane_outs),
+                         default=0.0)
+            self._quarantine_check(t_last)
         return {
             "requests": merged,
             "metrics": FleetMetrics([(lane.name, out["metrics"])
@@ -329,7 +499,199 @@ class FabricFleet:
             "router": self.router.policy,
             "sizes": self.sizes,
             "calibrations": [out["calibration"] for out in lane_outs],
+            "recovery": self.recovery if self.faults is not None else None,
+            "dropped": sorted(r.rid for r in dropped),
+            "dead_lanes": list(self.router.dead_lanes),
+            "quarantined_lanes": list(self.router.quarantined_lanes),
+            # The live fleet object: callers drive post-run probation
+            # (refresh_quarantine) or serve another trace on it.
+            "fleet": self,
         }
+
+    # ------------------------------------------------------------------ #
+    # Crash recovery + calibrator quarantine (DESIGN.md §10)
+    # ------------------------------------------------------------------ #
+    def _restore_map(self, lane_idx: int) -> dict[int, tuple[int, list[int]]]:
+        """rid -> (tokens_emitted, generated-token row) from the dead lane's
+        last decode checkpoint (empty when none was ever written)."""
+        mgr = self._ckpts.get(lane_idx)
+        if mgr is None:
+            return {}
+        try:
+            mgr.wait()
+            # Shapeless placeholder leaves: the saved shapes depend on the
+            # dead lane's batch geometry, which the fleet does not know.
+            data, _, _ = mgr.restore_latest(
+                {"rids": 0, "emitted": 0, "lens": 0, "gen": 0})
+        except FileNotFoundError:
+            return {}
+        out: dict[int, tuple[int, list[int]]] = {}
+        for i, rid in enumerate(np.asarray(data["rids"]).tolist()):
+            if rid < 0:
+                continue
+            em = int(np.asarray(data["emitted"])[i])
+            row = [int(t) for t in np.asarray(data["gen"])[i] if t >= 0]
+            out[int(rid)] = (em, row)
+        return out
+
+    def _drop(self, orphans: list[tuple[int, Request]],
+              lane_outs: list[dict], now: float) -> list[Request]:
+        """Fail orphans outright, attributed to their origin lane."""
+        dropped = []
+        for origin, r in orphans:
+            r.state = RequestState.FAILED
+            lane_outs[origin]["metrics"].dropped += 1
+            dropped.append(r)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "router", "faults", "dropped", max(now, r.arrival),
+                    args={"rid": r.rid, "origin": self.lanes[origin].name})
+        return dropped
+
+    def _recover(self, batchers: list[ContinuousBatcher],
+                 lane_outs: list[dict]) -> list[Request]:
+        """Phase 2: requeue + re-route + re-serve every crash orphan.
+
+        Returns the requests that could not be recovered (recovery="drop",
+        no live lane, or a second crash under the recovery pass) — already
+        marked FAILED and counted as ``dropped`` on their origin lane.
+        """
+        orphans: list[tuple[int, Request]] = [
+            (i, r) for i, out in enumerate(lane_outs)
+            for r in out.get("orphans", ())]
+        if not orphans:
+            return []
+        t_now = max(out["metrics"].t_end for out in lane_outs)
+        if self.recovery == "drop":
+            return self._drop(orphans, lane_outs, t_now)
+
+        # A poisoned calibrator must not attract the re-routed orphans:
+        # check drift telemetry BEFORE choosing recovery lanes.
+        self._quarantine_check(t_now)
+
+        restore_maps = {i: self._restore_map(i)
+                        for i in {i for i, _ in orphans}}
+        for origin, r in orphans:
+            t_detect = max(self.faults.detect_time(origin) or 0.0,
+                           lane_outs[origin]["metrics"].t_end)
+            r.t_enqueued = max(t_detect, r.arrival)
+            r.requeues += 1
+            r.state = RequestState.QUEUED
+            em, row = restore_maps[origin].get(r.rid, (0, []))
+            # Resume at most gen_len - 1 tokens in: a checkpoint at the
+            # final token would mean the request had already completed.
+            r.restore_len = min(em, r.gen_len - 1)
+            r.restored_tokens = (np.asarray(row[:r.restore_len], np.int32)
+                                 if r.restore_len > 0 and row else None)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "router", "faults", "requeue", r.t_enqueued,
+                    args={"rid": r.rid, "origin": self.lanes[origin].name,
+                          "restore_len": r.restore_len})
+
+        # Re-route in requeue order; a request no live lane can take is
+        # dropped, not raised (the client sees a failure, not a crash).
+        requeued: list[list[Request]] = [[] for _ in self.lanes]
+        undeliverable: list[tuple[int, Request]] = []
+        for origin, r in sorted(orphans,
+                                key=lambda p: (p[1].effective_arrival,
+                                               p[1].rid)):
+            try:
+                j = self.router.route(r, requeued=True)
+            except RuntimeError:
+                undeliverable.append((origin, r))
+                continue
+            requeued[j].append(r)
+
+        dropped = self._drop(undeliverable, lane_outs, t_now)
+        for j, reqs2 in enumerate(requeued):
+            if not reqs2:
+                continue
+            b = batchers[j]
+            out2 = b.run(reqs2, requeued=True,
+                         start_clock=lane_outs[j]["metrics"].t_end)
+            lane_outs[j]["requests"] = sorted(
+                lane_outs[j]["requests"] + out2["requests"],
+                key=lambda r: r.rid)
+            # The batcher accumulates into the same ServeMetrics object —
+            # re-point the lane output at it in case phase 1 replaced it
+            # (empty lane) and refresh the derived fields.
+            lane_outs[j]["metrics"] = b.metrics
+            lane_outs[j]["calibration"] = out2["calibration"]
+            # One recovery round: orphans of a second crash (a lane whose
+            # own scheduled crash fell after its phase-1 drain) fail.
+            second = [(j, r) for r in out2.get("orphans", ())]
+            dropped += self._drop(second, lane_outs, b.metrics.t_end)
+        return dropped
+
+    def _quarantine_check(self, now: float = 0.0) -> None:
+        """Quarantine any live lane whose drift telemetry (windowed
+        residual MAPE over the calibrator's own sample population) has
+        blown past the quarantine bar — the calibrator-poisoning signature
+        (a skew fault feeds it fabricated timings)."""
+        if self.residuals is None:
+            return
+        crashed = (set(self.faults.crashed_lanes())
+                   if self.faults is not None else set())
+        for lane in self.lanes:
+            i = lane.index
+            if i in crashed or i in self.router.quarantined_lanes:
+                continue
+            mape = self.residuals.mape(lane.name)
+            if mape is not None and mape > self.quarantine_mape_pct:
+                self.router.quarantine(i, now)
+                lane.calibrator.quarantine(now=now)
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "router", "faults", "quarantine", now,
+                        args={"lane": lane.name, "mape_pct": mape,
+                              "bar_pct": self.quarantine_mape_pct})
+
+    def refresh_quarantine(self, now: float = 0.0, *,
+                           probe_ns: tuple[int, ...] = (256, 1024, 4096)
+                           ) -> list[int]:
+        """Probation check for quarantined lanes; returns the released ones.
+
+        A quarantined lane serves no traffic, so it re-earns trust through
+        a *probe sweep*: a small (M, N) measurement grid run on its own
+        fabric, fed through the same (possibly still-skewed) measurement
+        channel.  The probes are judged against the lane's *prior* — the
+        offline Eq.-1 fit, the only ground-truth anchor a lying measurement
+        channel cannot absorb (a constant skew rescales a least-squares
+        refit perfectly, so a refit-vs-its-own-window check would release a
+        still-poisoned lane).  Probe MAPE back under the release bar — the
+        Eq.-2 quality the paper demands of a trustworthy fit — readmits
+        the lane and resets its drift windows; while the skew window is
+        still active the probes lie too and the lane stays out.
+        """
+        released: list[int] = []
+        for i in list(self.router.quarantined_lanes):
+            lane = self.lanes[i]
+            cal = lane.calibrator
+            skew = (self.faults.skew_factor(i, now)
+                    if self.faults is not None else 1.0)
+            samples = []
+            for n in probe_ns:
+                for m in lane.scheduler.available_m:
+                    t = lane.fabric.offload(m, n) * skew
+                    samples.append((m, n, t))
+                    cal.observe(m, n, t, now=now)
+            probe_mape = runtime_model.mape(cal.prior, samples)
+            ok = probe_mape <= self.release_mape_pct
+            if ok:
+                self.router.release(i)
+                released.append(i)
+                if self.residuals is not None:
+                    # Fresh telemetry: the stale poisoned window must not
+                    # re-trigger quarantine the moment the lane serves.
+                    self.residuals.reset_lane(lane.name)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "router", "faults",
+                    "release" if ok else "probation", now,
+                    args={"lane": lane.name, "probe_mape_pct": probe_mape,
+                          "bar_pct": self.release_mape_pct})
+        return released
 
 
 def serve_fleet(
@@ -348,6 +710,11 @@ def serve_fleet(
     buffering: str | None = None,
     tracer=None,
     residuals=None,
+    faults=None,
+    fault_seed: int | None = None,
+    recovery: str = "restore",
+    ckpt_every: int = 4,
+    tie_seed: int | None = None,
 ) -> dict:
     """Run the fleet serving stack on a synthetic open-loop workload.
 
@@ -378,12 +745,22 @@ def serve_fleet(
                    for _ in fleet]
 
     requests = synthetic_workload(spec, with_tokens=execute)
+    if isinstance(faults, str):
+        from repro.runtime.fault import FaultInjector
+        horizon = max((r.arrival for r in requests), default=0.0)
+        faults = FaultInjector.parse(
+            faults, horizon=horizon, num_lanes=len(fleet),
+            seed=(derive_seed(spec.seed, "faults")
+                  if fault_seed is None else fault_seed))
     fleet_obj = FabricFleet(fleet, router=router, jitter_pct=jitter_pct,
                             seed=spec.seed, max_batch=max_batch,
                             wave_boundary=wave_boundary, pipeline=pipeline,
                             buffering=buffering, engines=engines,
-                            tracer=tracer, residuals=residuals)
+                            tracer=tracer, residuals=residuals,
+                            faults=faults, recovery=recovery,
+                            ckpt_every=ckpt_every, tie_seed=tie_seed)
     out = fleet_obj.run(requests)
     out["arch"] = arch
     out["spec"] = spec
+    out["faults"] = faults
     return out

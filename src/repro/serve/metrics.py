@@ -101,6 +101,16 @@ class ServeMetrics:
     goodput_completed: int = 0    # completed with SLO met (or no SLO)
     # Pipelined-serving counters (DESIGN.md §7).
     pipelined_prefills: int = 0   # prefills dispatched under in-flight work
+    # Fault-tolerance counters (DESIGN.md §10).
+    faults_crash: int = 0         # fabric crashes that hit this lane
+    stalls: int = 0               # transient stall windows absorbed
+    stall_cycles: float = 0.0     # cycles lost to stall windows
+    skewed_jobs: int = 0          # jobs whose reported latency was poisoned
+    orphaned: int = 0             # requests stranded by a crash on this lane
+    requeued: int = 0             # recovered requests re-submitted here
+    recovered: int = 0            # requeued requests actually re-served here
+    restore_jobs: int = 0         # Eq.-1-priced KV-restore offloads
+    dropped: int = 0              # orphans never recovered (naive drop)
     # Fabric-cycle recorders.
     latency_cycles: Recorder = field(default_factory=Recorder)
     ttft_cycles: Recorder = field(default_factory=Recorder)
@@ -109,6 +119,10 @@ class ServeMetrics:
     # prefill start, cycles) and occupied-slot fraction per decode job.
     queue_delay_cycles: Recorder = field(default_factory=Recorder)
     slot_occupancy: Recorder = field(default_factory=Recorder)
+    # Recovery series (DESIGN.md §10): requeue -> re-prefill delay per
+    # recovered request (cycles) — the tax a crash adds on top of the
+    # restore offload itself.
+    recovery_delay_cycles: Recorder = field(default_factory=Recorder)
     # Pipelined-serving series (DESIGN.md §7), one point per job: host
     # cycles that ran hidden under another job's fabric execution, and
     # fabric idle cycles inserted before the job's execution (the pipeline
@@ -150,7 +164,8 @@ class ServeMetrics:
             "waves": self.waves,
             "jobs": {"prefill": self.prefill_jobs,
                      "decode": self.decode_jobs,
-                     "host": self.host_jobs},
+                     "host": self.host_jobs,
+                     "restore": self.restore_jobs},
             "throughput_rps": self.completed / span_s,
             "goodput_rps": self.goodput_completed / span_s,
             "tokens_per_s": self.tokens_generated / span_s,
@@ -173,6 +188,23 @@ class ServeMetrics:
             },
             "slo_attainment": (self.slo_met / slo_total
                                if slo_total else None),
+            "faults": {
+                "crashes": self.faults_crash,
+                "stalls": self.stalls,
+                "stall_cycles": self.stall_cycles,
+                "skewed_jobs": self.skewed_jobs,
+            },
+            "recovery": {
+                "orphaned": self.orphaned,
+                "requeued": self.requeued,
+                "recovered": self.recovered,
+                "dropped": self.dropped,
+                "restore_jobs": self.restore_jobs,
+                "recovery_delay_us": {
+                    "p50": _us(self.recovery_delay_cycles.percentile(50)),
+                    "p99": _us(self.recovery_delay_cycles.percentile(99)),
+                },
+            },
             "pipeline": {
                 "pipelined_prefills": self.pipelined_prefills,
                 "overlap_total_cycles": self.overlap_cycles.total(),
@@ -216,6 +248,14 @@ class ServeMetrics:
                 f"prefills, {s['pipeline']['overlap_total_cycles']:.0f} cy "
                 f"hidden, {s['pipeline']['bubble_total_cycles']:.0f} cy "
                 "bubble")
+        if (self.faults_crash or self.stalls or self.skewed_jobs
+                or self.orphaned or self.requeued or self.dropped):
+            lines.append(
+                f"faults: {self.faults_crash} crash(es), {self.stalls} "
+                f"stall(s) ({self.stall_cycles:.0f} cy), "
+                f"{self.skewed_jobs} skewed jobs; {self.orphaned} orphaned "
+                f"-> {self.recovered} recovered ({self.restore_jobs} KV "
+                f"restores), {self.dropped} dropped")
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
                          f"({self.slo_met}/{self.slo_met + self.slo_missed})")
@@ -314,6 +354,14 @@ class FleetMetrics:
                         "p99": _us(ttft.percentile(99))},
             "slo_attainment": (slo_met / (slo_met + slo_missed)
                                if slo_met + slo_missed else None),
+            "faults": {
+                "crashes": self._total("faults_crash"),
+                "orphaned": self._total("orphaned"),
+                "requeued": self._total("requeued"),
+                "recovered": self._total("recovered"),
+                "dropped": self._total("dropped"),
+                "restore_jobs": self._total("restore_jobs"),
+            },
             "imbalance": self.imbalance(),
             "load_cv": self.load_cv(),
             "per_fabric": {
@@ -347,6 +395,13 @@ class FleetMetrics:
                    else f"{100 * f['occupancy_mean']:.0f}%")
             lines.append(f"  [{name}] {f['completed']} completed, "
                          f"{f['busy_cycles']:.0f} busy cy, occupancy {occ}")
+        ft = s["faults"]
+        if ft["crashes"] or ft["orphaned"] or ft["dropped"]:
+            lines.append(
+                f"faults: {ft['crashes']} crash(es), {ft['orphaned']} "
+                f"orphaned -> {ft['recovered']} recovered "
+                f"({ft['restore_jobs']} KV restores), "
+                f"{ft['dropped']} dropped")
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}%")
         return "\n".join(lines)

@@ -26,6 +26,8 @@ class RequestState(enum.Enum):
     REJECTED = "rejected"      # admission control: SLO infeasible
     RUNNING = "running"        # member of the active wave
     DONE = "done"
+    ORPHANED = "orphaned"      # lane crashed with the request on board
+    FAILED = "failed"          # orphaned and unrecoverable (naive drop)
 
 
 @dataclass
@@ -44,11 +46,28 @@ class Request:
     t_done: float | None = None
     generated: np.ndarray | None = None
     slo_met: bool | None = None
+    # Fault-recovery bookkeeping (DESIGN.md §10).  A request orphaned by a
+    # lane crash is requeued at ``t_enqueued`` (crash detection time); if a
+    # checkpoint held its decode state, ``restore_len`` tokens are restored
+    # (``restored_tokens``) instead of re-prefilled from scratch.
+    t_enqueued: float | None = None
+    restore_len: int = 0
+    restored_tokens: np.ndarray | None = None
+    requeues: int = 0
 
     @property
     def n_prompt_elems(self) -> int:
         """Job size N of the prefill offload (the Eq.-1 problem size)."""
         return self.prompt_len
+
+    @property
+    def effective_arrival(self) -> float:
+        """Queue-ordering time: the requeue instant for recovered requests
+        (they cannot be served before the crash was detected), the original
+        arrival otherwise.  Latency/TTFT stay measured from ``arrival`` —
+        the client's clock does not reset when a fabric dies."""
+        return self.arrival if self.t_enqueued is None else \
+            max(self.arrival, self.t_enqueued)
 
     def latency(self) -> float | None:
         """Sojourn time in cycles: arrival -> last generated token."""
@@ -68,13 +87,13 @@ class RequestQueue:
 
     def __init__(self, requests: list[Request] | None = None):
         self._waiting: list[Request] = sorted(
-            requests or [], key=lambda r: (r.arrival, r.rid))
+            requests or [], key=lambda r: (r.effective_arrival, r.rid))
         self.rejected: list[Request] = []
         self.finished: list[Request] = []
 
     def push(self, req: Request) -> None:
         self._waiting.append(req)
-        self._waiting.sort(key=lambda r: (r.arrival, r.rid))
+        self._waiting.sort(key=lambda r: (r.effective_arrival, r.rid))
 
     def __len__(self) -> int:
         return len(self._waiting)
@@ -84,7 +103,7 @@ class RequestQueue:
         return not self._waiting
 
     def next_arrival(self) -> float | None:
-        return self._waiting[0].arrival if self._waiting else None
+        return self._waiting[0].effective_arrival if self._waiting else None
 
     def arrived(self, now: float) -> list[Request]:
         """Requests that have arrived by virtual time ``now`` (not popped).
@@ -95,9 +114,16 @@ class RequestQueue:
         """
         out = []
         for r in self._waiting:
-            if r.arrival > now:
+            if r.effective_arrival > now:
                 break
             out.append(r)
+        return out
+
+    def drain(self) -> list[Request]:
+        """Remove and return every waiting request (lane crash: the queue's
+        contents are orphaned wholesale, including future arrivals that were
+        already routed to this lane — open-loop routing is irrevocable)."""
+        out, self._waiting = self._waiting, []
         return out
 
     def pop(self, req: Request) -> Request:

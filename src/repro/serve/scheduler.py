@@ -45,11 +45,19 @@ class AdmissionDecision:
     reason: str
 
 
+#: Job kinds the scheduler prices.  "restore" is a crash-recovery prefill
+#: that additionally re-materializes checkpointed KV state (DESIGN.md §10):
+#: its N counts the restored tokens on top of the prompt, and the job is
+#: priced by the SAME Eq.-1 closed form — recovery is just another offload
+#: (dispatch + copy + sync), which is the whole point of the pricing model.
+JOB_KINDS = ("prefill", "decode", "restore")
+
+
 @dataclass(frozen=True)
 class BatchPlan:
     """One scheduled job: the batch the engine will run as a unit."""
 
-    kind: str                  # "prefill" | "decode"
+    kind: str                  # one of JOB_KINDS
     n_elems: int               # job size N (tokens in this job)
     offload: bool
     m: int | None              # chosen parallel extent (None => host)
@@ -172,6 +180,9 @@ class OffloadAwareScheduler:
 
         ``now`` timestamps the trace event only (the choice is time-free).
         """
+        if kind not in JOB_KINDS:
+            raise ValueError(f"unknown job kind {kind!r} "
+                             f"(expected one of {JOB_KINDS})")
         model = self.calibrator.model
         if deadline is not None:
             m_min = decision.m_min_for_deadline(model, n_elems, deadline,

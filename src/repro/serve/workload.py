@@ -30,6 +30,23 @@ from .queue import Request
 CYCLES_PER_SECOND = 1e9
 
 
+def derive_seed(seed: int, label: str) -> int:
+    """Deterministic child seed for a named serving subsystem.
+
+    One workload seed fans out to every stochastic subsystem of a run — the
+    fault schedule, the router's tie-break stream, per-lane fabric jitter —
+    through independent, label-keyed child streams:
+    ``SeedSequence([seed, crc32(label)])``.  Same (seed, label) -> same
+    stream, different labels -> uncorrelated streams, so the whole
+    fault-tolerance A/B is reproducible run-to-run from a single ``--seed``
+    (asserted in tests/test_fault.py).
+    """
+    import zlib
+    return int(np.random.SeedSequence(
+        [int(seed) & 0xFFFFFFFF, zlib.crc32(label.encode())]
+    ).generate_state(1)[0])
+
+
 @dataclass(frozen=True)
 class WorkloadSpec:
     num_requests: int = 64

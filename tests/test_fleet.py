@@ -243,7 +243,6 @@ def test_all_rejected_composition_scores_worst_not_crash():
     """Regression: a composition whose lanes reject every request has no
     latency distribution; it must rank strictly worst, not crash the
     Pareto front."""
-    from repro.dse.fleet import evaluate_fleet
     # Deadlines sampled for the 32-extent grid; an 8-cluster fleet must
     # reject every SLO-carrying request (needs more clusters than it has).
     spec = WorkloadSpec(num_requests=24, rate_rps=2e6, slo_fraction=1.0,

@@ -1,0 +1,136 @@
+"""Golden-trace regression for the kill-a-fabric chaos run (DESIGN.md §10).
+
+The committed fixture (``tests/data/golden_kill_a_fabric_trace.json.gz``)
+is the full Perfetto trace of the 96-request kill-a-fabric recovery run —
+the exact scenario of ``benchmarks/fault_tolerance.py``'s smoke tier.  The
+test regenerates the trace in-process and compares the parsed JSON
+**exactly**: the virtual timeline is deterministic, so any diff — a moved
+span, a changed timestamp, a lost fault instant — is a behavior change in
+the serving/fault/recovery stack, not noise.  If the change is intentional,
+regenerate with::
+
+    PYTHONPATH=src python tests/test_golden_trace.py
+
+Structural assertions ride along: the crash instant, orphan/requeue/recover
+lifecycle (flow-bound: every requeued request gets a second route arrow
+that lands on a surviving lane after detection), the Eq.-1-priced
+``job:restore`` span, and a clean ``tools/check_trace.py`` validation —
+including its dead-lanes-stay-dead rule.
+"""
+
+import gzip
+import importlib.util
+import json
+from pathlib import Path
+
+FIXTURE = Path(__file__).parent / "data" / "golden_kill_a_fabric_trace.json.gz"
+
+
+def generate_trace(path) -> dict:
+    """The golden scenario: crash the first little fabric at 45% of the
+    horizon, recover with checkpoint restore.  Must stay in lockstep with
+    benchmarks/fault_tolerance.py's smoke tier."""
+    from repro.obs import ResidualTracker, Tracer, write_chrome_trace
+    from repro.serve import WorkloadSpec, serve_fleet
+
+    spec = WorkloadSpec(num_requests=96, rate_rps=1_500_000.0,
+                        prompt_lens=(512, 1024, 2048), gen_lens=(64, 128),
+                        slo_fraction=0.5, infeasible_fraction=0.0, seed=11)
+    tracer, residuals = Tracer(), ResidualTracker()
+    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True,
+                      faults="crash@1:0.45", recovery="restore",
+                      tracer=tracer, residuals=residuals)
+    write_chrome_trace(tracer, path)
+    return out
+
+
+def _load_check_trace():
+    tools = Path(__file__).parent.parent / "tools" / "check_trace.py"
+    spec = importlib.util.spec_from_file_location("check_trace", tools)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_kill_a_fabric_trace_matches_golden(tmp_path):
+    got_path = tmp_path / "trace.json"
+    out = generate_trace(got_path)
+    got = json.loads(got_path.read_text())
+    want = json.loads(gzip.decompress(FIXTURE.read_bytes()))
+    assert got == want, (
+        "kill-a-fabric trace diverged from the committed golden fixture — "
+        "if intentional, regenerate: PYTHONPATH=src python "
+        "tests/test_golden_trace.py")
+    # The run the fixture encodes really exercised the recovery machinery.
+    ft = out["metrics"].summary()["faults"]
+    assert ft["orphaned"] > 0 and ft["recovered"] == ft["orphaned"]
+    assert ft["restore_jobs"] >= 1
+
+
+def test_golden_trace_fault_lifecycle_is_flow_bound(tmp_path):
+    got_path = tmp_path / "trace.json"
+    out = generate_trace(got_path)
+    evs = json.loads(got_path.read_text())["traceEvents"]
+    by_name = {}
+    for e in evs:
+        by_name.setdefault(e.get("name"), []).append(e)
+
+    crash = by_name["fault:crash"]
+    assert len(crash) == 1 and crash[0]["args"]["lane"] == 1
+    detect = out["faults"].detect_time(1)
+    orphaned = by_name["orphaned"]
+    requeues = by_name["requeue"]
+    recovered = by_name["recovered"]
+    assert len(orphaned) == len(requeues) == len(recovered) > 0
+    assert {e["args"]["rid"] for e in requeues} == \
+        {e["args"]["rid"] for e in orphaned}
+    crash_pid = crash[0]["pid"]
+    for e in requeues:
+        assert e["args"]["origin"] == "f1:8c"
+    # Every requeued request gets a SECOND route flow arrow (start at the
+    # router, finish on the serving lane) that lands on a surviving lane
+    # at/after detection — the recovery is visible as a bound arrow, not a
+    # disconnected instant.
+    us = 1e-3  # cycles -> us in the exporter
+    for rid in sorted(e["args"]["rid"] for e in requeues):
+        starts = [e for e in evs if e.get("ph") == "s" and e.get("id") == rid]
+        ends = [e for e in evs if e.get("ph") == "f" and e.get("id") == rid]
+        assert len(starts) == 2 and len(ends) == 2
+        second = max(ends, key=lambda e: e["ts"])
+        assert second["pid"] != crash_pid
+        assert second["ts"] >= detect * us - 1e-9
+    # The KV restore is priced and executed as its own first-class span.
+    assert any(e["ph"] == "X" for e in by_name["job:restore"])
+    assert by_name["checkpoint"]          # checkpoints actually ticked
+
+
+def test_golden_trace_passes_checker(tmp_path):
+    """tools/check_trace.py accepts the golden run — serial tracks stay
+    exclusive AND the crashed lane emits no span after its crash."""
+    got_path = tmp_path / "trace.json"
+    generate_trace(got_path)
+    mod = _load_check_trace()
+    assert mod.check_trace(got_path) == []
+    # The dead-lane rule has teeth: moving one span past the crash fails.
+    doc = json.loads(got_path.read_text())
+    crash = next(e for e in doc["traceEvents"]
+                 if e.get("ph") == "i" and e["name"] == "fault:crash")
+    doc["traceEvents"].append(
+        {"ph": "X", "name": "job:prefill", "pid": crash["pid"],
+         "tid": crash["tid"], "ts": crash["ts"] + 1.0, "dur": 0.5})
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    assert any("dead lane" in err for err in mod.check_trace(bad))
+
+
+if __name__ == "__main__":
+    # Regenerate the committed fixture after an intentional behavior change.
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    tmp = FIXTURE.parent / "golden_tmp.json"
+    generate_trace(tmp)
+    raw = tmp.read_bytes()
+    tmp.unlink()
+    # mtime=0 keeps the archive byte-stable for identical traces.
+    FIXTURE.write_bytes(gzip.compress(raw, 9, mtime=0))
+    print(f"wrote {FIXTURE} ({FIXTURE.stat().st_size} bytes, "
+          f"{len(raw)} uncompressed)")

@@ -23,7 +23,11 @@ Checks (each failure is reported with the offending event):
   * spans on **serial** tracks — threads named ``host`` or ``fabric``, which
     model exclusive hardware resources — do not overlap (the ``sync`` track
     may: poll-sync busy-waits legitimately overlap gap-inserted dispatch
-    work on the host timeline, see DESIGN.md §9).
+    work on the host timeline, see DESIGN.md §9);
+  * **dead lanes stay dead**: a process that records a ``fault:crash``
+    instant (DESIGN.md §10) must emit no duration span starting after the
+    crash timestamp — work appearing on a crashed fabric's timeline means
+    recovery re-routed onto the failed lane.
 
 Usage: ``python tools/check_trace.py trace.json [more.json ...]``
 Exits 1 with one line per failure.
@@ -70,6 +74,7 @@ def check_trace(path: Path) -> list[str]:
     open_begins: dict[tuple[int, int], int] = {}
     flow_starts: set = set()
     flow_ends: set = set()
+    crash_ts: dict[int, float] = {}
     last_ts: float | None = None
 
     for i, e in enumerate(events):
@@ -121,6 +126,9 @@ def check_trace(path: Path) -> list[str]:
             flow_starts.add(e.get("id"))
         elif ph == "f":
             flow_ends.add(e.get("id"))
+        elif ph == "i" and e["name"] == "fault:crash":
+            pid = e["pid"]
+            crash_ts[pid] = min(crash_ts.get(pid, ts), ts)
 
     for pid in sorted(used_pids):
         if pid not in proc_names:
@@ -152,6 +160,21 @@ def check_trace(path: Path) -> list[str]:
                     f"{proc_names.get(key[0], key[0])}/"
                     f"{thread_names[key]}: {n0!r}@{t0}+{d0} then {n1!r}@{t1}")
                 break   # one report per track keeps the output readable
+
+    # Dead lanes stay dead: no span may *start* after the pid's crash
+    # instant (boundary fault semantics guarantee no span crosses it).
+    for key, track_spans in sorted(spans.items()):
+        ct = crash_ts.get(key[0])
+        if ct is None:
+            continue
+        for t0, d0, n0 in sorted(track_spans):
+            if t0 > ct + EPS_US:
+                errors.append(
+                    f"{path}: span on dead lane "
+                    f"{proc_names.get(key[0], key[0])}/"
+                    f"{thread_names.get(key, key[1])}: {n0!r}@{t0}+{d0} "
+                    f"after fault:crash@{ct}")
+                break
     return errors
 
 
