@@ -15,7 +15,13 @@ Three experiments on the same prefill-heavy straggler trace (DESIGN.md §8):
     layer composes the existing machinery, it must not perturb it.
   * **Composition sweep** — the fleet-composition axis (``repro.dse.fleet``):
     partitions of the 32-cluster budget {1x32, 2x16, 4x8, 16+8+8} served
-    end to end and Pareto-scored on (throughput, p99, silicon cost).
+    end to end and Pareto-scored on (throughput, p99, watts), silicon area
+    reported per design (DESIGN.md §11).
+
+The A/B's model-policy pass also reports the energy headlines (DESIGN.md
+§11): fleet and per-lane tokens/joule, the little-vs-big efficiency
+ordering, the calibrated energy twin's worst window MAPE, and the
+zero-delta check that default (unset) DVFS prices exactly nominal.
 
 Prints human summaries and returns machine-readable records
 (section, name, value, unit) for ``benchmarks/run.py --json``.
@@ -83,6 +89,33 @@ def run_ab(spec: WorkloadSpec, records: list[dict]) -> dict:
         if policy == "model":
             _rec(records, "fleet_model_calib_mape_max",
                  max(mapes) if mapes else -1.0, "pct")
+            # Energy headlines (DESIGN.md §11): fleet + per-lane efficiency
+            # and the calibrated energy twin's worst window MAPE.
+            _rec(records, "fleet_model_tokens_per_joule",
+                 s["energy"]["tokens_per_joule"] or -1.0, "tok/J")
+            e_mapes = [snap.energy_mape_pct for snap in out["calibrations"]
+                       if snap.energy_mape_pct is not None]
+            _rec(records, "fleet_energy_calib_mape_max",
+                 max(e_mapes) if e_mapes else -1.0, "pct")
+            lane_tpj = {}
+            for lname, f in s["per_fabric"].items():
+                tag = lname.replace(":", "_")
+                tpj = f["tokens_per_joule"] or -1.0
+                lane_tpj[lname] = tpj
+                _rec(records, f"fleet_lane_{tag}_tokens_per_joule", tpj,
+                     "tok/J")
+            # Little-vs-big efficiency ordering: per joule, the little
+            # fabrics out-serve the big one (smaller exec extents burn
+            # fewer active-cluster picojoules per token) — the signal the
+            # energy/edp router objectives exploit.
+            big = max(AB_FLEET)
+            bigs = [v for k, v in lane_tpj.items()
+                    if k.endswith(f":{big}c") and v > 0]
+            littles = [v for k, v in lane_tpj.items()
+                       if not k.endswith(f":{big}c") and v > 0]
+            ratio = (min(littles) / max(bigs)
+                     if bigs and littles else -1.0)
+            _rec(records, "fleet_little_big_tpj_ratio", ratio, "x")
 
     for base in ("rr", "lql"):
         gain = (outs["model"]["throughput_rps"]
@@ -110,6 +143,15 @@ def run_identity(spec: WorkloadSpec, records: list[dict]) -> bool:
           f"(thr {fs['throughput_rps']:.0f} vs {ss['throughput_rps']:.0f} "
           f"req/s) ---")
     _rec(records, "fleet_single_identity", 1.0 if identical else 0.0, "bool")
+    # Energy defaults are inert (DESIGN.md §11): leaving ``dvfs`` unset
+    # must price exactly the nominal operating point — same joules, same
+    # everything — so the energy axis cannot drift the default path.
+    nominal = serve_workload(spec, execute=False, pipeline=True,
+                             dvfs="nominal")
+    delta = abs(nominal["metrics"].energy_j - single["metrics"].energy_j)
+    print(f"--- default vs explicit nominal DVFS: energy delta {delta:g} J "
+          f"({single['metrics'].energy_j:.3e} J total) ---")
+    _rec(records, "energy_default_zero_delta", delta, "joules")
     return identical
 
 
@@ -117,7 +159,7 @@ def run_compositions(spec: WorkloadSpec, records: list[dict]) -> None:
     """Sweep the 32-cluster-budget compositions; report the Pareto front."""
     results = sweep_fleets(FleetSpace(), spec)
     print("--- fleet compositions of the 32-cluster budget "
-          "(throughput, p99, cost) ---")
+          "(throughput, p99, watts) ---")
     print(summarize_fleets(results))
     names = [r.design.name for r in fleet_front(results)]
     print(f"front: {', '.join(names)}")
@@ -127,6 +169,7 @@ def run_compositions(spec: WorkloadSpec, records: list[dict]) -> None:
              "req/s-virtual")
         _rec(records, f"composition_{tag}_p99", r.p99_us, "us")
         _rec(records, f"composition_{tag}_cost", r.cost, "units")
+        _rec(records, f"composition_{tag}_watts", r.watts, "W")
     _rec(records, "composition_front_size", len(names), "designs")
 
 

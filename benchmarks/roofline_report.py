@@ -85,6 +85,13 @@ def analyze(dryrun_dir: Path, mesh: str = "single") -> list[dict]:
                 # roofline term — the §Perf score for compute-style cells.
                 "mfu_at_bound": cost.model_flops
                 / (max(bound, 1e-30) * CHIPS * TPU_V5E.peak_flops),
+                # Energy at the bound (DESIGN.md §11): the cell's joules if
+                # it runs exactly at its binding term with every chip at
+                # TDP, and that energy per useful model FLOP in picojoules
+                # (the per-element efficiency descriptor).
+                "energy_j_at_bound": bound * CHIPS * TPU_V5E.tdp_w,
+                "energy_pj_per_flop": bound * CHIPS * TPU_V5E.tdp_w
+                / max(cost.model_flops, 1.0) * 1e12,
                 "peak_bytes_per_device": rec.get("memory", {})
                 .get("peak_bytes"),
                 "compile_s": rec.get("compile_s"),
@@ -118,6 +125,13 @@ def records(rows: list[dict]) -> list[dict]:
         rec(f"{dom}_bound_cells",
             sum(r["dominant"] == dom for r in live), "cells")
     rec("bound_s_worst", max(r["bound_s"] for r in live), "s")
+    # Energy-per-element descriptors (DESIGN.md §11): pJ per useful model
+    # FLOP at the bound, TDP-priced.  The smoke gate asserts these exist
+    # and are positive — the roofline's energy view must not silently rot.
+    rec("energy_pj_per_flop_best",
+        min(r["energy_pj_per_flop"] for r in live), "pJ/FLOP")
+    rec("energy_pj_per_flop_worst",
+        max(r["energy_pj_per_flop"] for r in live), "pJ/FLOP")
     return out
 
 

@@ -181,6 +181,21 @@ def _smoke_gate(records: list[dict]) -> None:
         # Every per-fabric online calibration stays inside the Eq.-2 bar.
         ("fleet calib MAPE",
          0.0 <= by_name["fleet_model_calib_mape_max"] <= 2.0),
+        # Energy accounting (DESIGN.md §11).  The calibrated energy twin
+        # tracks the fabric's closed-form joules inside the same Eq.-2 bar.
+        ("fleet energy calib MAPE",
+         0.0 <= by_name["fleet_energy_calib_mape_max"] <= 2.0),
+        # Per joule, the little fabrics out-serve the big one — the
+        # efficiency asymmetry the energy/edp router objectives exploit.
+        ("fleet little > big tokens/joule",
+         by_name["fleet_little_big_tpj_ratio"] > 1.0),
+        # Leaving DVFS unset prices exactly the nominal operating point:
+        # the energy axis is inert on the default path (bit-identical).
+        ("energy defaults inert",
+         by_name["energy_default_zero_delta"] == 0.0),
+        # The roofline's energy-per-element view exists and is positive.
+        ("roofline energy per element",
+         by_name["energy_pj_per_flop_best"] > 0.0),
         # Fault tolerance (DESIGN.md §10): recovery buys goodput back after
         # a mid-serve fabric crash, and must beat the naive-drop baseline.
         ("ft recovery attainment >= 0.9",

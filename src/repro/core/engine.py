@@ -97,11 +97,24 @@ class JobRecord:
     #: True when a fabric halt retired the job before its scheduled
     #: completion — its results never materialized (DESIGN.md §10).
     aborted: bool = False
+    #: Per-phase joules (DESIGN.md §11), priced from the same cycle counts
+    #: the engine scheduled with — host-fallback jobs carry their whole
+    #: energy in ``e_exec``.
+    e_dispatch: float = 0.0
+    e_exec: float = 0.0
+    e_sync: float = 0.0
 
     @property
     def total(self) -> float:
         """Job runtime as a blocking caller would see it (start -> retire)."""
         return self.t_done - self.dispatch_start
+
+    @property
+    def energy(self) -> float:
+        """Total joules, summed in phase order — for an isolated
+        single-buffered job this equals ``simulator.offload_energy`` exactly
+        (same helpers, same cycle counts, same summation order)."""
+        return self.e_dispatch + self.e_exec + self.e_sync
 
 
 @dataclass
@@ -157,7 +170,7 @@ class OffloadEngine:
 
     def __init__(self, *, hw: HWParams = HWParams(),
                  buffering: str = "single", tracer=None,
-                 proc: str = "fabric"):
+                 proc: str = "fabric", dvfs: sim.DVFSState | str | None = None):
         if buffering not in BUFFERING_MODES:
             raise ValueError(
                 f"buffering must be one of {BUFFERING_MODES}, "
@@ -165,6 +178,9 @@ class OffloadEngine:
         self.hw = hw
         self.buffering = buffering
         self.depth = _DEPTH[buffering]
+        # Energy operating point (DESIGN.md §11): prices joules only; cycle
+        # counts are DVFS-invariant so timelines never depend on it.
+        self.dvfs = sim.dvfs_state(dvfs)
         # Optional span tracer (repro.obs): per-job dispatch/exec/sync phase
         # spans on the proc's host/fabric/sync tracks.  None keeps every
         # event site at a single attribute check (the zero-overhead default).
@@ -179,6 +195,10 @@ class OffloadEngine:
         self._dispatch_busy = 0.0       # host descriptor-construction cycles
         self._sync_busy = 0.0           # exec_done -> t_done cycles per job
         self._host_busy = 0.0           # reserved host cycles (all sources)
+        # Per-phase joules attributed to scheduled jobs (DESIGN.md §11).
+        self._dispatch_energy = 0.0
+        self._exec_energy = 0.0
+        self._sync_energy = 0.0
         self._last_exec: tuple[float, float] | None = None
         self._fabric_tdones: list[float] = []   # retire times, FIFO order
         self._completed_upto = 0        # poll() cursor
@@ -252,6 +272,16 @@ class OffloadEngine:
             t_submit=t_submit, dispatch_start=d_start, dispatch_done=d_done,
             exec_start=e_start, exec_done=e_done, sync_done=sync_done,
             t_done=t_done,
+            # Energy is priced from the cycle counts actually scheduled
+            # (jittered e_cycles included) — at exec_scale=1 on an idle
+            # single-buffered engine the three phases sum to the closed-form
+            # offload_energy exactly (DESIGN.md §11).
+            e_dispatch=sim.phase_energy(d_cycles, self.hw.e_dispatch_pj,
+                                        self.hw, self.dvfs),
+            e_exec=sim.phase_energy(e_cycles, self.hw.e_exec_pj,
+                                    self.hw, self.dvfs, active=m),
+            e_sync=sim.phase_energy(signal + ret, self.hw.e_sync_pj,
+                                    self.hw, self.dvfs),
         )
         # Dispatch cycles hidden under another job's execution.
         if self._last_exec is not None:
@@ -271,6 +301,9 @@ class OffloadEngine:
         self._fabric_busy += e_cycles
         self._dispatch_busy += d_cycles
         self._sync_busy += t_done - e_done
+        self._dispatch_energy += rec.e_dispatch
+        self._exec_energy += rec.e_exec
+        self._sync_energy += rec.e_sync
         self._last_exec = (e_start, e_done)
         self._fabric_tdones.append(t_done)
         self.jobs.append(rec)
@@ -286,13 +319,15 @@ class OffloadEngine:
         t = self.tracer
         ident = {"job": rec.job_id, "n": rec.n_elems, "m": rec.m_clusters}
         t.span(self.proc, "host", "dispatch", rec.dispatch_start,
-               rec.dispatch_done - rec.dispatch_start, args=ident)
+               rec.dispatch_done - rec.dispatch_start,
+               args={**ident, "joules": rec.e_dispatch})
         t.span(self.proc, "fabric", "exec", rec.exec_start,
                rec.exec_done - rec.exec_start,
-               args={**ident, "bubble": rec.bubble, "overlap": rec.overlap})
+               args={**ident, "bubble": rec.bubble, "overlap": rec.overlap,
+                     "joules": rec.e_exec})
         t.span(self.proc, "sync", "sync", rec.exec_done,
                rec.t_done - rec.exec_done,
-               args={**ident, "sync": rec.sync})
+               args={**ident, "sync": rec.sync, "joules": rec.e_sync})
 
     def _submit_host(self, n, kernel, t_submit, exec_scale) -> JobRecord:
         cycles = math.ceil(
@@ -305,6 +340,8 @@ class OffloadEngine:
             dispatch_start=start, dispatch_done=start, exec_start=start,
             exec_done=done, sync_done=done, t_done=done,
             effective=done - start,
+            e_exec=sim.phase_energy(cycles, self.hw.e_host_pj,
+                                    self.hw, self.dvfs),
         )
         # A host job overlaps when it runs while the fabric executes.
         if self._last_exec is not None:
@@ -312,11 +349,13 @@ class OffloadEngine:
             rec.overlap = max(0.0, min(done, hi) - max(start, lo))
         self._host.reserve(start, done)
         self._host_busy += done - start
+        self._exec_energy += rec.e_exec
         self.jobs.append(rec)
         if self.tracer is not None:
             self.tracer.span(self.proc, "host", "host", start, done - start,
                              args={"job": rec.job_id, "n": n,
-                                   "overlap": rec.overlap})
+                                   "overlap": rec.overlap,
+                                   "joules": rec.e_exec})
         return rec
 
     # ------------------------------------------------------------------ #
@@ -409,6 +448,14 @@ class OffloadEngine:
             "bubble_total": sum(r.bubble for r in offloads),
             "aborted": sum(1 for r in self.jobs if r.aborted),
             "halted_at": self.halted_at,
+            # Energy decomposition (DESIGN.md §11): per-phase joules summed
+            # over scheduled jobs — the energy mirror of the busy totals
+            # above (host-fallback energy counts under exec).
+            "dispatch_energy_j": self._dispatch_energy,
+            "exec_energy_j": self._exec_energy,
+            "sync_energy_j": self._sync_energy,
+            "energy_j": (self._dispatch_energy + self._exec_energy
+                         + self._sync_energy),
         }
 
 

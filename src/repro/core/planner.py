@@ -41,7 +41,11 @@ class ChipSpec:
     # jax dispatch layer; see benchmarks/dispatch_microbench.py).
     step_launch_s: float = 100e-6   # one jitted-step dispatch (multicast)
     per_device_dispatch_s: float = 25e-6  # baseline sequential extra, per dev
-    host_ingest_bw: float = 25e9    # host->fabric B/s (PCIe-class, serial)
+    host_ingest_bw: float = 25e9    # B/s host->fabric (PCIe-class, serial)
+    # Board power envelope (W/chip) for energy-at-bound estimates
+    # (DESIGN.md §11): a cell running at its binding roofline term draws at
+    # most the TDP, so bound_s * chips * tdp_w upper-bounds its joules.
+    tdp_w: float = 200.0
 
 
 TPU_V5E = ChipSpec()

@@ -93,6 +93,88 @@ def mape_by_n(
 
 
 @dataclass(frozen=True)
+class EnergyModel:
+    """Closed-form energy twin of Eq. 1 (DESIGN.md §11) [joules].
+
+        ê(M, N) = alpha_j + delta_j*M + beta_j*N + eta_j*M*N + gamma_j*N/M
+
+    The basis follows from pricing the Eq.-1 phases: dispatch contributes a
+    constant (+M for unicast), exec dynamic energy is M clusters times the
+    exec cycles (wakeup*M + bus*N*M + compute*N terms), and leakage over the
+    exec cycles re-introduces the N and N/M runtime terms.  Linear in its
+    coefficients with features (1, M, N, M*N, N/M), so it fits by least
+    squares and validates with the same ``mape`` as the runtime model.
+    """
+
+    alpha_j: float
+    delta_j: float
+    beta_j: float
+    eta_j: float
+    gamma_j: float
+
+    def predict(self, m: int | np.ndarray, n: int | np.ndarray) -> np.ndarray:
+        m = np.asarray(m, dtype=np.float64)
+        n = np.asarray(n, dtype=np.float64)
+        return (self.alpha_j + self.delta_j * m + self.beta_j * n
+                + self.eta_j * m * n + self.gamma_j * n / m)
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"ê(M,N) = {self.alpha_j:.3g} + {self.delta_j:.3g}*M"
+                f" + {self.beta_j:.3g}*N + {self.eta_j:.3g}*M*N"
+                f" + {self.gamma_j:.3g}*N/M")
+
+
+def fit_energy(samples: Iterable[tuple[int, int, float]]) -> EnergyModel:
+    """Least-squares fit of the 5-coefficient energy twin from (M, N, joules).
+
+    Linear in the coefficients: e = [1, M, N, M*N, N/M] @ coeffs.
+    """
+    samples = list(samples)
+    if len(samples) < 5:
+        raise ValueError("need >= 5 samples to fit 5 coefficients")
+    a = np.array([[1.0, m, n, m * n, n / m] for m, n, _ in samples],
+                 dtype=np.float64)
+    y = np.array([e for _, _, e in samples], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    return EnergyModel(alpha_j=float(coef[0]), delta_j=float(coef[1]),
+                       beta_j=float(coef[2]), eta_j=float(coef[3]),
+                       gamma_j=float(coef[4]))
+
+
+def fit_energy_from_simulator(
+    ms: Sequence[int] | None = None,
+    ns: Sequence[int] | None = None,
+    *,
+    dispatch: str = "multicast",
+    sync: str = "credit",
+    hw=None,
+    kernel=None,
+    dvfs=None,
+) -> tuple[EnergyModel, float]:
+    """Fit the energy twin against the simulator's closed-form joules.
+
+    Returns ``(model, mape_pct)`` with the MAPE evaluated on the fit grid —
+    the energy analogue of ``fit_from_simulator``, used for per-lane energy
+    priors and validated the same way (Eq. 2 on joules).
+    """
+    from . import simulator as sim
+
+    hw = hw if hw is not None else sim.HWParams()
+    kernel = kernel if kernel is not None else sim.DAXPY
+    dvfs = dvfs if dvfs is not None else sim.DVFS_NOMINAL
+    ms = list(ms if ms is not None else sim.PAPER_M_GRID)
+    ns = list(ns if ns is not None else sim.PAPER_N_GRID_MODEL)
+    samples = [
+        (m, n, sim.offload_energy(m, n, dispatch=dispatch, sync=sync,
+                                  hw=hw, kernel=kernel, dvfs=dvfs))
+        for m in ms
+        for n in ns
+    ]
+    model = fit_energy(samples)
+    return model, mape(model, samples)
+
+
+@dataclass(frozen=True)
 class LinearDispatchModel:
     """Baseline-design model: the dispatch overhead grows linearly with M.
 

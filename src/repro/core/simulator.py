@@ -57,6 +57,14 @@ class HWParams:
     # Host fallback execution (CVA6 runs the kernel itself).
     host_cycles_per_elem: float = 4.0
     host_loop_setup: int = 20
+    # Energy model (DESIGN.md §11): static leakage + per-phase dynamic rates
+    # at the nominal DVFS point.  Exec is priced per ACTIVE cluster; the
+    # other phases are host/uncore-side and extent-independent.
+    leak_w: float = 0.05           # static leakage of the offload path, W
+    e_dispatch_pj: float = 9.0     # host uncore + interconnect, pJ/cycle
+    e_exec_pj: float = 3.2         # per active cluster, pJ/cycle
+    e_sync_pj: float = 1.1         # completion unit / polling loop, pJ/cycle
+    e_host_pj: float = 6.5         # host scalar fallback, pJ/cycle
 
 
 @dataclass(frozen=True)
@@ -164,6 +172,118 @@ def sync_cycles(sync: str, hw: HWParams) -> tuple[int, int]:
     return hw.poll_detect, hw.host_return_poll
 
 
+# --------------------------------------------------------------------------- #
+# Energy model (DESIGN.md §11) — every phase cycle count prices to joules.
+#
+# The cycle model is DVFS-invariant: a DVFS state rescales the time base
+# (frequency) and the energy (dynamic ~ V^2, leakage ~ V x time), never the
+# cycle counts, so all cycle-domain results are bit-identical across DVFS
+# states.  ``phase_energy`` is the single pricing primitive; the closed-form
+# ``offload_energy`` and the engine's per-job accounting both compose it from
+# the same cycle counts, which is what makes the engine == closed-form energy
+# identity exact for isolated single-buffered jobs (mirroring the cycles
+# identity above).
+# --------------------------------------------------------------------------- #
+
+#: The RTL measurement clock (QuestaSim @ 1 GHz => cycles == ns) — the time
+#: base that converts cycle counts to wall seconds at the nominal DVFS point.
+CLOCK_HZ = 1.0e9
+
+
+@dataclass(frozen=True)
+class DVFSState:
+    """One operating point of the fabric's frequency/voltage axis.
+
+    ``freq_scale`` multiplies the clock (cycles take ``1/freq_scale`` of
+    their nominal wall time); ``volt_scale`` multiplies supply voltage, so
+    dynamic energy scales with ``volt_scale**2`` and leakage *power* with
+    ``volt_scale`` (linear body-effect approximation, as in the lumos MPSoC
+    model).  Cycle counts never change.
+    """
+
+    name: str = "nominal"
+    freq_scale: float = 1.0
+    volt_scale: float = 1.0
+
+
+#: Identity operating point: energy at the HWParams rates, time at CLOCK_HZ.
+DVFS_NOMINAL = DVFSState()
+
+#: The swept DVFS axis (an MPSoC-ish eco/nominal/turbo ladder).
+DVFS_STATES = {
+    "eco": DVFSState("eco", freq_scale=0.60, volt_scale=0.80),
+    "nominal": DVFS_NOMINAL,
+    "turbo": DVFSState("turbo", freq_scale=1.25, volt_scale=1.15),
+}
+
+
+def dvfs_state(state: "DVFSState | str | None") -> DVFSState:
+    """Resolve a DVFS operating point from a name (CLI) or pass one through."""
+    if state is None:
+        return DVFS_NOMINAL
+    if isinstance(state, DVFSState):
+        return state
+    if state not in DVFS_STATES:
+        raise ValueError(f"dvfs must be one of {sorted(DVFS_STATES)}, "
+                         f"got {state!r}")
+    return DVFS_STATES[state]
+
+
+def wall_seconds(cycles: float, dvfs: DVFSState = DVFS_NOMINAL) -> float:
+    """Wall-clock seconds a cycle count occupies at a DVFS operating point."""
+    return cycles / (dvfs.freq_scale * CLOCK_HZ)
+
+
+def phase_energy(cycles: float, rate_pj: float, hw: HWParams,
+                 dvfs: DVFSState = DVFS_NOMINAL, active: int = 1) -> float:
+    """Joules of one phase: dynamic switching + static leakage.
+
+    ``rate_pj`` is the phase's dynamic energy per cycle at nominal voltage;
+    ``active`` multiplies it for phases that occupy several units at once
+    (exec across M clusters).  Leakage is the whole offload path's static
+    power integrated over the phase's wall time — attributed per phase, so
+    for the sequential phases of one isolated job the sum equals leakage
+    over the job's total runtime.
+    """
+    dynamic = cycles * active * rate_pj * dvfs.volt_scale ** 2 * 1e-12
+    leakage = hw.leak_w * dvfs.volt_scale * wall_seconds(cycles, dvfs)
+    return dynamic + leakage
+
+
+def offload_energy(
+    m_clusters: int,
+    n_elems: int,
+    *,
+    multicast: bool | None = None,
+    dispatch: str | None = None,
+    sync: str | None = None,
+    hw: HWParams = HWParams(),
+    kernel: KernelSpec = DAXPY,
+    dvfs: DVFSState = DVFS_NOMINAL,
+) -> float:
+    """Closed-form joules for one offload — the Eq.-1 energy twin.
+
+    Sums the three phase energies in dispatch/exec/sync order from the same
+    cycle helpers the engine schedules with, so the engine's per-job energy
+    reproduces this exactly for isolated single-buffered jobs.
+    """
+    dispatch, sync = _resolve_modes(multicast, dispatch, sync)
+    d = dispatch_cycles(m_clusters, dispatch, hw)
+    e = exec_cycles(m_clusters, n_elems, hw, kernel)
+    signal, ret = sync_cycles(sync, hw)
+    return (phase_energy(d, hw.e_dispatch_pj, hw, dvfs)
+            + phase_energy(e, hw.e_exec_pj, hw, dvfs, active=m_clusters)
+            + phase_energy(signal + ret, hw.e_sync_pj, hw, dvfs))
+
+
+def host_energy(n_elems: int, *, hw: HWParams = HWParams(),
+                kernel: KernelSpec = DAXPY,
+                dvfs: DVFSState = DVFS_NOMINAL) -> float:
+    """Joules for the host (CVA6) to run the kernel itself — no offload."""
+    return phase_energy(host_runtime(n_elems, hw=hw, kernel=kernel),
+                        hw.e_host_pj, hw, dvfs)
+
+
 @dataclass
 class OffloadTrace:
     """Cycle-level breakdown of one simulated offload."""
@@ -176,6 +296,10 @@ class OffloadTrace:
     makespan: int = 0
     sync_done: int = 0
     phases: dict = field(default_factory=dict)
+    #: Joules per accounting phase {dispatch, exec, sync} (DESIGN.md §11).
+    energies: dict = field(default_factory=dict)
+    #: Total joules of the offload (sum of ``energies`` in phase order).
+    energy: float = 0.0
 
 
 def _split_work(n: int, m: int) -> list[int]:
@@ -201,6 +325,7 @@ def simulate_offload(
     sync: str | None = None,
     hw: HWParams = HWParams(),
     kernel: KernelSpec = DAXPY,
+    dvfs: DVFSState = DVFS_NOMINAL,
 ) -> OffloadTrace:
     """Simulate one offload of ``kernel`` over ``n_elems`` to ``m_clusters``.
 
@@ -208,7 +333,8 @@ def simulate_offload(
     credit-counter completion); ``False`` models the baseline (sequential
     dispatch + polling).  ``dispatch``/``sync`` select the two axes
     independently for design-space exploration (DESIGN.md §3); when given,
-    they take precedence over ``multicast``.
+    they take precedence over ``multicast``.  ``dvfs`` prices the energy
+    side only — cycle counts are DVFS-invariant (DESIGN.md §11).
     """
     dispatch, sync = _resolve_modes(multicast, dispatch, sync)
     if m_clusters < 1:
@@ -246,6 +372,16 @@ def simulate_offload(
         "compute": tr.makespan - max(tr.dma_done),
         "sync": tr.total - tr.makespan,
     }
+    # Energy side (DESIGN.md §11): price the three accounting phases from the
+    # same cycle counts; exec = fence -> last compute done across M clusters.
+    tr.energies = {
+        "dispatch": phase_energy(fence, hw.e_dispatch_pj, hw, dvfs),
+        "exec": phase_energy(max(comp), hw.e_exec_pj, hw, dvfs,
+                             active=m_clusters),
+        "sync": phase_energy(signal + ret, hw.e_sync_pj, hw, dvfs),
+    }
+    tr.energy = (tr.energies["dispatch"] + tr.energies["exec"]
+                 + tr.energies["sync"])
     return tr
 
 
@@ -381,6 +517,9 @@ def scaled_hw(num_clusters: int, hw: HWParams = HWParams()) -> HWParams:
         bandwidth (sub-linear — bank conflicts and arbitration eat the
         rest), so per-cluster bandwidth *shrinks* as the fabric grows, which
         is the wakeup/DMA contention the event model then serializes.
+      * ``leak_w`` — static leakage splits half host/uncore (size-invariant)
+        and half fabric (proportional to cluster count), so a little fabric
+        leaks less but never below the host floor (DESIGN.md §11).
 
     ``num_clusters == 32`` returns the published parameters unchanged.
     Per-cluster parameters (cores, unicast mailbox write) are size-invariant.
@@ -397,4 +536,5 @@ def scaled_hw(num_clusters: int, hw: HWParams = HWParams()) -> HWParams:
         cluster_wakeup=max(1, hw.cluster_wakeup + 2 * depth_delta),
         credit_irq_latency=max(1, hw.credit_irq_latency + depth_delta),
         bus_bytes_per_cycle=bus,
+        leak_w=hw.leak_w * (0.5 + 0.5 * scale),
     )

@@ -14,7 +14,8 @@ speedup between them.  This package generalizes that comparison into a sweep:
                            to partition a fixed cluster budget into fabrics
                            (1x32 | 2x16 | 4x8 | 16+8+8), each composition
                            served end to end and Pareto-scored on
-                           (throughput, p99, cost)
+                           (throughput, p99, watts) — optionally power-capped
+                           and swept across DVFS points (DESIGN.md §11)
 
 Drivers: ``python -m repro.launch.dse`` (CLI), ``examples/codesign_sweep.py``
 (end to end), and the ``dse`` section of ``benchmarks/run.py --json``.  A
@@ -26,7 +27,7 @@ coefficients instead of the paper's.
 from .fleet import (DEFAULT_COMPOSITIONS, FleetDesign, FleetResult,
                     FleetSpace, composition_name, evaluate_fleet,
                     fabric_cost, fleet_cost, fleet_front, fleet_objectives,
-                    summarize_fleets, sweep_fleets)
+                    silicon_area, summarize_fleets, sweep_fleets)
 from .pareto import (deadline_region, design_objectives, dominates,
                      feasible_ms, front, pareto_front, rank, summarize)
 from .runner import (DEFAULT_M_GRID, DEFAULT_N_GRID, DesignResult,
@@ -43,5 +44,6 @@ __all__ = [
     "feasible_ms", "deadline_region", "summarize",
     "DEFAULT_COMPOSITIONS", "FleetDesign", "FleetResult", "FleetSpace",
     "composition_name", "evaluate_fleet", "fabric_cost", "fleet_cost",
-    "fleet_front", "fleet_objectives", "summarize_fleets", "sweep_fleets",
+    "fleet_front", "fleet_objectives", "silicon_area", "summarize_fleets",
+    "sweep_fleets",
 ]

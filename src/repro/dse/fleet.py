@@ -8,21 +8,28 @@ same open-loop trace (``repro.serve.serve_fleet`` — every fabric with its
 own scaled hardware, its own Eq.-1 prior, its own online calibrator, behind
 the model-driven router) and scored on the three fleet objectives:
 
-    (throughput, p99 latency, silicon cost)
+    (throughput, p99 latency, watts)
 
 with the Pareto front reported under (maximize, minimize, minimize) — the
-fleet-level analogue of the (t_ref, cost) front of DESIGN.md §3.3.
+fleet-level analogue of the (t_ref, cost) front of DESIGN.md §3.3, with the
+power draw of actually *serving the trace* (DESIGN.md §11: per-phase joules
+over the served span, at the composition's DVFS point) as the third axis.
+``power_cap_w`` turns the sweep into the power-capped DSE: compositions
+whose draw exceeds the cap are excluded before the front is formed.
 
-The cost proxy extends ``design_cost`` to fabric granularity: compute area
-scales with the cluster count, the banked operand bus with its *scaled*
-width (sub-linear, ``simulator.scaled_hw``), and every fabric pays a fixed
-per-fabric increment for its own host core and fabric port — which is why
-splitting a budget into many little fabrics costs more silicon than one big
-one, and why the composition question is not answered by throughput alone.
+Silicon area stays reported per composition (:func:`silicon_area` — the
+static build-cost proxy, distinct from the operational watts axis): compute
+area scales with the cluster count, the banked operand bus with its
+*scaled* width (sub-linear, ``simulator.scaled_hw``), and every fabric pays
+a fixed per-fabric increment for its own host core and fabric port — which
+is why splitting a budget into many little fabrics costs more silicon than
+one big one, and why the composition question is not answered by
+throughput alone.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Iterator, Sequence
 
@@ -67,29 +74,51 @@ def fabric_cost(num_clusters: int, *, buffering: str = "double") -> float:
     return cost + PER_FABRIC_COST
 
 
-def fleet_cost(sizes: Sequence[int], *, buffering: str = "double") -> float:
-    """Silicon-cost proxy of a whole composition (sum over fabrics)."""
+def silicon_area(sizes: Sequence[int], *,
+                 buffering: str = "double") -> float:
+    """Silicon-area proxy of a whole composition (sum over fabrics).
+
+    The static build cost of the composition — what taping it out spends,
+    as opposed to the operational watts axis the power-capped sweep
+    optimizes (DESIGN.md §11).  Formerly named ``fleet_cost``.
+    """
     return sum(fabric_cost(c, buffering=buffering) for c in sizes)
+
+
+def fleet_cost(sizes: Sequence[int], *, buffering: str = "double") -> float:
+    """Deprecated alias of :func:`silicon_area` (the old "cost" name)."""
+    warnings.warn("fleet_cost() is deprecated; use silicon_area()",
+                  DeprecationWarning, stacklevel=2)
+    return silicon_area(sizes, buffering=buffering)
 
 
 @dataclass(frozen=True)
 class FleetDesign:
-    """One point on the fleet-composition axis: sizes + routing policy."""
+    """One point on the fleet-composition axis: sizes + routing policy
+    + DVFS operating point (DESIGN.md §11)."""
 
     sizes: tuple[int, ...]
     router: str = "model"
+    dvfs: str = "nominal"
 
     def __post_init__(self):
         if not self.sizes or any(s < 1 for s in self.sizes):
             raise ValueError("compositions need >= 1 cluster per fabric")
         if self.router not in ROUTER_POLICIES:
             raise ValueError(f"router must be one of {ROUTER_POLICIES}")
+        if self.dvfs not in sim.DVFS_STATES:
+            raise ValueError(f"dvfs must be one of "
+                             f"{sorted(sim.DVFS_STATES)}, got {self.dvfs!r}")
         object.__setattr__(self, "sizes", tuple(int(s) for s in self.sizes))
 
     @property
     def name(self) -> str:
         tag = composition_name(self.sizes)
-        return tag if self.router == "model" else f"{tag} [{self.router}]"
+        if self.router != "model":
+            tag = f"{tag} [{self.router}]"
+        if self.dvfs != "nominal":
+            tag = f"{tag} @{self.dvfs}"
+        return tag
 
     @property
     def clusters(self) -> int:
@@ -103,6 +132,8 @@ class FleetSpace:
     compositions: tuple[tuple[int, ...], ...] = DEFAULT_COMPOSITIONS
     routers: tuple[str, ...] = ("model",)
     budget: int = sim.REFERENCE_CLUSTERS
+    #: DVFS operating points swept per composition (DESIGN.md §11).
+    dvfs_points: tuple[str, ...] = ("nominal",)
 
     def __post_init__(self):
         object.__setattr__(
@@ -115,15 +146,20 @@ class FleetSpace:
         bad = set(self.routers) - set(ROUTER_POLICIES)
         if bad:
             raise ValueError(f"invalid router policies {sorted(bad)}")
+        bad_dvfs = set(self.dvfs_points) - set(sim.DVFS_STATES)
+        if bad_dvfs:
+            raise ValueError(f"invalid DVFS points {sorted(bad_dvfs)}")
 
     @property
     def size(self) -> int:
-        return len(self.compositions) * len(self.routers)
+        return (len(self.compositions) * len(self.routers)
+                * len(self.dvfs_points))
 
     def grid(self) -> Iterator[FleetDesign]:
         for sizes in self.compositions:
             for router in self.routers:
-                yield FleetDesign(sizes=sizes, router=router)
+                for dvfs in self.dvfs_points:
+                    yield FleetDesign(sizes=sizes, router=router, dvfs=dvfs)
 
 
 @dataclass(frozen=True)
@@ -133,18 +169,24 @@ class FleetResult:
     design: FleetDesign
     throughput_rps: float
     p99_us: float
-    cost: float
+    cost: float                      # silicon_area (static build proxy)
     imbalance: float
     load_cv: float
     completed: int
     rejected: int
     calib_mape_max_pct: float        # worst per-fabric window MAPE (Eq. 2)
+    #: Operational power objectives (DESIGN.md §11): mean draw over the
+    #: served span at the design's DVFS point, and the efficiency headline.
+    #: Additive defaults keep pre-energy pickles/constructions loadable.
+    watts: float = 0.0
+    tokens_per_joule: float | None = None
     summary: dict = field(repr=False, default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
             "design": {"sizes": list(self.design.sizes),
                        "router": self.design.router,
+                       "dvfs": self.design.dvfs,
                        "name": self.design.name},
             "throughput_rps": self.throughput_rps,
             "p99_us": self.p99_us,
@@ -154,6 +196,8 @@ class FleetResult:
             "completed": self.completed,
             "rejected": self.rejected,
             "calib_mape_max_pct": self.calib_mape_max_pct,
+            "watts": self.watts,
+            "tokens_per_joule": self.tokens_per_joule,
         }
 
 
@@ -162,6 +206,7 @@ def evaluate_fleet(design: FleetDesign, spec: WorkloadSpec, *,
                    jitter_pct: float = 1.0) -> FleetResult:
     """Serve one composition on the trace; extract the fleet objectives."""
     out = serve_fleet(spec, fleet=design.sizes, router=design.router,
+                      dvfs=design.dvfs,
                       pipeline=pipeline, jitter_pct=jitter_pct)
     s = out["metrics"].summary()
     mapes = [snap.window_mape_pct for snap in out["calibrations"]
@@ -170,17 +215,24 @@ def evaluate_fleet(design: FleetDesign, spec: WorkloadSpec, *,
     # lanes' SLO admission) has no latency distribution: score it strictly
     # worst on the latency objective instead of crashing the front.
     p99 = s["latency_us"]["p99"]
+    # The summary's watts divide joules by the *cycle-domain* span at the
+    # nominal clock (the virtual time axis is DVFS-invariant); true wall
+    # time scales inversely with the DVFS frequency, so rescale here.
+    energy = s.get("energy", {})
+    freq = sim.dvfs_state(design.dvfs).freq_scale
     return FleetResult(
         design=design,
         throughput_rps=s["throughput_rps"],
         p99_us=float(p99) if p99 is not None else float("inf"),
-        cost=fleet_cost(design.sizes,
-                        buffering="double" if pipeline else "single"),
+        cost=silicon_area(design.sizes,
+                          buffering="double" if pipeline else "single"),
         imbalance=s["imbalance"],
         load_cv=s["load_cv"],
         completed=s["completed"],
         rejected=s["rejected"],
         calib_mape_max_pct=max(mapes) if mapes else -1.0,
+        watts=float(energy.get("watts") or 0.0) * freq,
+        tokens_per_joule=energy.get("tokens_per_joule"),
         summary=s,
     )
 
@@ -196,24 +248,38 @@ def sweep_fleets(space: FleetSpace | Sequence[FleetDesign],
 
 
 def fleet_objectives(r: FleetResult) -> tuple[float, float, float]:
-    """Minimization vector: (-throughput, p99, cost)."""
-    return (-r.throughput_rps, r.p99_us, r.cost)
+    """Minimization vector: (-throughput, p99, watts) — DESIGN.md §11."""
+    return (-r.throughput_rps, r.p99_us, r.watts)
 
 
-def fleet_front(results: Sequence[FleetResult]) -> list[FleetResult]:
-    """Pareto front under (max throughput, min p99, min cost)."""
-    return pareto_front(list(results), fleet_objectives)
+def fleet_front(results: Sequence[FleetResult], *,
+                power_cap_w: float | None = None) -> list[FleetResult]:
+    """Pareto front under (max throughput, min p99, min watts).
+
+    ``power_cap_w`` makes the sweep power-capped: any composition whose
+    served draw exceeds the cap is excluded *before* the front forms — an
+    over-cap design cannot re-enter by dominating on the other axes.
+    """
+    results = list(results)
+    if power_cap_w is not None:
+        results = [r for r in results if r.watts <= power_cap_w]
+    return pareto_front(results, fleet_objectives)
 
 
-def summarize_fleets(results: Sequence[FleetResult]) -> str:
+def summarize_fleets(results: Sequence[FleetResult], *,
+                     power_cap_w: float | None = None) -> str:
     """Human-readable composition table with front membership."""
-    on_front = {id(r) for r in fleet_front(results)}
-    lines = [f"{'fleet':<16} {'thr req/s':>10} {'p99 us':>8} {'cost':>6} "
-             f"{'imbal':>6} {'MAPE%':>6}  front"]
+    on_front = {id(r) for r in fleet_front(results,
+                                           power_cap_w=power_cap_w)}
+    lines = [f"{'fleet':<20} {'thr req/s':>10} {'p99 us':>8} {'watts':>8} "
+             f"{'tok/J':>10} {'area':>6} {'imbal':>6} {'MAPE%':>6}  front"]
     for r in sorted(results, key=lambda r: -r.throughput_rps):
+        over = (power_cap_w is not None and r.watts > power_cap_w)
+        tpj = f"{r.tokens_per_joule:>10.0f}" if r.tokens_per_joule else \
+            f"{'-':>10}"
         lines.append(
-            f"{r.design.name:<16} {r.throughput_rps:>10.0f} "
-            f"{r.p99_us:>8.1f} {r.cost:>6.2f} {r.imbalance:>6.2f} "
-            f"{r.calib_mape_max_pct:>6.2f}  "
-            f"{'*' if id(r) in on_front else ''}")
+            f"{r.design.name:<20} {r.throughput_rps:>10.0f} "
+            f"{r.p99_us:>8.1f} {r.watts:>8.3f} {tpj} {r.cost:>6.2f} "
+            f"{r.imbalance:>6.2f} {r.calib_mape_max_pct:>6.2f}  "
+            f"{'x (over cap)' if over else '*' if id(r) in on_front else ''}")
     return "\n".join(lines)

@@ -5,12 +5,20 @@
       --kernels daxpy,fused_adamw --workers 4 --deadline 700 --deadline-n 1024
   PYTHONPATH=src python -m repro.launch.dse --sample 16 --seed 1 \\
       --axis cluster_wakeup=20,40,80 --json DSE.json
+  PYTHONPATH=src python -m repro.launch.dse --fleet --dvfs eco,nominal,turbo \\
+      --power-cap 0.2                                # power-capped fleet DSE
 
 Each design point (dispatch x sync x kernel x HWParams overrides) is run
 through the discrete-event simulator over the (M, N) grid, refit to the
 analytical Eq.-1 model (MAPE recorded), scored against the paper baseline,
 and ranked; the (runtime, cost) Pareto front and — with ``--deadline`` — the
 Eq.-3 deadline-feasible region per front design are printed.
+
+``--fleet`` switches to the fleet-composition axis (DESIGN.md §8.3/§11):
+each composition x router x DVFS point serves the same open-loop trace end
+to end and is Pareto-scored on (throughput, p99, watts); ``--power-cap``
+excludes over-cap compositions before the front forms, and silicon area is
+reported per design as the static build proxy.
 """
 
 from __future__ import annotations
@@ -58,6 +66,60 @@ def build_space(args) -> DesignSpace:
     )
 
 
+def run_fleet(args) -> dict:
+    """Fleet-composition DSE: (throughput, p99, watts) front, power-capped."""
+    from repro.dse import (FleetSpace, fleet_front, silicon_area,
+                           summarize_fleets, sweep_fleets)
+    from repro.serve import WorkloadSpec
+
+    compositions = (tuple(tuple(_ints(c)) for c in
+                          args.compositions.split(";") if c)
+                    if args.compositions else None)
+    space = FleetSpace(
+        **({"compositions": compositions} if compositions else {}),
+        routers=tuple(args.routers.split(",")),
+        dvfs_points=tuple(args.dvfs.split(",")))
+    spec = WorkloadSpec(num_requests=args.requests, seed=args.seed)
+    print(f"sweeping {space.size} fleet designs "
+          f"({len(space.compositions)} compositions x "
+          f"{len(space.routers)} routers x {len(space.dvfs_points)} DVFS "
+          f"points) on {spec.num_requests} requests")
+    results = sweep_fleets(space, spec)
+
+    print("\n" + summarize_fleets(results, power_cap_w=args.power_cap))
+    uncapped = fleet_front(results)
+    fr = fleet_front(results, power_cap_w=args.power_cap)
+    cap_txt = (f" under cap {args.power_cap:.3f} W"
+               if args.power_cap is not None else "")
+    print(f"\nPareto front{cap_txt} ({len(fr)}/{len(results)} designs, "
+          "max throughput / min p99 / min watts):")
+    for r in fr:
+        area = silicon_area(r.design.sizes)
+        tpj = (f"{r.tokens_per_joule:,.0f} tok/J"
+               if r.tokens_per_joule else "-")
+        print(f"  {r.design.name:<20} thr {r.throughput_rps:>9.0f} req/s  "
+              f"p99 {r.p99_us:>7.1f} us  {r.watts:.3f} W  {tpj}  "
+              f"silicon area {area:.2f}")
+    excluded = [r for r in uncapped if r not in fr]
+    if excluded:
+        print("\nexcluded by the power cap (on the uncapped front):")
+        for r in excluded:
+            print(f"  {r.design.name:<20} {r.watts:.3f} W "
+                  f"> {args.power_cap:.3f} W")
+
+    out = {
+        "results": [r.as_dict() for r in results],
+        "front": [r.design.name for r in fr],
+        "uncapped_front": [r.design.name for r in uncapped],
+        "excluded_over_cap": [r.design.name for r in excluded],
+        "power_cap_w": args.power_cap,
+    }
+    if args.json:
+        Path(args.json).write_text(json.dumps(out, indent=2) + "\n")
+        print(f"\nwrote {len(results)} fleet records to {args.json}")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--bus", default=None,
@@ -87,7 +149,27 @@ def main(argv=None) -> dict:
     ap.add_argument("--deadline-n", type=int, default=1024,
                     help="problem sizes report around this N")
     ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--fleet", action="store_true",
+                    help="sweep fleet compositions instead of single-fabric "
+                         "designs (DESIGN.md §8.3/§11)")
+    ap.add_argument("--compositions", default=None, metavar="C;C;...",
+                    help="semicolon list of comma compositions, e.g. "
+                         "'32;16,16;16,8,8' (default: the §8.3 set)")
+    ap.add_argument("--routers", default="model",
+                    help="comma list of router policies swept per "
+                         "composition (model,rr,lql)")
+    ap.add_argument("--dvfs", default="nominal",
+                    help="comma list of DVFS points swept per composition "
+                         "(eco,nominal,turbo)")
+    ap.add_argument("--power-cap", type=float, default=None, metavar="WATTS",
+                    help="power-capped DSE: exclude compositions whose "
+                         "served draw exceeds this before the front forms")
+    ap.add_argument("--requests", type=int, default=96,
+                    help="trace length for the fleet sweep")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        return run_fleet(args)
 
     space = build_space(args)
     points = (space.sample(args.sample, seed=args.seed)

@@ -163,11 +163,13 @@ def serve_fleet_stream(args) -> dict:
         seed=args.seed,
     )
     tracer, residuals = _make_obs(args)
-    out = serve_fleet(spec, fleet=sizes, router=args.router, arch=args.arch,
+    out = serve_fleet(spec, fleet=sizes, router=args.router,
+                      objective=args.router_objective, arch=args.arch,
                       reduced=args.reduced, execute=not args.no_execute,
                       max_batch=args.max_batch,
                       wave_boundary=args.wave_boundary,
                       pipeline=args.pipeline, buffering=args.buffering,
+                      dvfs=args.dvfs,
                       tracer=tracer, residuals=residuals,
                       faults=args.faults, fault_seed=args.fault_seed,
                       recovery=args.recovery, tie_seed=args.tie_seed)
@@ -191,9 +193,12 @@ def serve_fleet_stream(args) -> dict:
     for snap, size in zip(out["calibrations"], sizes):
         mape = ("n/a" if snap.window_mape_pct is None
                 else f"{snap.window_mape_pct:.2f}%")
+        e_mape = ("" if snap.energy_mape_pct is None
+                  else f", energy MAPE {snap.energy_mape_pct:.2f}%")
         print(f"  [{size}c] calibrated: a={snap.alpha:.1f} "
               f"b={snap.beta:.4f} g={snap.gamma:.4f} "
-              f"({snap.source}, {snap.n_samples} samples, MAPE {mape})")
+              f"({snap.source}, {snap.n_samples} samples, MAPE {mape}"
+              f"{e_mape})")
     _finish_obs(args, out, tracer, residuals)
     return out
 
@@ -214,6 +219,7 @@ def serve_stream(args) -> dict:
                          max_batch=args.max_batch, fabric=args.fabric,
                          wave_boundary=args.wave_boundary,
                          pipeline=args.pipeline, buffering=args.buffering,
+                         dvfs=args.dvfs,
                          tracer=tracer, residuals=residuals,
                          faults=args.faults, fault_seed=args.fault_seed)
     _fault_report(out)
@@ -295,6 +301,17 @@ def main(argv=None):
                     help="fleet routing policy: model-driven predicted "
                          "completion (default), round-robin, or "
                          "least-queued-lane")
+    ap.add_argument("--router-objective",
+                    choices=("latency", "energy", "edp"), default="latency",
+                    help="what the model router's argmin minimizes "
+                         "(DESIGN.md §11): predicted completion (default), "
+                         "predicted joules, or the energy-delay product")
+    ap.add_argument("--dvfs", choices=("eco", "nominal", "turbo"),
+                    default=None,
+                    help="DVFS operating point of the simulated fabric(s): "
+                         "prices joules only — cycle timelines and every "
+                         "scheduling decision are DVFS-invariant "
+                         "(DESIGN.md §11)")
     ap.add_argument("--faults", default=None, metavar="SPEC",
                     help="deterministic fault schedule (DESIGN.md §10): "
                          "comma-separated KIND@LANE:T[+DUR][xFACTOR] with "

@@ -44,8 +44,9 @@ from repro.runtime.fault import FaultEvent, FaultInjector
 from .batcher import ContinuousBatcher, PendingStep, ServingEngine
 from .calibrator import CalibrationSnapshot, OnlineCalibrator
 from .fabric import CompletedJob, SimulatedFabric, WallClockFabric
-from .fleet import (RECOVERY_MODES, ROUTER_POLICIES, FabricFleet, FleetLane,
-                    RouteDecision, Router, fabric_prior, serve_fleet)
+from .fleet import (RECOVERY_MODES, ROUTER_OBJECTIVES, ROUTER_POLICIES,
+                    FabricFleet, FleetLane, RouteDecision, Router,
+                    fabric_prior, serve_fleet)
 from .metrics import FleetMetrics, ServeMetrics
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
@@ -57,7 +58,8 @@ __all__ = [
     "ContinuousBatcher", "CYCLES_PER_SECOND", "FabricFleet", "FaultEvent",
     "FaultInjector", "FleetLane", "FleetMetrics", "OffloadAwareScheduler",
     "OnlineCalibrator", "PendingStep", "RECOVERY_MODES", "Request",
-    "RequestQueue", "RequestState", "ROUTER_POLICIES", "RouteDecision",
+    "RequestQueue", "RequestState", "ROUTER_OBJECTIVES", "ROUTER_POLICIES",
+    "RouteDecision",
     "Router", "ServeMetrics", "ServingEngine", "SimulatedFabric",
     "WallClockFabric", "WorkloadSpec", "derive_seed", "fabric_prior",
     "serve_fleet", "serve_workload", "synthetic_workload",
@@ -80,6 +82,7 @@ def serve_workload(
     wave_boundary: bool = False,
     pipeline: bool = False,
     buffering: str | None = None,
+    dvfs=None,
     tracer=None,
     residuals=None,
     faults=None,
@@ -148,12 +151,12 @@ def serve_workload(
             fabric_src = SimulatedFabric.for_design(design,
                                                     jitter_pct=jitter_pct,
                                                     seed=spec.seed)
-            if buffering != fabric_src.buffering:
+            if buffering != fabric_src.buffering or dvfs is not None:
                 fabric_src = SimulatedFabric(
                     hw=fabric_src.hw, kernel=fabric_src.kernel,
                     dispatch=fabric_src.dispatch, sync=fabric_src.sync,
                     jitter_pct=jitter_pct, seed=spec.seed,
-                    buffering=buffering)
+                    buffering=buffering, dvfs=dvfs)
             # Plan host fallbacks against the design's own hardware/kernel.
             from repro.core import simulator as _sim
             host_model = lambda n: float(_sim.host_runtime(  # noqa: E731
@@ -165,7 +168,7 @@ def serve_workload(
             fabric_src = SimulatedFabric(jitter_pct=jitter_pct,
                                          seed=spec.seed,
                                          num_clusters=max(available_m),
-                                         buffering=buffering)
+                                         buffering=buffering, dvfs=dvfs)
             host_model = None  # Manticore host fallback (same cycle domain)
     elif fabric == "wallclock":
         if not execute:

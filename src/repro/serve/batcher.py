@@ -367,6 +367,7 @@ class ContinuousBatcher:
         self._decode_count = 0
         self._ckpt_max_gen = 1
         self._wall_t = 0.0   # wall-domain trace clock (real engine steps)
+        self._energy_ts = 0.0  # monotonic clamp for the energy counter track
         # With a real engine attached, at most one decode may overlap an
         # in-flight prefill: the prefill is chained on that decode's cache
         # future (JAX buffer donation makes the cache pytree a linear
@@ -550,6 +551,36 @@ class ContinuousBatcher:
         else:
             self.metrics.host_jobs += 1
         self.metrics.job_cycles.add(t_cycles)
+        self._account_energy(plan, now)
+
+    def _account_energy(self, plan: BatchPlan, now: float) -> None:
+        """Joules for one completed job (DESIGN.md §11), every serving path.
+
+        Pricing is the fabric's *deterministic* closed form — RNG-free, so
+        the jitter stream and every cycle-domain timeline are untouched
+        (the cycles-only bit-identity invariant).  A WallClockFabric has no
+        cycle model and therefore no energy model; accounting is skipped.
+        """
+        price = getattr(self.fabric,
+                        "offload_energy" if plan.offload else "host_energy",
+                        None)
+        if price is None:
+            return
+        e_j = (price(plan.m, plan.n_elems) if plan.offload
+               else price(plan.n_elems))
+        self.metrics.energy_j += e_j
+        if plan.offload:
+            observe = getattr(self.calibrator, "observe_energy", None)
+            if observe is not None:
+                observe(plan.m, plan.n_elems, e_j)
+        if self.tracer is not None:
+            # Cumulative joules as one counter series per lane; completion
+            # times of interleaved prefill/decode jobs may locally reorder,
+            # so clamp to keep the series monotonically timestamped (the
+            # tools/check_trace.py counter rule).
+            self._energy_ts = max(self._energy_ts, now)
+            self.tracer.counter(self.proc, "energy", "energy_j",
+                                self._energy_ts, self.metrics.energy_j)
 
     def _trace_job(self, plan: BatchPlan, t0: float, dur: float) -> None:
         """One scheduled job as a span on this lane's "jobs" track."""

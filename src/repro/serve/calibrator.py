@@ -27,7 +27,7 @@ from collections import deque
 from dataclasses import dataclass
 
 from repro.core import runtime_model
-from repro.core.runtime_model import OffloadModel, PAPER_MODEL
+from repro.core.runtime_model import EnergyModel, OffloadModel, PAPER_MODEL
 
 
 @dataclass(frozen=True)
@@ -41,12 +41,19 @@ class CalibrationSnapshot:
     n_samples: int
     n_observed: int        # total observations ever (window may have evicted)
     window_mape_pct: float | None
+    #: Energy-twin calibration (DESIGN.md §11): present once the energy
+    #: window supports a fit, else None (additive — cycle-only consumers
+    #: are unaffected).
+    energy_mape_pct: float | None = None
+    energy_n_samples: int = 0
 
     def as_dict(self) -> dict:
         return {"alpha": self.alpha, "beta": self.beta, "gamma": self.gamma,
                 "source": self.source, "n_samples": self.n_samples,
                 "n_observed": self.n_observed,
-                "window_mape_pct": self.window_mape_pct}
+                "window_mape_pct": self.window_mape_pct,
+                "energy_mape_pct": self.energy_mape_pct,
+                "energy_n_samples": self.energy_n_samples}
 
 
 class OnlineCalibrator:
@@ -62,6 +69,11 @@ class OnlineCalibrator:
         self.min_samples = min_samples
         self.refit_interval = max(1, refit_interval)
         self._samples: deque[tuple[int, int, float]] = deque(maxlen=window)
+        # Energy-twin window (DESIGN.md §11): (m, n, joules) observations,
+        # refit lazily — energy never gates the cycle-domain hot path.
+        self._energy_samples: deque[tuple[int, int, float]] = \
+            deque(maxlen=window)
+        self._energy_model: EnergyModel | None = None
         self._model: OffloadModel = prior
         self._source = "prior"
         self._since_refit = 0
@@ -88,6 +100,18 @@ class OnlineCalibrator:
         self._since_refit += 1
         if self._since_refit >= self.refit_interval:
             self._refit(now)
+
+    def observe_energy(self, m: int, n: int, e_joules: float) -> None:
+        """One completed offload's attributed joules (DESIGN.md §11).
+
+        Samples window like the runtime observations; the energy twin is
+        refit lazily at :meth:`energy_mape`/:meth:`snapshot` time, so the
+        per-job observation cost stays O(1).
+        """
+        if e_joules <= 0:
+            return
+        self._energy_samples.append((int(m), int(n), float(e_joules)))
+        self._energy_model = None   # stale; refit on demand
 
     def _diverse(self) -> bool:
         ms = {m for m, _, _ in self._samples}
@@ -134,6 +158,8 @@ class OnlineCalibrator:
         the router readmits the lane once the refit MAPE recovers
         (``FabricFleet.refresh_quarantine``)."""
         self._samples.clear()
+        self._energy_samples.clear()
+        self._energy_model = None
         self._model = self.prior
         self._source = "prior"
         self._since_refit = 0
@@ -153,9 +179,38 @@ class OnlineCalibrator:
             return None
         return runtime_model.mape(self._model, self._samples)
 
+    @property
+    def energy_model(self) -> EnergyModel | None:
+        """The refit energy twin, or None while the window is too thin.
+
+        Lazy: fits on first access after new observations.  Unlike the
+        runtime fit, only N diversity is required: a single-extent window
+        (a no-deadline trace always plans the full fabric) collapses the
+        five-term basis to (1, N), and the least-squares solver's
+        minimum-norm solution absorbs the collinear M columns — the fit
+        stays exact at the observed extent, which is all the window can
+        speak for anyway.
+        """
+        if (self._energy_model is None
+                and len(self._energy_samples) >= max(5, self.min_samples)):
+            ns = {n for _, n, _ in self._energy_samples}
+            if len(ns) >= 2:
+                self._energy_model = runtime_model.fit_energy(
+                    self._energy_samples)
+        return self._energy_model
+
+    def energy_mape(self) -> float | None:
+        """Eq.-2 MAPE of the refit energy twin over its window (joules)."""
+        model = self.energy_model
+        if model is None or not self._energy_samples:
+            return None
+        return runtime_model.mape(model, self._energy_samples)
+
     def snapshot(self) -> CalibrationSnapshot:
         return CalibrationSnapshot(
             alpha=self._model.alpha, beta=self._model.beta,
             gamma=self._model.gamma, source=self._source,
             n_samples=len(self._samples), n_observed=self.n_observed,
-            window_mape_pct=self.window_mape())
+            window_mape_pct=self.window_mape(),
+            energy_mape_pct=self.energy_mape(),
+            energy_n_samples=len(self._energy_samples))

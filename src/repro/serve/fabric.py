@@ -54,6 +54,7 @@ class CompletedJob:
     effective: float     # completion-to-completion service time (α_eff domain)
     overlap: float = 0.0  # host cycles hidden under another job's execution
     bubble: float = 0.0   # fabric idle inserted before this execution
+    energy: float = 0.0   # joules attributed to the job (DESIGN.md §11)
 
 
 @dataclass
@@ -79,7 +80,8 @@ class SimulatedFabric:
                  jitter_pct: float = 1.0, seed: int = 0,
                  num_clusters: int | None = None,
                  buffering: str = "single", tracer=None,
-                 proc: str = "fabric"):
+                 proc: str = "fabric",
+                 dvfs: sim.DVFSState | str | None = None):
         # Fabric-size experiments: scale the interconnect parameters to a
         # fabric of ``num_clusters`` clusters (identity at the paper's 32).
         if num_clusters is not None:
@@ -97,12 +99,15 @@ class SimulatedFabric:
         self.buffering = buffering
         self._rng = np.random.default_rng(seed)
         self.proc = proc
+        # Energy operating point (DESIGN.md §11): prices joules only — the
+        # cycle model, the RNG draws, and every timeline are DVFS-invariant.
+        self.dvfs = sim.dvfs_state(dvfs)
         # The async protocol's resource timeline, shared by every job this
         # fabric serves (descriptor buffering is a property of the fabric,
         # not of a job).  The engine inherits the tracer, so pipelined jobs
         # get per-phase spans on this fabric's host/fabric/sync tracks.
         self.engine = OffloadEngine(hw=hw, buffering=buffering,
-                                    tracer=tracer, proc=proc)
+                                    tracer=tracer, proc=proc, dvfs=self.dvfs)
 
     @classmethod
     def for_design(cls, point, *, jitter_pct: float = 1.0, seed: int = 0):
@@ -147,7 +152,8 @@ class SimulatedFabric:
     def complete(self, handle) -> CompletedJob:
         return CompletedJob(t_done=handle.t_done, total=handle.total,
                             effective=handle.effective,
-                            overlap=handle.overlap, bubble=handle.bubble)
+                            overlap=handle.overlap, bubble=handle.bubble,
+                            energy=handle.energy)
 
     # ---------------------------------------------------------------- #
     # Legacy blocking protocol (sequential serving paths)
@@ -162,6 +168,23 @@ class SimulatedFabric:
         """Cycles for the host to run the job itself (no offload)."""
         return self._jitter(sim.host_runtime(n, hw=self.hw,
                                              kernel=self.kernel))
+
+    # ---------------------------------------------------------------- #
+    # Energy pricing (DESIGN.md §11) — deterministic closed forms, shared
+    # by every serving path.  Deliberately RNG-free: the jitter stream
+    # draws exactly one normal per job on the cycle side, and energy
+    # accounting must not perturb it (the cycles-only bit-identity).
+    # ---------------------------------------------------------------- #
+    def offload_energy(self, m: int, n: int) -> float:
+        """Joules for an offloaded job of n elements on m clusters."""
+        return sim.offload_energy(m, n, dispatch=self.dispatch,
+                                  sync=self.sync, hw=self.hw,
+                                  kernel=self.kernel, dvfs=self.dvfs)
+
+    def host_energy(self, n: int) -> float:
+        """Joules for the host to run the job itself (no offload)."""
+        return sim.host_energy(n, hw=self.hw, kernel=self.kernel,
+                               dvfs=self.dvfs)
 
 
 class WallClockFabric:

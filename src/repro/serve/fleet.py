@@ -60,6 +60,18 @@ from .workload import WorkloadSpec, derive_seed, synthetic_workload
 #: Router policies (DESIGN.md §8.2).
 ROUTER_POLICIES = ("model", "rr", "lql")
 
+#: What the ``model`` policy's argmin minimizes (DESIGN.md §11):
+#:   * "latency" — predicted completion time (the classic score; default);
+#:   * "energy"  — predicted joules on each lane's closed-form energy
+#:                 model, predicted completion breaking ties;
+#:   * "edp"     — energy-delay product: predicted joules x predicted
+#:                 sojourn (queueing included), the classic efficiency
+#:                 compromise.
+#: ``rr`` and ``lql`` are deliberately objective-blind baselines; with the
+#: default objective the scoring path is bit-identical to the historical
+#: latency-only router.
+ROUTER_OBJECTIVES = ("latency", "energy", "edp")
+
 #: What the fleet does with a dead lane's orphans (DESIGN.md §10):
 #:   * "restore"   — re-route and resume from the lane's last decode
 #:                   checkpoint (the restore job re-materializes KV and is
@@ -124,6 +136,21 @@ class FleetLane:
             t += (req.gen_len - 1) * self.scheduler.preview(1)
         return t
 
+    def preview_energy(self, req: Request) -> float:
+        """Predicted joules for ``req`` on this fabric (DESIGN.md §11).
+
+        The fabric's RNG-free closed-form energy at the full-fabric extent
+        (prefill plus one single-token decode step per remaining token) —
+        a lower bound like :meth:`preview`'s decode share, but the same
+        bound on every lane, so an energy/edp router compares fairly.
+        Side-effect free: no calibrator, no jitter draw.
+        """
+        m = max(self.scheduler.available_m)
+        e = self.fabric.offload_energy(m, req.n_prompt_elems)
+        if req.gen_len > 1:
+            e += (req.gen_len - 1) * self.fabric.offload_energy(m, 1)
+        return e
+
 
 @dataclass(frozen=True)
 class RouteDecision:
@@ -137,6 +164,8 @@ class RouteDecision:
     feasible: tuple[bool, ...]       # Eq.-3 SLO feasibility per lane
     guarded: bool                    # work-conserving guard redirected it
     requeued: bool = False           # crash-recovery re-route (second pass)
+    objective: str = "latency"       # what the model policy minimized
+    energy: tuple[float, ...] | None = None  # predicted joules per lane
 
 
 class Router:
@@ -156,14 +185,19 @@ class Router:
     """
 
     def __init__(self, lanes: list[FleetLane], policy: str = "model", *,
-                 tracer=None, tie_seed: int | None = None):
+                 objective: str = "latency", tracer=None,
+                 tie_seed: int | None = None):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"router policy must be one of "
                              f"{ROUTER_POLICIES}, got {policy!r}")
+        if objective not in ROUTER_OBJECTIVES:
+            raise ValueError(f"router objective must be one of "
+                             f"{ROUTER_OBJECTIVES}, got {objective!r}")
         if not lanes:
             raise ValueError("a fleet needs at least one fabric")
         self.lanes = lanes
         self.policy = policy
+        self.objective = objective
         self._t_free = [0.0] * len(lanes)
         self._inflight: list[list[float]] = [[] for _ in lanes]
         self._rr_next = 0
@@ -263,6 +297,23 @@ class Router:
             for lane in self.lanes)
         cand = [i for i in alive if feasible[i]] or alive
 
+        # Objective key for the model policy (DESIGN.md §11).  Energy is
+        # priced only when asked for — the default "latency" objective runs
+        # the historical scoring path bit-for-bit (no energy closed forms
+        # evaluated, no new work on the hot path).
+        energy: tuple[float, ...] | None = None
+        if self.policy == "model" and self.objective != "latency":
+            energy = tuple(lane.preview_energy(req) for lane in self.lanes)
+            if self.objective == "energy":
+                def objkey(i, e=energy):
+                    return (e[i], scores[i])
+            else:  # edp: joules x predicted sojourn (queueing included)
+                def objkey(i, e=energy):
+                    return (e[i] * (scores[i] - now), scores[i])
+        else:
+            def objkey(i):
+                return scores[i]
+
         if self.policy == "rr":
             # Round-robin over the *live* lanes: advance the pointer until
             # it lands on one (identical sequence while nothing is dead).
@@ -276,7 +327,7 @@ class Router:
         elif self.policy == "lql":
             choice = self._argmin(cand, lambda i: (pending[i], scores[i]))
         else:  # model
-            choice = self._argmin(cand, lambda i: scores[i])
+            choice = self._argmin(cand, objkey)
 
         # Work-conserving guard (model/lql): while some fabric *that could
         # serve this request* is predicted idle, never queue behind a busy
@@ -287,7 +338,10 @@ class Router:
         if self.policy != "rr" and pending[choice] > 0:
             idle = [i for i in cand if pending[i] == 0]
             if idle:
-                choice = self._argmin(idle, lambda i: scores[i])
+                # The guard redirects by the same objective the policy
+                # scored with: an energy router still never queues a job
+                # behind a busy lane while a feasible one sits idle.
+                choice = self._argmin(idle, objkey)
                 guarded = True
 
         # A request infeasible on EVERY lane (cand fell back to all lanes)
@@ -301,16 +355,19 @@ class Router:
         self.decisions.append(RouteDecision(
             rid=req.rid, lane=choice, policy=self.policy, scores=scores,
             pending=pending, feasible=feasible, guarded=guarded,
-            requeued=requeued))
+            requeued=requeued, objective=self.objective, energy=energy))
         if self.tracer is not None:
+            args = {"rid": req.rid, "lane": self.lanes[choice].name,
+                    "scores": [s if np.isfinite(s) else None
+                               for s in scores],
+                    "pending": list(pending),
+                    "feasible": list(feasible), "guarded": guarded,
+                    "requeued": requeued}
+            if energy is not None:
+                args["objective"] = self.objective
+                args["energy_j"] = list(energy)
             self.tracer.instant(
-                "router", "routes", f"route:{self.policy}", now,
-                args={"rid": req.rid, "lane": self.lanes[choice].name,
-                      "scores": [s if np.isfinite(s) else None
-                                 for s in scores],
-                      "pending": list(pending),
-                      "feasible": list(feasible), "guarded": guarded,
-                      "requeued": requeued})
+                "router", "routes", f"route:{self.policy}", now, args=args)
             self.tracer.flow_start("router", "routes", "route", now,
                                    flow=req.rid)
         return choice
@@ -330,9 +387,11 @@ class FabricFleet:
     """
 
     def __init__(self, sizes, *, router: str = "model",
+                 objective: str = "latency",
                  jitter_pct: float = 1.0, seed: int = 0,
                  max_batch: int = 4, wave_boundary: bool = False,
                  pipeline: bool = False, buffering: str | None = None,
+                 dvfs=None,
                  engines: list | None = None, tracer=None, residuals=None,
                  faults=None, recovery: str = "restore",
                  ckpt_every: int = 4, quarantine_mape_pct: float = 10.0,
@@ -378,14 +437,14 @@ class FabricFleet:
                 tracer=tracer, proc=proc)
             fabric = SimulatedFabric(jitter_pct=jitter_pct, seed=seed + i,
                                      num_clusters=clusters,
-                                     buffering=buffering,
+                                     buffering=buffering, dvfs=dvfs,
                                      tracer=tracer, proc=proc)
             self.lanes.append(FleetLane(
                 index=i, num_clusters=clusters, fabric=fabric,
                 calibrator=calibrator, scheduler=scheduler,
                 engine=None if engines is None else engines[i]))
-        self.router = Router(self.lanes, router, tracer=tracer,
-                             tie_seed=tie_seed)
+        self.router = Router(self.lanes, router, objective=objective,
+                             tracer=tracer, tie_seed=tie_seed)
         # Per-lane checkpoint managers, only where they can matter: a lane
         # with a scheduled crash snapshots its decode state so "restore"
         # recovery can resume orphans elsewhere.  The backing directory
@@ -699,6 +758,7 @@ def serve_fleet(
     *,
     fleet=(sim.REFERENCE_CLUSTERS,),
     router: str = "model",
+    objective: str = "latency",
     arch: str = "chatglm3-6b",
     reduced: bool = True,
     execute: bool = False,
@@ -708,6 +768,7 @@ def serve_fleet(
     wave_boundary: bool = False,
     pipeline: bool = False,
     buffering: str | None = None,
+    dvfs=None,
     tracer=None,
     residuals=None,
     faults=None,
@@ -752,10 +813,11 @@ def serve_fleet(
             faults, horizon=horizon, num_lanes=len(fleet),
             seed=(derive_seed(spec.seed, "faults")
                   if fault_seed is None else fault_seed))
-    fleet_obj = FabricFleet(fleet, router=router, jitter_pct=jitter_pct,
+    fleet_obj = FabricFleet(fleet, router=router, objective=objective,
+                            jitter_pct=jitter_pct,
                             seed=spec.seed, max_batch=max_batch,
                             wave_boundary=wave_boundary, pipeline=pipeline,
-                            buffering=buffering, engines=engines,
+                            buffering=buffering, dvfs=dvfs, engines=engines,
                             tracer=tracer, residuals=residuals,
                             faults=faults, recovery=recovery,
                             ckpt_every=ckpt_every, tie_seed=tie_seed)

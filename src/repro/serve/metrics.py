@@ -101,6 +101,10 @@ class ServeMetrics:
     goodput_completed: int = 0    # completed with SLO met (or no SLO)
     # Pipelined-serving counters (DESIGN.md §7).
     pipelined_prefills: int = 0   # prefills dispatched under in-flight work
+    # Energy accounting (DESIGN.md §11): joules attributed to completed
+    # jobs, accumulated from the fabric's deterministic closed-form pricing
+    # on every serving path identically.
+    energy_j: float = 0.0
     # Fault-tolerance counters (DESIGN.md §10).
     faults_crash: int = 0         # fabric crashes that hit this lane
     stalls: int = 0               # transient stall windows absorbed
@@ -211,6 +215,12 @@ class ServeMetrics:
                 "overlap_mean_cycles": self.overlap_cycles.mean(),
                 "bubble_total_cycles": self.bubble_cycles.total(),
             },
+            "energy": {
+                "joules": self.energy_j,
+                "watts": self.energy_j / span_s,
+                "tokens_per_joule": (self.tokens_generated / self.energy_j
+                                     if self.energy_j > 0 else None),
+            },
             "wall": {
                 "steps": len(self.step_wall_s),
                 "step_p50_ms": _ms(self.step_wall_s.percentile(50)),
@@ -256,6 +266,13 @@ class ServeMetrics:
                 f"{self.skewed_jobs} skewed jobs; {self.orphaned} orphaned "
                 f"-> {self.recovered} recovered ({self.restore_jobs} KV "
                 f"restores), {self.dropped} dropped")
+        if self.energy_j > 0:
+            tpj = s["energy"]["tokens_per_joule"]
+            line = (f"energy: {1e3 * s['energy']['joules']:.3f} mJ "
+                    f"({s['energy']['watts']:.3f} W virtual)")
+            if tpj is not None:
+                line += f", {tpj:.0f} tok/J"
+            lines.append(line)
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
                          f"({self.slo_met}/{self.slo_met + self.slo_missed})")
@@ -364,6 +381,14 @@ class FleetMetrics:
             },
             "imbalance": self.imbalance(),
             "load_cv": self.load_cv(),
+            "energy": {
+                "joules": self._total("energy_j"),
+                "watts": self._total("energy_j") / span_s,
+                "tokens_per_joule": (
+                    self._total("tokens_generated")
+                    / self._total("energy_j")
+                    if self._total("energy_j") > 0 else None),
+            },
             "per_fabric": {
                 name: {
                     "completed": m.completed,
@@ -371,6 +396,9 @@ class FleetMetrics:
                     "occupancy_mean": m.slot_occupancy.mean(),
                     "overlap_total_cycles": m.overlap_cycles.total(),
                     "t_end": m.t_end,
+                    "energy_j": m.energy_j,
+                    "tokens_per_joule": (m.tokens_generated / m.energy_j
+                                         if m.energy_j > 0 else None),
                 }
                 for name, m in self.lanes
             },
@@ -390,11 +418,21 @@ class FleetMetrics:
             f"balance: imbalance {s['imbalance']:.2f} of span, "
             f"busy-cycle CV {s['load_cv']:.2f}",
         ]
+        if s["energy"]["joules"] > 0:
+            tpj = s["energy"]["tokens_per_joule"]
+            line = (f"energy: {1e3 * s['energy']['joules']:.3f} mJ "
+                    f"({s['energy']['watts']:.3f} W virtual)")
+            if tpj is not None:
+                line += f", {tpj:.0f} tok/J"
+            lines.append(line)
         for name, f in s["per_fabric"].items():
             occ = ("n/a" if f["occupancy_mean"] is None
                    else f"{100 * f['occupancy_mean']:.0f}%")
-            lines.append(f"  [{name}] {f['completed']} completed, "
-                         f"{f['busy_cycles']:.0f} busy cy, occupancy {occ}")
+            line = (f"  [{name}] {f['completed']} completed, "
+                    f"{f['busy_cycles']:.0f} busy cy, occupancy {occ}")
+            if f["tokens_per_joule"] is not None:
+                line += f", {f['tokens_per_joule']:.0f} tok/J"
+            lines.append(line)
         ft = s["faults"]
         if ft["crashes"] or ft["orphaned"] or ft["dropped"]:
             lines.append(

@@ -208,3 +208,84 @@ def test_saturated_effective_samples_fit_under_2pct():
     model = fit(samples)
     assert mape(model, samples) <= 2.0
     assert model.alpha < 100.0     # effective constant, not the 367 closed form
+
+
+# --------------------------------------------------------------------------- #
+# Energy twin (DESIGN.md §11): engine phase joules == closed form, exactly
+# --------------------------------------------------------------------------- #
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=1 << 14),
+    dispatch=st.sampled_from(sim.DISPATCH_MODES),
+    sync=st.sampled_from(sim.SYNC_MODES),
+    kernel=st.sampled_from([sim.DAXPY, ADAMW_ISH]),
+    leak_w=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+    e_dispatch_pj=st.floats(min_value=0.0, max_value=50.0, allow_nan=False),
+    e_exec_pj=st.floats(min_value=0.0, max_value=50.0, allow_nan=False),
+    e_sync_pj=st.floats(min_value=0.0, max_value=50.0, allow_nan=False),
+    dvfs=st.sampled_from(sorted(sim.DVFS_STATES)),
+)
+@settings(max_examples=200, deadline=None)
+def test_single_job_energy_matches_closed_form_exactly(
+        m, n, dispatch, sync, kernel, leak_w, e_dispatch_pj, e_exec_pj,
+        e_sync_pj, dvfs):
+    """The engine's summed per-phase joules must equal the closed-form
+    ``offload_energy`` bit-for-bit for an isolated single-buffered job —
+    same phase helpers, same cycle counts, same summation order — for every
+    energy-rate assignment and DVFS operating point."""
+    import dataclasses
+    hw = dataclasses.replace(HW_DEFAULT, leak_w=leak_w,
+                             e_dispatch_pj=e_dispatch_pj,
+                             e_exec_pj=e_exec_pj, e_sync_pj=e_sync_pj)
+    point = sim.dvfs_state(dvfs)
+    closed = sim.offload_energy(m, n, dispatch=dispatch, sync=sync, hw=hw,
+                                kernel=kernel, dvfs=point)
+    rec = eng.OffloadEngine(hw=hw, buffering="single", dvfs=dvfs).submit(
+        n, m_clusters=m, dispatch=dispatch, sync=sync, kernel=kernel)
+    assert rec.e_dispatch + rec.e_exec + rec.e_sync == closed
+    assert rec.energy == closed
+    trace = sim.simulate_offload(m, n, dispatch=dispatch, sync=sync, hw=hw,
+                                 kernel=kernel, dvfs=point)
+    assert trace.energy == closed
+
+
+@given(dvfs=st.sampled_from(sorted(sim.DVFS_STATES)))
+@settings(max_examples=10, deadline=None)
+def test_dvfs_rescales_energy_never_cycles(dvfs):
+    """A DVFS state rescales joules (and the wall-time base) but leaves
+    every cycle-domain field of the engine bit-identical (DESIGN.md §11.2)."""
+    nominal = eng.OffloadEngine(buffering="double")
+    scaled = eng.OffloadEngine(buffering="double", dvfs=dvfs)
+    recs_n = submit_stream(nominal, 4, n=2048)
+    recs_s = submit_stream(scaled, 4, n=2048)
+    for a, b in zip(recs_n, recs_s):
+        assert (a.t_done, a.dispatch_done, a.exec_done, a.sync_done,
+                a.effective) == (b.t_done, b.dispatch_done, b.exec_done,
+                                 b.sync_done, b.effective)
+    if dvfs == "nominal":
+        assert recs_s[-1].energy == recs_n[-1].energy
+    else:
+        assert recs_s[-1].energy != recs_n[-1].energy
+
+
+def test_utilization_energy_totals_sum_job_records():
+    engine = eng.OffloadEngine(buffering="double")
+    recs = submit_stream(engine, 5, n=1024)
+    u = engine.utilization()
+    assert u["dispatch_energy_j"] == sum(r.e_dispatch for r in recs)
+    assert u["exec_energy_j"] == sum(r.e_exec for r in recs)
+    assert u["sync_energy_j"] == sum(r.e_sync for r in recs)
+    assert u["energy_j"] == (u["dispatch_energy_j"] + u["exec_energy_j"]
+                             + u["sync_energy_j"])
+
+
+def test_host_job_energy_is_exec_only():
+    import math
+    engine = eng.OffloadEngine(buffering="single")
+    rec = engine.submit(1024, offload=False)  # host fallback
+    assert not rec.offload
+    assert rec.e_dispatch == 0.0 and rec.e_sync == 0.0
+    cycles = math.ceil(sim.host_runtime(1024, hw=HW_DEFAULT))
+    assert rec.e_exec == sim.phase_energy(cycles, HW_DEFAULT.e_host_pj,
+                                          HW_DEFAULT)
+    assert rec.energy == rec.e_exec

@@ -22,7 +22,7 @@ from repro.core import simulator as sim
 from repro.core.runtime_model import PAPER_MODEL
 from repro.dse.fleet import (DEFAULT_COMPOSITIONS, FleetDesign, FleetSpace,
                              composition_name, fabric_cost, fleet_cost,
-                             fleet_front, sweep_fleets)
+                             fleet_front, silicon_area, sweep_fleets)
 from repro.serve import (FabricFleet, OffloadAwareScheduler, OnlineCalibrator,
                          Request, WorkloadSpec, fabric_prior, serve_fleet,
                          serve_workload, synthetic_workload)
@@ -288,15 +288,21 @@ def test_composition_names():
     assert composition_name((16, 8, 8)) == "16+8+8"
 
 
-def test_fleet_cost_structure():
+def test_silicon_area_structure():
     # Same budget, more fabrics -> more silicon (per-fabric host/bus
     # overheads; the banked bus scales sub-linearly).
-    assert fleet_cost((16, 16)) > fleet_cost((32,))
-    assert fleet_cost((8, 8, 8, 8)) > fleet_cost((16, 16))
-    assert fleet_cost((32,)) == pytest.approx(fabric_cost(32))
+    assert silicon_area((16, 16)) > silicon_area((32,))
+    assert silicon_area((8, 8, 8, 8)) > silicon_area((16, 16))
+    assert silicon_area((32,)) == pytest.approx(fabric_cost(32))
     # The reference fabric's cost is design_cost-compatible: bus + cores
     # + multicast + credit + double buffer + per-fabric overhead.
     assert fabric_cost(32) == pytest.approx(2.50)
+
+
+def test_fleet_cost_is_deprecated_alias_of_silicon_area():
+    with pytest.warns(DeprecationWarning):
+        legacy = fleet_cost((16, 8, 8))
+    assert legacy == silicon_area((16, 8, 8))
 
 
 def test_fleet_space_budget_and_grid():
@@ -320,17 +326,18 @@ def test_fleet_sweep_front_non_dominated():
     assert len(results) == len(DEFAULT_COMPOSITIONS)
     front = fleet_front(results)
     assert front
-    # No front member may be dominated on (throughput, p99, cost).
+    # No front member may be dominated on (throughput, p99, watts) — the
+    # §11.5 objective axes (silicon area is a build descriptor, not an axis).
     for r in front:
         for other in results:
             if other is r:
                 continue
             assert not (other.throughput_rps >= r.throughput_rps
                         and other.p99_us <= r.p99_us
-                        and other.cost <= r.cost
+                        and other.watts <= r.watts
                         and (other.throughput_rps > r.throughput_rps
                              or other.p99_us < r.p99_us
-                             or other.cost < r.cost))
+                             or other.watts < r.watts))
     # Composition results are deterministic per seed.
     again = sweep_fleets(FleetSpace(), spec)
     assert [r.throughput_rps for r in again] == \
@@ -353,3 +360,125 @@ def test_workload_reuse_across_policies_does_not_mutate_requests():
     FabricFleet((16, 8), router="model").run(
         synthetic_workload(STRAGGLER, with_tokens=False))
     assert [r.arrival for r in reqs] == arrivals
+
+
+# --------------------------------------------------------------------------- #
+# Router objectives (DESIGN.md §11.4): latency (default) | energy | edp
+# --------------------------------------------------------------------------- #
+def test_router_objective_validation():
+    with pytest.raises(ValueError):
+        FabricFleet((16, 8), router="model", objective="joules")
+
+
+def test_router_objective_latency_default_is_bit_identical():
+    """``objective="latency"`` (and leaving it unset) must reproduce the
+    historical router exactly — summaries, routes, and no energy previews
+    computed on the default path."""
+    spec = PREFILL_HEAVY
+    base = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
+    explicit = serve_fleet(spec, fleet=(32, 8, 8), router="model",
+                           pipeline=True, objective="latency")
+    assert base["metrics"].summary() == explicit["metrics"].summary()
+    assert [d.lane for d in base["routes"]] == \
+        [d.lane for d in explicit["routes"]]
+    assert all(d.energy is None and d.objective == "latency"
+               for d in base["routes"])
+
+
+def test_router_objective_energy_prefers_cheaper_joules():
+    """On an idle big+little fleet the energy objective sends a long prompt
+    to the little lane (fewer active-cluster picojoules), where the latency
+    objective picks the big one — and the decision records the previews."""
+    req = [Request(rid=0, arrival=0.0, prompt_len=4096, gen_len=1)]
+    lat = FabricFleet((32, 8), router="model", jitter_pct=0.0)
+    d_lat = lat.run([Request(rid=0, arrival=0.0, prompt_len=4096,
+                             gen_len=1)])["routes"][0]
+    eco = FabricFleet((32, 8), router="model", jitter_pct=0.0,
+                      objective="energy")
+    d_eco = eco.run(req)["routes"][0]
+    assert d_lat.lane == 0                       # fastest: the big lane
+    assert d_eco.lane == 1                       # cheapest joules: little
+    assert d_eco.objective == "energy"
+    assert d_eco.energy is not None and len(d_eco.energy) == 2
+    assert d_eco.energy[1] == min(d_eco.energy)
+
+
+def test_router_objective_edp_records_previews():
+    out = serve_fleet(WorkloadSpec(num_requests=24, rate_rps=2e6, seed=7),
+                      fleet=(32, 8, 8), router="model", pipeline=True,
+                      objective="edp")
+    assert all(d.objective == "edp" for d in out["routes"])
+    assert all(d.energy is not None and len(d.energy) == 3
+               for d in out["routes"])
+    assert out["metrics"].summary()["energy"]["joules"] > 0
+
+
+def test_fleet_dvfs_rescales_energy_never_cycles():
+    """A fleet pinned to turbo serves the identical cycle-domain trace —
+    same throughput, p99, routes — with different joules (DESIGN.md §11.2)."""
+    spec = WorkloadSpec(num_requests=32, rate_rps=2e6, seed=7)
+    base = serve_fleet(spec, fleet=(16, 8), router="model", pipeline=True)
+    turbo = serve_fleet(spec, fleet=(16, 8), router="model", pipeline=True,
+                        dvfs="turbo")
+    bs, ts = base["metrics"].summary(), turbo["metrics"].summary()
+    assert bs["throughput_rps"] == ts["throughput_rps"]
+    assert bs["latency_us"] == ts["latency_us"]
+    assert [d.lane for d in base["routes"]] == \
+        [d.lane for d in turbo["routes"]]
+    assert bs["energy"]["joules"] != ts["energy"]["joules"]
+
+
+# --------------------------------------------------------------------------- #
+# Power-capped DSE (DESIGN.md §11.5): DVFS axis + capped fronts
+# --------------------------------------------------------------------------- #
+def test_fleet_space_dvfs_axis_and_design_names():
+    space = FleetSpace(compositions=((32,), (16, 16)),
+                       dvfs_points=("eco", "nominal", "turbo"))
+    assert space.size == 2 * 3
+    designs = list(space.grid())
+    assert len(designs) == 6
+    assert {d.dvfs for d in designs} == {"eco", "nominal", "turbo"}
+    named = {d.name for d in designs if d.sizes == (32,)}
+    assert "1x32" in named                       # nominal: no suffix
+    assert any(n.endswith("@eco") for n in named)
+    with pytest.raises(ValueError):
+        FleetSpace(dvfs_points=("overclock",))
+    with pytest.raises(ValueError):
+        FleetDesign(sizes=(32,), dvfs="overclock")
+
+
+def test_power_capped_front_excludes_over_cap_designs():
+    spec = WorkloadSpec(num_requests=48, rate_rps=2e6,
+                        prompt_lens=(1024, 2048, 4096, 8192),
+                        gen_lens=(4, 16, 64), slo_fraction=0.0, seed=7)
+    results = sweep_fleets(FleetSpace(), spec)
+    assert all(r.watts > 0 for r in results)
+    assert all(r.tokens_per_joule and r.tokens_per_joule > 0
+               for r in results)
+    uncapped = fleet_front(results)
+    # Cap just under the hungriest front member: it must vanish, every
+    # surviving front member must respect the cap, and nothing the cap
+    # permits may be silently dropped relative to a fresh front of the
+    # feasible designs only.
+    hungriest = max(uncapped, key=lambda r: r.watts)
+    cap = hungriest.watts * 0.999
+    capped = fleet_front(results, power_cap_w=cap)
+    assert hungriest not in capped
+    assert all(r.watts <= cap for r in capped)
+    feasible = [r for r in results if r.watts <= cap]
+    assert capped == fleet_front(feasible)
+    # No cap (None) is the uncapped front exactly.
+    assert fleet_front(results, power_cap_w=None) == uncapped
+
+
+def test_dvfs_sweep_cycle_domain_invariant():
+    """Across DVFS points the same composition serves the same cycle-domain
+    numbers — only watts and tokens/joule move (DESIGN.md §11.2)."""
+    spec = WorkloadSpec(num_requests=32, rate_rps=2e6, seed=7)
+    results = sweep_fleets(
+        FleetSpace(compositions=((16, 16),),
+                   dvfs_points=("eco", "nominal", "turbo")), spec)
+    assert len(results) == 3
+    assert len({r.throughput_rps for r in results}) == 1
+    assert len({r.p99_us for r in results}) == 1
+    assert len({r.watts for r in results}) == 3   # the energy axis moves

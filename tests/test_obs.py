@@ -414,3 +414,61 @@ def test_serve_metrics_summary_unchanged_with_bounded_recorders():
         return m
 
     _approx_tree(build(reservoir=256).summary(), build(None).summary())
+
+
+# --------------------------------------------------------------------------- #
+# Counter tracks (DESIGN.md §11): export shape + check_trace series rules
+# --------------------------------------------------------------------------- #
+def test_counter_export_carries_value_args():
+    tr = Tracer()
+    tr.counter("f0:32c", "energy", "energy_j", 100.0, 1.5)
+    doc = to_chrome(tr)
+    c = next(e for e in doc["traceEvents"] if e["ph"] == "C")
+    assert c["name"] == "energy_j" and c["args"] == {"value": 1.5}
+    assert c["ts"] == pytest.approx(0.1)               # cycles -> us
+    # The counter lands on its own labeled (pid, tid) track.
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    tname = next(e for e in meta if e["name"] == "thread_name"
+                 and e["args"]["name"] == "energy")
+    assert (c["pid"], c["tid"]) == (tname["pid"], tname["tid"])
+
+
+def test_serving_trace_meters_monotone_energy_counter():
+    """The batcher's cumulative joules counter is monotone in both
+    timestamp and value, lives on ONE track per lane, and its last sample
+    equals the metrics total (the trace agrees with the books)."""
+    tr, _, out = _serve_traced()
+    cs = [e for e in tr.events if e.ph == "C" and e.name == "energy_j"]
+    assert len(cs) > 10
+    ts = [e.ts for e in cs]
+    vals = [e.args["value"] for e in cs]
+    assert ts == sorted(ts)
+    assert vals == sorted(vals)
+    assert {(e.proc, e.track) for e in cs} == {(cs[0].proc, "energy")}
+    assert vals[-1] == pytest.approx(out["metrics"].energy_j)
+
+
+def test_check_trace_rejects_malformed_counter_series(tmp_path):
+    # (a) non-monotone timestamps within one (pid, name) series.  The
+    # exporter sorts by ts, so corrupt the serialized JSON directly — the
+    # validator guards hand-edited/merged traces, not just our exporter.
+    tr = Tracer()
+    tr.span("p", "host", "a", 0.0, 10.0)
+    tr.counter("p", "energy", "energy_j", 100_000.0, 1.0)
+    doc = to_chrome(tr)
+    c = next(e for e in doc["traceEvents"] if e["ph"] == "C")
+    doc["traceEvents"].append(dict(c, ts=c["ts"] / 2, args={"value": 2.0}))
+    p = tmp_path / "nonmono.json"
+    p.write_text(json.dumps(doc))
+    r = _run_tool("check_trace.py", str(p))
+    assert r.returncode == 1 and "not monotone" in r.stdout
+
+    # (b) one counter name split across two tracks of the same proc —
+    # renders as two disjoint counters in Perfetto.
+    tr2 = Tracer()
+    tr2.span("p", "host", "a", 0.0, 10.0)
+    tr2.counter("p", "energy", "energy_j", 10_000.0, 1.0)
+    tr2.counter("p", "slots", "energy_j", 20_000.0, 2.0)
+    p = write_chrome_trace(tr2, tmp_path / "split.json")
+    r = _run_tool("check_trace.py", str(p))
+    assert r.returncode == 1 and "split across 2 tracks" in r.stdout

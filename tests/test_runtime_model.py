@@ -103,3 +103,59 @@ def test_mape_skips_nonpositive_samples(m, n, t_bad):
 def test_mape_all_nonpositive_raises():
     with pytest.raises(ValueError, match="positive"):
         rm.mape(rm.PAPER_MODEL, [(1, 64, 0.0), (2, 128, -5.0)])
+
+
+# --------------------------------------------------------------------------- #
+# Energy twin ê(M, N) (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+e_coeff = st.floats(min_value=1e-6, max_value=10.0, allow_nan=False,
+                    allow_infinity=False)
+
+
+@given(alpha=e_coeff, delta=e_coeff, beta=e_coeff, eta=e_coeff,
+       gamma=e_coeff, m=st.integers(min_value=1, max_value=64),
+       n=st.integers(min_value=1, max_value=1 << 14))
+def test_energy_predict_formula(alpha, delta, beta, eta, gamma, m, n):
+    model = rm.EnergyModel(alpha_j=alpha, delta_j=delta, beta_j=beta,
+                           eta_j=eta, gamma_j=gamma)
+    want = alpha + delta * m + beta * n + eta * m * n + gamma * n / m
+    assert model.predict(m, n) == pytest.approx(want, rel=1e-12)
+
+
+@given(alpha=e_coeff, delta=e_coeff, beta=e_coeff, eta=e_coeff,
+       gamma=e_coeff)
+@settings(max_examples=50, deadline=None)
+def test_fit_energy_recovers_exact_coefficients(alpha, delta, beta, eta,
+                                                gamma):
+    truth = rm.EnergyModel(alpha_j=alpha, delta_j=delta, beta_j=beta,
+                           eta_j=eta, gamma_j=gamma)
+    samples = [(m, n, float(truth.predict(m, n)))
+               for m in (1, 2, 4, 8, 32) for n in (64, 256, 1024, 4096)]
+    fitted = rm.fit_energy(samples)
+    assert rm.mape(fitted, samples) < 1e-6
+
+
+def test_fit_energy_requires_enough_samples():
+    with pytest.raises(ValueError):
+        rm.fit_energy([(1, 64, 1.0)] * 4)
+
+
+def test_energy_twin_fits_simulator_within_eq2_bar():
+    """The 5-term basis is the closed form's own structure, so the fit over
+    the paper grid must land well inside the 2% MAPE bar."""
+    model, mape_pct = rm.fit_energy_from_simulator()
+    assert mape_pct <= 2.0
+    # Sanity: joules are positive and grow with N at fixed M.
+    assert model.predict(8, 4096) > model.predict(8, 256) > 0
+
+
+def test_energy_twin_tracks_dvfs_scaling():
+    """Fitting at a DVFS point reproduces that point's closed-form joules
+    (not nominal's): the twin follows the operating point it was fit at.
+    No ordering between eco and turbo is asserted — eco's volt² dynamic
+    savings race leakage over its stretched wall time (DESIGN.md §11.2)."""
+    for name, point in sim.DVFS_STATES.items():
+        model, mape_pct = rm.fit_energy_from_simulator(dvfs=point)
+        assert mape_pct <= 2.0, name
+        want = sim.offload_energy(8, 4096, multicast=True, dvfs=point)
+        assert float(model.predict(8, 4096)) == pytest.approx(want, rel=0.02)

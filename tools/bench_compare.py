@@ -19,6 +19,9 @@ wall-clock-dependent.  ``--pattern`` replaces it (repeatable; prefix a
 pattern with ``~`` for lower-is-better records such as latencies).  A
 headline record present in the baseline but missing from the current run is
 a failure too — silently dropping a tracked number is how trajectories rot.
+The reverse — a headline record present only in the current run — is an
+*addition*, reported as a note: new tracked numbers join the trajectory at
+the next baseline refresh, they don't fail the gate retroactively.
 """
 
 from __future__ import annotations
@@ -86,6 +89,16 @@ def compare(current: dict, baseline: dict, *, tolerance_pct: float,
                          "baseline")
         else:
             notes.append(line)
+    # Headline records the baseline has never seen: additions, not
+    # regressions.  They join the tracked set when the baseline is next
+    # refreshed; until then they are surfaced so they can't sneak in.
+    for key in sorted(set(current) - set(baseline)):
+        name = current[key]["name"]
+        if headline(name, patterns) is None:
+            continue
+        notes.append(f"{key[0]}/{name}: NEW headline record "
+                     f"({current[key]['value']:g}) — not in baseline, "
+                     "will be tracked after a baseline refresh")
     return failures, notes
 
 

@@ -20,6 +20,9 @@ Checks (each failure is reported with the offending event):
   * non-metadata events are sorted by non-decreasing timestamp (the
     exporter's contract);
   * counter events carry numeric args;
+  * counter **series** are well-formed (DESIGN.md §11): per ``(pid, name)``
+    the samples are monotonically timestamped and live on exactly one
+    track — a series split across tids renders as two disjoint counters;
   * spans on **serial** tracks — threads named ``host`` or ``fabric``, which
     model exclusive hardware resources — do not overlap (the ``sync`` track
     may: poll-sync busy-waits legitimately overlap gap-inserted dispatch
@@ -75,6 +78,12 @@ def check_trace(path: Path) -> list[str]:
     flow_starts: set = set()
     flow_ends: set = set()
     crash_ts: dict[int, float] = {}
+    # Counter series bookkeeping: (pid, counter name) -> tids used + the
+    # running max timestamp (series must be monotone even if the global
+    # event stream sorts other phases between the samples).
+    counter_tids: dict[tuple[int, str], set] = {}
+    counter_last: dict[tuple[int, str], float] = {}
+    counter_bad_ts: set[tuple[int, str]] = set()
     last_ts: float | None = None
 
     for i, e in enumerate(events):
@@ -122,6 +131,16 @@ def check_trace(path: Path) -> list[str]:
                     for v in args.values()):
                 errors.append(f"{where}: counter without numeric args "
                               f"({_fmt(e)})")
+            ckey = (e["pid"], e["name"])
+            counter_tids.setdefault(ckey, set()).add(e["tid"])
+            prev = counter_last.get(ckey)
+            if prev is not None and ts < prev - EPS_US \
+                    and ckey not in counter_bad_ts:
+                errors.append(f"{where}: counter series {e['name']!r} on "
+                              f"pid {e['pid']} not monotone "
+                              f"({ts} after {prev})")
+                counter_bad_ts.add(ckey)   # one report per series
+            counter_last[ckey] = max(ts, prev if prev is not None else ts)
         elif ph == "s":
             flow_starts.add(e.get("id"))
         elif ph == "f":
@@ -148,6 +167,11 @@ def check_trace(path: Path) -> list[str]:
         errors.append(f"{path}: flow start id={fid!r} never finishes")
     for fid in sorted(flow_ends - flow_starts, key=repr):
         errors.append(f"{path}: flow finish id={fid!r} never started")
+    for (pid, name), tids in sorted(counter_tids.items()):
+        if len(tids) > 1:
+            errors.append(f"{path}: counter series {name!r} on pid {pid} "
+                          f"split across {len(tids)} tracks "
+                          f"(tids {sorted(tids)})")
 
     for key, track_spans in sorted(spans.items()):
         if thread_names.get(key) not in SERIAL_TRACKS:
