@@ -13,9 +13,12 @@ from repro.dse import DesignSpace, front, run_sweep, summarize
 
 
 def main(fast: bool = False) -> list[dict]:
+    # decode_attention is swept in BOTH tiers: the fused Pallas decode step
+    # (ISSUE 9) must show up in a DSE front even in the CI smoke gate.
     space = DesignSpace(
         hw_axes={} if fast else {"bus_bytes_per_cycle": [48, 96, 192]},
-        kernels=("daxpy",) if fast else ("daxpy", "fused_adamw"),
+        kernels=(("daxpy", "decode_attention") if fast
+                 else ("daxpy", "fused_adamw", "decode_attention")),
     )
     results = run_sweep(space)
     print(summarize(results, top=len(results)))
@@ -55,6 +58,14 @@ def main(fast: bool = False) -> list[dict]:
     rec("designs_swept", len(results), "designs")
     rec("pareto_front_size", len(fr), "designs")
     rec("extended_on_front", float(any(r is ext for r in fr)), "bool")
+    # The fused decode kernel as a swept design point (ISSUE 9): its own
+    # Eq.-1 refit quality and whether any decode_attention design survives
+    # to the (runtime, cost) Pareto front.
+    dec = by_name["decode_attention multicast+credit"]
+    rec("decode_attention_refit_mape_pct", dec.mape_pct, "pct")
+    rec("decode_attention_on_front",
+        float(any(r.point.kernel_name == "decode_attention" for r in fr)),
+        "bool")
 
     print(f"\nextended vs baseline at (32, 1024): +{100*(headline-1):.1f}% "
           f"(paper: +47.9%); worst refit MAPE {worst.mape_pct:.2f}% "

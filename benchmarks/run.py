@@ -135,6 +135,10 @@ def main(argv=None) -> None:
               "--mesh both)")
     records += roofline_report.records(rows)
 
+    section("Fused decode attention (kernels/decode_attention.py) — "
+            "numerics + Eq.-1 view + engine A/B")
+    records += roofline_report.decode_attention_records()
+
     total = time.time() - t0
     rec("run", "total_seconds", total, "s")
     print(f"\n(total {total:.1f}s)")
@@ -196,6 +200,34 @@ def _smoke_gate(records: list[dict]) -> None:
         # The roofline's energy-per-element view exists and is positive.
         ("roofline energy per element",
          by_name["energy_pj_per_flop_best"] > 0.0),
+        # Fused decode attention (kernels/decode_attention.py, DESIGN.md
+        # §12).  The kernel must match the unfused composition (V-cache
+        # bit-exact, K/out within a few ULP), greedy tokens must be
+        # bit-identical through the engine, and the Eq.-1 priced gain of
+        # one launch over three must never dip below parity — the
+        # deterministic form of the fused-throughput headline (wallclock
+        # interpret-mode timings are informational, not gated).
+        ("fused decode numerics", by_name["decode_attn_numerics_ok"] == 1.0),
+        ("fused decode token identity",
+         by_name["decode_attn_token_identity"] == 1.0),
+        ("fused decode sim gain >= 1",
+         by_name["decode_attn_fused_sim_gain_x"] >= 1.0),
+        ("fused decode sim gain (long ctx) >= 1",
+         by_name["decode_attn_fused_sim_gain_long_x"] >= 1.0),
+        # The registered decode_attention KernelSpec stays representable
+        # by one Eq.-1 alpha/beta/gamma model within the paper's bar, both
+        # standalone and as refit by the DSE sweep, and the fused design
+        # survives to the (runtime, cost) Pareto front.
+        ("fused decode Eq.-1 MAPE",
+         0.0 <= by_name["decode_attn_eq1_mape"] <= 2.0),
+        ("fused decode DSE refit MAPE",
+         0.0 <= by_name["decode_attention_refit_mape_pct"] <= 2.0),
+        ("fused decode on DSE front",
+         by_name["decode_attention_on_front"] == 1.0),
+        # The fused-design serving run's online calibrator tracks its own
+        # Eq.-1 prior inside the paper's bar (serve_scheduler 'fused_*').
+        ("fused serve calib MAPE",
+         0.0 <= by_name["fused_calib_mape"] <= 2.0),
         # Fault tolerance (DESIGN.md §10): recovery buys goodput back after
         # a mid-serve fabric crash, and must beat the naive-drop baseline.
         ("ft recovery attainment >= 0.9",

@@ -64,6 +64,35 @@ def fit(samples: Iterable[tuple[int, int, float]]) -> OffloadModel:
                         gamma=float(coef[2]))
 
 
+def fit_pinned(samples: Iterable[tuple[int, int, float]],
+               prior: OffloadModel) -> OffloadModel:
+    """Single-extent refit: pin what the window identifies, keep the rest.
+
+    A window whose samples all share one extent M0 makes the (1, N, N/M)
+    design rank-deficient — the window identifies only the *level* (alpha)
+    and the *at-M0 slope* (beta + gamma/M0), never how runtime trades off
+    against M.  Fit those two identifiable components by least squares and
+    inherit the unidentifiable cross-extent curvature (gamma) from the
+    prior: predictions at M0 match the window exactly (which is all the
+    window can speak for), while extent planning keeps the prior's
+    M-structure instead of a min-norm artifact.
+    """
+    samples = list(samples)
+    ms = {m for m, _, _ in samples}
+    if len(ms) != 1:
+        raise ValueError("fit_pinned requires a single-extent window")
+    ns = {n for _, n, _ in samples}
+    if len(ns) < 2:
+        raise ValueError("need >= 2 distinct N to fit level + slope")
+    (m0,) = ms
+    a = np.array([[1.0, n] for _, n, _ in samples], dtype=np.float64)
+    y = np.array([t - prior.gamma * n / m0 for _, n, t in samples],
+                 dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    return OffloadModel(alpha=float(coef[0]), beta=float(coef[1]),
+                        gamma=prior.gamma)
+
+
 def mape(model: OffloadModel, samples: Iterable[tuple[int, int, float]]) -> float:
     """Mean absolute percentage error over (M, N, t) samples (paper Eq. 2).
 

@@ -8,8 +8,10 @@ performance targets the TPU VPU (128-lane blocks staged through VMEM).
 """
 
 from . import ops, ref
-from .ops import (KERNELS, adamw_update, daxpy, get_kernel, kernel_names,
+from .ops import (KERNELS, adamw_update, daxpy, decode_attention_spec,
+                  fused_decode_attention, get_kernel, kernel_names,
                   pack_hparams, register_kernel)
 
 __all__ = ["ops", "ref", "daxpy", "adamw_update", "pack_hparams",
-           "KERNELS", "get_kernel", "register_kernel", "kernel_names"]
+           "KERNELS", "get_kernel", "register_kernel", "kernel_names",
+           "decode_attention_spec", "fused_decode_attention"]

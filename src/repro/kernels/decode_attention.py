@@ -1,0 +1,278 @@
+"""Fused Pallas decode-attention step: rope + KV scatter + attend, one launch.
+
+The unfused decode path (``models/layers.attention_block``, decode branch)
+runs four separate ops per step — rotary application, KV scatter-write,
+(de)quantization, and masked attention — each streaming the KV cache or the
+new token from HBM.  This kernel fuses them into ONE launch with ONE pass
+over the cache (grid = batch rows; each program owns its row's cache block):
+
+  * rotary rotation of q and the new k (angles precomputed outside — they
+    are O(B * D/2) and identical math for all three rope variants once
+    ``cos``/``sin`` are given; see ``models.layers.rope_cos_sin``),
+  * optional int8 per-vector quantization of the new k/v token,
+  * scatter-write at the row's own position (``len`` or ``len % slots``
+    for ring-buffered local layers — PR 3 semantics),
+  * causal/window masking + softmax + attention over the row's valid
+    prefix, skipping whole score chunks beyond ``len`` (the tail of a
+    padded cache costs nothing on the qk side).
+
+The kernel avoids every *algorithmic* source of divergence from the
+unfused path:
+
+  * qk scores have no reduction over the sequence axis, so computing them
+    chunk-by-chunk (and skipping tail chunks) never re-associates a sum;
+    skipped positions hold the same ``NEG_INF`` the unfused mask writes,
+  * the softmax runs ONCE over the full-length score vector (masked
+    entries underflow to exactly 0.0),
+  * the p@v contraction is ONE full-length einsum (chunked accumulation
+    would re-associate the float sum), in the same dtypes.
+
+What remains is the *compiler*: fused and unfused are two separately
+compiled XLA graphs, and XLA may contract FMAs or tile reductions
+differently per graph.  The enforced contract (docs/kernels.md,
+``tests/test_pallas_decode.py``) is therefore: bit-exact on single-chunk
+shapes and for the v-cache write (a pure copy) everywhere; k-cache and
+attention out within a few f32 ULP (rtol=3e-6) on multi-chunk shapes;
+greedy tokens bit-identical at the engine level (argmax absorbs ULP
+noise).  ``interpret=True`` (the default off-TPU) runs the same kernel
+body on CPU CI; on TPU the identical code lowers through Mosaic.
+
+The helpers ``_rotate``/``_quantize`` intentionally mirror
+``models.layers._rotate``/``quantize_kv`` op-for-op — they must stay
+bit-identical, and the test suite pins the pairing.  They are duplicated
+rather than imported because ``models.layers`` imports this module for the
+``fused=`` path (the import may not be circular).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Matches models.layers.NEG_INF — the mask fill value of the unfused path.
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default: run the kernel body off-TPU (CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_chunk(slots: int) -> int:
+    """Largest power-of-two score-chunk size (<=64) dividing ``slots``.
+
+    The qk loop runs ceil((len+1)/chunk) iterations, so a smaller chunk
+    skips more of a padded cache's tail; a larger chunk amortizes the
+    per-iteration dynamic-slice.  64 is the crossover on both interpret
+    mode and Mosaic for the decode shapes in benchmarks/roofline_report.
+    """
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if slots % c == 0:
+            return c
+    return 1
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """models.layers._rotate, per batch row: x (1, H, 2*W), cos/sin (1, W)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate the leading 2*cos.shape[-1] dims of x, keep the rest.
+
+    Covers all three rope variants given their precomputed angles: standard
+    and mrope rotate the full head dim, ChatGLM "half" rotates the first
+    half (models.layers.apply_rope does the same concatenation).
+    """
+    rot = 2 * cos.shape[-1]
+    if rot >= x.shape[-1]:
+        return _rotate(x, cos, sin)
+    return jnp.concatenate(
+        [_rotate(x[..., :rot], cos, sin), x[..., rot:]], axis=-1)
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """models.layers.quantize_kv, op-for-op (int8 + f32 per-vector scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _decode_kernel(*refs, quant: bool, is_ring: bool, window: int,
+                   chunk: int, slots: int):
+    """One batch row: rope -> (quantize) -> scatter -> chunked qk -> attend.
+
+    With ``input_output_aliases`` the aliased caches appear as BOTH input
+    and output refs; all reads/writes go through the output refs so the
+    scatter is visible to the attention pass in the same launch.
+    """
+    if quant:
+        (len_ref, q_ref, kn_ref, vn_ref, cos_ref, sin_ref,
+         _ki, _vi, _ksi, _vsi,
+         o_ref, kc_ref, vc_ref, ks_ref, vs_ref) = refs
+    else:
+        (len_ref, q_ref, kn_ref, vn_ref, cos_ref, sin_ref,
+         _ki, _vi, o_ref, kc_ref, vc_ref) = refs
+        ks_ref = vs_ref = None
+
+    idx = len_ref[0, 0]                              # pre-write length
+    write = jax.lax.rem(idx, slots) if is_ring else idx
+
+    cos = cos_ref[...]                               # (1, W) f32
+    sin = sin_ref[...]
+    q = _rope(q_ref[0], cos, sin)                    # (1, H, D)
+    k_new = _rope(kn_ref[0], cos, sin)               # (1, K, D)
+    v_new = vn_ref[0]                                # (1, K, D) — v is unroped
+
+    if quant:
+        kq, ksc = _quantize(k_new)
+        vq, vsc = _quantize(v_new)
+        kc_ref[0, pl.dslice(write, 1)] = kq
+        vc_ref[0, pl.dslice(write, 1)] = vq
+        ks_ref[0, pl.dslice(write, 1)] = ksc.astype(jnp.float32)
+        vs_ref[0, pl.dslice(write, 1)] = vsc.astype(jnp.float32)
+    else:
+        kc_ref[0, pl.dslice(write, 1)] = k_new.astype(kc_ref.dtype)
+        vc_ref[0, pl.dslice(write, 1)] = v_new.astype(vc_ref.dtype)
+
+    h, d = q.shape[-2], q.shape[-1]
+    kh = kn_ref.shape[-2]
+    g = h // kh
+    qg = q.reshape(1, kh, g, d)                      # K-major head groups
+
+    # qk scores, chunk-at-a-time with tail skipping: positions past the
+    # row's length stay at the NEG_INF the scratch is initialized to — the
+    # exact value the unfused mask writes — and the per-element d-dot is
+    # reduction-free along the sequence axis, so skipping is bitwise safe.
+    lens_eff = jnp.minimum(idx + 1, slots)
+    n_chunks = (lens_eff + chunk - 1) // chunk
+
+    def qk_chunk(c, s_acc):
+        start = c * chunk
+        kblk = kc_ref[0, pl.dslice(start, chunk)]    # (chunk, K, D)
+        if quant:
+            sblk = ks_ref[0, pl.dslice(start, chunk)]
+            kblk = (kblk.astype(jnp.float32) * sblk).astype(q_ref.dtype)
+        sc = jnp.einsum("qkgd,skd->kgqs", qg, kblk,
+                        preferred_element_type=jnp.float32) / math.sqrt(d)
+        return jax.lax.dynamic_update_slice(s_acc, sc, (0, 0, 0, start))
+
+    s = jax.lax.fori_loop(
+        0, n_chunks, qk_chunk,
+        jnp.full((kh, g, 1, slots), NEG_INF, jnp.float32))
+
+    # Identical mask algebra to the unfused decode_attention (windowed
+    # non-ring caches mask here; ring caches pass window=0 — every
+    # resident slot is in-window by construction).
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, slots), 3)
+    mask = pos < idx + 1
+    if window:
+        mask &= pos > idx - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                   # ONE full-length softmax
+
+    v_full = vc_ref[0]                               # (slots, K, D)
+    if quant:
+        v_full = (v_full.astype(jnp.float32)
+                  * vs_ref[0]).astype(q_ref.dtype)
+    out = jnp.einsum("kgqs,skd->qkgd", p.astype(v_full.dtype), v_full,
+                     preferred_element_type=jnp.float32)
+    o_ref[0] = out.reshape(1, h, d).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "is_ring", "chunk", "interpret"))
+def fused_decode_attention(
+    q: jax.Array,            # (B, 1, H, D) — pre-rope query
+    k_new: jax.Array,        # (B, 1, K, D) — pre-rope new key
+    v_new: jax.Array,        # (B, 1, K, D)
+    k_cache: jax.Array,      # (B, S, K, D)  [int8 when quantized]
+    v_cache: jax.Array,      # (B, S, K, D)
+    cache_len: jax.Array,    # (B,) int32 pre-write lengths (token count)
+    cos: jax.Array,          # (B, ..., W) f32 rope angles (W = rot_dim/2)
+    sin: jax.Array,
+    k_scale: jax.Array | None = None,   # (B, S, K, 1) f32 when quantized
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,         # non-ring sliding-window mask (0 = causal only)
+    is_ring: bool = False,   # ring-buffer write at len % slots
+    chunk: int | None = None,
+    interpret: bool | None = None,
+):
+    """One fused decode-attention step; returns ``(out, new caches...)``.
+
+    Plain caches return ``(out, k_cache, v_cache)``; quantized caches
+    (``k_scale is not None``) also return the updated scales.  Semantics
+    match the unfused ``models.layers.attention_block`` decode branch
+    within the numerics contract in the module docstring.
+    """
+    b, _, h, d = q.shape
+    slots = k_cache.shape[1]
+    kh = k_new.shape[2]
+    if h % kh:
+        raise ValueError(f"num_heads ({h}) must divide kv heads ({kh})")
+    quant = k_scale is not None
+    if interpret is None:
+        interpret = default_interpret()
+    if chunk is None:
+        chunk = pick_chunk(slots)
+    if slots % chunk:
+        raise ValueError(f"chunk ({chunk}) must divide cache slots ({slots})")
+
+    lens = jnp.asarray(cache_len, jnp.int32)
+    if lens.ndim == 0:
+        lens = jnp.broadcast_to(lens, (b,))
+    lens2 = lens.reshape(b, 1)
+    w = cos.shape[-1]
+    cos2 = cos.astype(jnp.float32).reshape(b, w)
+    sin2 = sin.astype(jnp.float32).reshape(b, w)
+
+    row = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    tok = pl.BlockSpec((1, 1, kh, d), lambda i: (i, 0, 0, 0))
+    cache = pl.BlockSpec((1, slots, kh, d), lambda i: (i, 0, 0, 0))
+    scale = pl.BlockSpec((1, slots, kh, 1), lambda i: (i, 0, 0, 0))
+    ang = pl.BlockSpec((1, w), lambda i: (i, 0))
+    qspec = pl.BlockSpec((1, 1, h, d), lambda i: (i, 0, 0, 0))
+
+    in_specs = [row, qspec, tok, tok, ang, ang, cache, cache]
+    inputs = [lens2, q, k_new, v_new, cos2, sin2, k_cache, v_cache]
+    out_specs = [qspec, cache, cache]
+    out_shape = [
+        jax.ShapeDtypeStruct(q.shape, q.dtype),
+        jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+        jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+    ]
+    aliases = {6: 1, 7: 2}
+    if quant:
+        in_specs += [scale, scale]
+        inputs += [k_scale, v_scale]
+        out_specs += [scale, scale]
+        out_shape += [jax.ShapeDtypeStruct(k_scale.shape, jnp.float32),
+                      jax.ShapeDtypeStruct(v_scale.shape, jnp.float32)]
+        aliases.update({8: 3, 9: 4})
+
+    kernel = functools.partial(_decode_kernel, quant=quant, is_ring=is_ring,
+                               window=int(window), chunk=chunk, slots=slots)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*inputs)
+
+
+__all__ = ["fused_decode_attention", "default_interpret", "pick_chunk",
+           "NEG_INF"]

@@ -23,6 +23,7 @@ from repro.core.simulator import DAXPY, KernelSpec
 
 from . import daxpy as _daxpy_mod
 from . import fused_adamw as _adamw_mod
+from .decode_attention import fused_decode_attention
 from .fused_adamw import pack_hparams
 
 LANE = _daxpy_mod.LANE
@@ -31,6 +32,35 @@ LANE = _daxpy_mod.LANE
 # --------------------------------------------------------------------------- #
 # Kernel registry: name -> simulator-facing KernelSpec.
 # --------------------------------------------------------------------------- #
+
+def decode_attention_spec(*, head_dim: int = 64, num_heads: int = 8,
+                          kv_heads: int = 2, cache_len: int = 256,
+                          dtype_bytes: int = 2, quant: bool = False,
+                          name: str = "decode_attention") -> KernelSpec:
+    """Offload-runtime view of the fused decode-attention step.
+
+    One *element* is one decode slot (batch row): the fused kernel streams
+    that row's K+V cache once, scatter-writes the new token, and moves the
+    q/out head vectors — so bytes/elem scales with ``cache_len * kv_heads *
+    head_dim`` and cycles/elem with the qk+pv MACs, derived from the same
+    shape knobs the model layer uses instead of hand-picked constants.
+    Quantized caches carry 1 B/value plus the amortized f32 per-vector
+    scale.  Worker cycles assume one fused MAC per cycle; the scalar host
+    core has no vector MACs and pays ~2x (same flavor of penalty as the
+    fused_adamw entry).
+    """
+    d, s, kh, h = head_dim, cache_len, kv_heads, num_heads
+    kv_bytes = (1.0 + 4.0 / d) if quant else float(dtype_bytes)
+    cache_pass = 2 * s * kh * d * kv_bytes      # one pass over K and V
+    token_write = 2 * kh * d * kv_bytes         # scatter of the new token
+    q_out = 2 * h * d * dtype_bytes             # q in + attn out
+    flops = 4 * s * h * d + 10 * s * h          # qk+pv MACs + softmax chain
+    return KernelSpec(name=name,
+                      bytes_per_elem=int(round(cache_pass + token_write
+                                               + q_out)),
+                      cycles_per_elem=flops / 2.0,
+                      host_cycles_per_elem=float(flops))
+
 
 KERNELS: dict[str, KernelSpec] = {
     # The paper's kernel: read x,y (16 B) + write y (8 B); 2.6 cy/elem/core.
@@ -49,6 +79,10 @@ KERNELS: dict[str, KernelSpec] = {
     # registers (no streamed writeback).
     "dot": KernelSpec(name="dot", bytes_per_elem=16, cycles_per_elem=1.0,
                       host_cycles_per_elem=2.5),
+    # Fused Pallas decode-attention step (kernels/decode_attention.py) at
+    # the benchmark smoke shape — coefficients derived from the attention
+    # shape, not hand-picked; see decode_attention_spec.
+    "decode_attention": decode_attention_spec(),
 }
 
 
@@ -121,4 +155,5 @@ def adamw_update(p, g, m, v, hp, *, block_rows: int = 128,
 
 
 __all__ = ["daxpy", "adamw_update", "pack_hparams", "KERNELS", "get_kernel",
-           "register_kernel", "kernel_names"]
+           "register_kernel", "kernel_names", "decode_attention_spec",
+           "fused_decode_attention"]

@@ -221,7 +221,8 @@ def serve_stream(args) -> dict:
                          pipeline=args.pipeline, buffering=args.buffering,
                          dvfs=args.dvfs,
                          tracer=tracer, residuals=residuals,
-                         faults=args.faults, fault_seed=args.fault_seed)
+                         faults=args.faults, fault_seed=args.fault_seed,
+                         fused_decode=args.fused_decode)
     _fault_report(out)
 
     if args.verbose:
@@ -334,6 +335,11 @@ def main(argv=None):
                          "deterministic first-lane ties)")
     ap.add_argument("--no-execute", action="store_true",
                     help="skip the real JAX engine (scheduler machinery only)")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="compile the decode step on the fused Pallas "
+                         "decode-attention kernel (one launch per layer, "
+                         "bit-identical tokens; DESIGN.md §12). Pairs with "
+                         "--fabric wallclock for the measured speedup")
     ap.add_argument("--fabric", choices=("simulated", "wallclock"),
                     default="simulated",
                     help="job timing source: Manticore cycle model, or the "

@@ -185,18 +185,22 @@ def make_slot_prefill_step(cfg: ModelConfig, mesh, batch_abstract, *,
 
 
 def make_decode_step(cfg: ModelConfig, mesh, specs, *,
-                     unroll_groups: bool = False) -> StepBundle:
+                     unroll_groups: bool = False,
+                     fused: bool = False) -> StepBundle:
     """specs: {"tokens": (B,1), "caches": pytree, "cache_len": scalar|(B,)}.
 
     A per-slot ``cache_len`` vector lets each batch row decode at its own
     sequence offset (continuous batching, DESIGN.md §6); a scalar keeps the
     legacy batch-wide position (every row at the same offset).
+
+    ``fused=True`` builds the step on the fused Pallas decode-attention
+    kernel (one launch per layer, bit-identical tokens — DESIGN.md §12).
     """
     ctx = make_shard_ctx(mesh)
 
     def decode_fn(params, tokens, caches, cache_len):
         logits, new_caches = model_decode(params, cfg, tokens, caches,
-                                          cache_len, ctx=ctx)
+                                          cache_len, ctx=ctx, fused=fused)
         next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
         credits = emit_credits({"logits": logits}, mesh)
         return {"next_token": next_tok, "caches": new_caches,
@@ -217,7 +221,7 @@ def make_decode_step(cfg: ModelConfig, mesh, specs, *,
         donate_argnums=(2,),   # cache updated in place
         abstract_args=(p_abs, specs["tokens"], specs["caches"],
                        specs["cache_len"]),
-        meta={"kind": "decode", "param_spec": p_spec},
+        meta={"kind": "decode", "param_spec": p_spec, "fused": fused},
     )
 
 

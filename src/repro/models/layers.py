@@ -81,14 +81,19 @@ def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
         [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """x: (B, S, H, D); positions: (B, S) or (B, S, 3) for M-RoPE."""
-    d = x.shape[-1]
+def rope_cos_sin(positions: jax.Array, d: int, cfg: ModelConfig,
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Rope angles for a head dim ``d``: cos/sin (..., S, W), f32.
+
+    Factored out of :func:`apply_rope` so the fused decode kernel
+    (``repro.kernels.decode_attention``) can take precomputed angles: all
+    three variants collapse to one in-kernel rotation of the leading
+    ``2 * W`` dims (``d // 2`` for ChatGLM's "half" variant — the angle
+    width is ``d // 4`` — and the full ``d`` otherwise).
+    """
     if cfg.rope_variant == "half":
         # ChatGLM 2D-RoPE: rotary on the first half of the head dim only.
-        rot, keep = x[..., : d // 2], x[..., d // 2:]
-        cos, sin = _rope_angles(positions, d // 4, cfg.rope_theta)
-        return jnp.concatenate([_rotate(rot, cos, sin), keep], axis=-1)
+        return _rope_angles(positions, d // 4, cfg.rope_theta)
     if cfg.rope_variant == "mrope":
         # Qwen2-VL multimodal RoPE: the d/2 frequency slots are split into
         # (t, h, w) sections, each driven by its own position stream.
@@ -102,10 +107,19 @@ def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Arra
             c, si = _rope_angles(positions[..., i], s, cfg.rope_theta)
             cos_parts.append(c)
             sin_parts.append(si)
-        cos = jnp.concatenate(cos_parts, axis=-1)
-        sin = jnp.concatenate(sin_parts, axis=-1)
-        return _rotate(x, cos, sin)
-    cos, sin = _rope_angles(positions, d // 2, cfg.rope_theta)
+        return (jnp.concatenate(cos_parts, axis=-1),
+                jnp.concatenate(sin_parts, axis=-1))
+    return _rope_angles(positions, d // 2, cfg.rope_theta)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (B, S, 3) for M-RoPE."""
+    d = x.shape[-1]
+    cos, sin = rope_cos_sin(positions, d, cfg)
+    rot = 2 * cos.shape[-1]
+    if rot < d:
+        return jnp.concatenate(
+            [_rotate(x[..., :rot], cos, sin), x[..., rot:]], axis=-1)
     return _rotate(x, cos, sin)
 
 
@@ -148,8 +162,15 @@ def chunked_attention(
     """
     b, sq, h, d = q.shape
     skv = k.shape[1]
-    k = repeat_kv(k, h)
-    v = repeat_kv(v, h)
+    kh = k.shape[2]
+    g = h // kh
+    # Grouped GQA: contract q head groups (K, H/K) against the K-headed
+    # cache directly instead of repeat_kv-materializing KV at (B, S, H, D)
+    # — H/K x less cache traffic, bit-identical scores (the per-element
+    # d-dot is unchanged; q head h reads kv head h // g, K-major, exactly
+    # the repeat_kv convention).  tests/test_pallas_decode.py pins the old
+    # repeat_kv path as the regression reference.
+    qg = q.reshape(b, sq, kh, g, d)
     scale = 1.0 / math.sqrt(d)
 
     kv_chunk = min(kv_chunk, skv)  # never pad beyond the sequence
@@ -158,8 +179,8 @@ def chunked_attention(
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kc = k.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
-    vc = v.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_chunks, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
 
     q_pos = q_offset + jnp.arange(sq)
 
@@ -167,8 +188,9 @@ def chunked_attention(
         acc, m, lse = carry
         j, (kj, vj) = inputs
         kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
-        s = jnp.einsum("bqhd,bshd->bhqs", q, kj,
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj,
                        preferred_element_type=jnp.float32) * scale
+        s = s.reshape(b, h, sq, kv_chunk)
         mask = kv_pos[None, :] <= q_pos[:, None]  # causal
         mask &= kv_pos[None, :] < skv             # padding
         if window:
@@ -178,9 +200,11 @@ def chunked_attention(
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = lse * corr + p.sum(axis=-1)
-        pv = jnp.einsum("bhqs,bshd->bqhd", p.astype(vj.dtype), vj,
-                        preferred_element_type=jnp.float32)
-        acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        pv = jnp.einsum("bkgqs,bskd->bqkgd",
+                        p.reshape(b, kh, g, sq, kv_chunk).astype(vj.dtype),
+                        vj, preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None] \
+            + pv.reshape(b, sq, h, d)
         return (acc_new, m_new, l_new), None
 
     acc0 = jnp.zeros((b, sq, h, d), jnp.float32)
@@ -207,11 +231,15 @@ def decode_attention(
     valid prefix, so slots at different sequence positions decode together in
     one step (continuous batching, DESIGN.md §6).
     """
-    b, _, h, d = q.shape
+    b, sq, h, d = q.shape
     skv = k_cache.shape[1]
-    kk = repeat_kv(k_cache, h)
-    vv = repeat_kv(v_cache, h)
-    s = jnp.einsum("bqhd,bshd->bhqs", q, kk,
+    kh = k_cache.shape[2]
+    g = h // kh
+    # Grouped GQA over (K, H/K) head groups — no repeat_kv materialization
+    # of the cache at (B, S, H, D); see chunked_attention for the bitwise
+    # argument and the regression test pinning the old path.
+    qg = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
                    preferred_element_type=jnp.float32) / math.sqrt(d)
     pos = jnp.arange(skv)
     lens = jnp.asarray(cache_len, jnp.int32)
@@ -220,11 +248,11 @@ def decode_attention(
     mask = pos[None, :] < lens[:, None]                     # (B, S)
     if window:
         mask &= pos[None, :] > lens[:, None] - 1 - window
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(vv.dtype), vv,
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
-    return out.astype(q.dtype)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -254,6 +282,7 @@ def attention_block(
     positions: jax.Array,
     window: int = 0,
     cache: dict | None = None,     # {"k","v": (B,Smax,K,D), "len": int32}
+    fused: bool = False,           # fused Pallas decode step (DESIGN.md §12)
 ) -> tuple[jax.Array, dict | None]:
     b, s, _ = x.shape
     hd = cfg.qk_head_dim
@@ -261,8 +290,12 @@ def attention_block(
     k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
     v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
     q = ctx.constrain(q, ctx.dp, None, ctx.tp, None)
-    k = apply_rope(k, positions, cfg)
-    q = apply_rope(q, positions, cfg)
+    use_fused = fused and cache is not None and s == 1
+    if not use_fused:
+        # The fused decode kernel rotates q/k in-kernel from precomputed
+        # angles; every other path ropes here as before.
+        k = apply_rope(k, positions, cfg)
+        q = apply_rope(q, positions, cfg)
 
     quant = "k_scale" in (cache or {})
 
@@ -324,26 +357,44 @@ def attention_block(
         # resident slot is in-window by construction and no window mask is
         # needed (only the not-yet-filled mask while len < slots).
         is_ring = bool(window) and slots <= window
-        write = jax.lax.rem(idx, slots) if is_ring else idx
-        rows = jnp.arange(b)
-
-        def store_row(name, val):
-            """Scatter val (B,1,K,D) at per-row positions ``write``."""
-            arr = cache[name]
+        if use_fused:
+            # One Pallas launch: rope + (quantize) + scatter + attend in a
+            # single pass over this row's cache (DESIGN.md §12).  Matches
+            # the unfused path below within the kernel's numerics contract
+            # (docs/kernels.md); the angles are the same ones apply_rope
+            # would use.
+            from repro.kernels.decode_attention import fused_decode_attention
+            cos, sin = rope_cos_sin(positions, hd, cfg)
+            res = fused_decode_attention(
+                q, k, v, cache["k"], cache["v"], idx, cos, sin,
+                cache.get("k_scale"), cache.get("v_scale"),
+                window=0 if is_ring else window, is_ring=is_ring)
             if quant:
-                qv, sc = quantize_kv(val)
-                arr = arr.at[rows, write].set(qv[:, 0])
-                scl = cache[f"{name}_scale"].at[rows, write].set(
-                    sc[:, 0].astype(jnp.float32))
-                return arr, scl
-            return arr.at[rows, write].set(val[:, 0].astype(arr.dtype)), None
+                out, k_cache, v_cache, k_scl, v_scl = res
+            else:
+                (out, k_cache, v_cache), k_scl, v_scl = res, None, None
+        else:
+            write = jax.lax.rem(idx, slots) if is_ring else idx
+            rows = jnp.arange(b)
 
-        k_cache, k_scl = store_row("k", k)
-        v_cache, v_scl = store_row("v", v)
-        k_use = load("k", k_cache, k_scl)
-        v_use = load("v", v_cache, v_scl)
-        out = decode_attention(q, k_use, v_use, idx + 1,
-                               window=0 if is_ring else window)
+            def store_row(name, val):
+                """Scatter val (B,1,K,D) at per-row positions ``write``."""
+                arr = cache[name]
+                if quant:
+                    qv, sc = quantize_kv(val)
+                    arr = arr.at[rows, write].set(qv[:, 0])
+                    scl = cache[f"{name}_scale"].at[rows, write].set(
+                        sc[:, 0].astype(jnp.float32))
+                    return arr, scl
+                return (arr.at[rows, write].set(val[:, 0].astype(arr.dtype)),
+                        None)
+
+            k_cache, k_scl = store_row("k", k)
+            v_cache, v_scl = store_row("v", v)
+            k_use = load("k", k_cache, k_scl)
+            v_use = load("v", v_cache, v_scl)
+            out = decode_attention(q, k_use, v_use, idx + 1,
+                                   window=0 if is_ring else window)
         # Keep the slot-parallel domain through the output projection: the
         # contraction over cache slots becomes a small psum instead of a
         # full cache all-gather.

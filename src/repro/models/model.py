@@ -146,7 +146,7 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
 # Blocks
 # --------------------------------------------------------------------------- #
 def _apply_block(h, bp, kind, cfg: ModelConfig, ctx: ShardCtx, *,
-                 positions, cache=None, shared=None):
+                 positions, cache=None, shared=None, fused=False):
     """One decoder block; returns (h, new_cache)."""
     if kind == "shared_attn":
         bp = shared
@@ -160,7 +160,7 @@ def _apply_block(h, bp, kind, cfg: ModelConfig, ctx: ShardCtx, *,
     a_in = rms_norm(h, bp["norm1"], cfg.norm_eps)
     a_out, new_cache = attention_block(a_in, bp["attn"], cfg, ctx,
                                        positions=positions, window=window,
-                                       cache=cache)
+                                       cache=cache, fused=fused)
     h = h + a_out
     f_in = rms_norm(h, bp["norm2"], cfg.norm_eps)
     if "moe" in bp:
@@ -172,7 +172,7 @@ def _apply_block(h, bp, kind, cfg: ModelConfig, ctx: ShardCtx, *,
 
 def _run_stack(params, h, cfg: ModelConfig, ctx: ShardCtx, *,
                positions, caches=None, cache_len=None, remat=False,
-               unroll_groups=False):
+               unroll_groups=False, fused=False):
     """Scan over full groups, then the tail. Returns (h, new_caches).
 
     ``remat`` checkpoints each group (recompute in backward — required to fit
@@ -198,7 +198,7 @@ def _run_stack(params, h, cfg: ModelConfig, ctx: ShardCtx, *,
             entry = gcache[i] if use_cache else None
             hh, new_c = _apply_block(
                 hh, gparams[i], kind, cfg, ctx, positions=positions,
-                cache=with_len(entry), shared=shared)
+                cache=with_len(entry), shared=shared, fused=fused)
             if use_cache:
                 new_c = {k: v for k, v in (new_c or {}).items() if k != "len"}
             new_entries.append(new_c if use_cache else None)
@@ -236,7 +236,7 @@ def _run_stack(params, h, cfg: ModelConfig, ctx: ShardCtx, *,
         entry = caches["tail"][i] if use_cache else None
         h, new_c = _apply_block(h, params["tail"][i], kind, cfg, ctx,
                                 positions=positions, cache=with_len(entry),
-                                shared=shared)
+                                shared=shared, fused=fused)
         if use_cache:
             new_c = {k: v for k, v in (new_c or {}).items() if k != "len"}
         new_tail.append(new_c)
@@ -406,8 +406,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, cache_len,
-                *, ctx: ShardCtx = NO_SHARD):
+                *, ctx: ShardCtx = NO_SHARD, fused: bool = False):
     """One decode step: tokens (B, 1) int32 -> (logits (B,1,V), new caches).
+
+    ``fused=True`` routes every attention block through the fused Pallas
+    decode kernel (``repro.kernels.decode_attention``) — one launch per
+    layer instead of the separate rope/scatter/attend ops, bit-identical
+    tokens (DESIGN.md §12).
 
     ``cache_len`` is the number of tokens already in the cache; the new
     token is written at that index (ring-buffered for local layers).  It is
@@ -424,7 +429,7 @@ def decode_step(params, cfg: ModelConfig, tokens, caches, cache_len,
         lens = jnp.broadcast_to(lens, (b,))
     positions = lens[:, None]                       # (B, 1) per-slot position
     h, new_caches = _run_stack(params, h, cfg, ctx, positions=positions,
-                               caches=caches, cache_len=lens)
+                               caches=caches, cache_len=lens, fused=fused)
     return logits_from_hidden(params, h, cfg, ctx), new_caches
 
 

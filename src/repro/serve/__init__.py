@@ -87,8 +87,13 @@ def serve_workload(
     residuals=None,
     faults=None,
     fault_seed: int | None = None,
+    fused_decode: bool = False,
 ) -> dict:
     """Run the full serving stack on a synthetic open-loop workload.
+
+    ``fused_decode=True`` compiles the engine's decode step on the fused
+    Pallas decode-attention kernel (one launch per layer; bit-identical
+    tokens — DESIGN.md §12).  Only meaningful with ``execute=True``.
 
     ``faults`` attaches a :class:`repro.runtime.fault.FaultInjector` (or a
     ``--faults`` spec string) against lane 0: stalls freeze the clock, skew
@@ -203,7 +208,8 @@ def serve_workload(
         spec = dataclasses.replace(spec, vocab_size=cfg.vocab_size)
         max_len = max(spec.prompt_lens) + max(spec.gen_lens)
         engine = ServingEngine(arch, reduced=reduced, max_batch=max_batch,
-                               max_len=max_len, mesh_shape=mesh_shape)
+                               max_len=max_len, mesh_shape=mesh_shape,
+                               fused_decode=fused_decode)
         if fabric == "wallclock":
             # Compile outliers must not enter the measured step times the
             # calibrator fits (see ServingEngine.warmup).

@@ -77,7 +77,8 @@ class ServingEngine:
     """Compiled prefill/decode steps over fixed request slots."""
 
     def __init__(self, arch: str, *, reduced: bool = True, max_batch: int = 4,
-                 max_len: int = 64, mesh_shape=(1, 1), param_seed: int = 0):
+                 max_len: int = 64, mesh_shape=(1, 1), param_seed: int = 0,
+                 fused_decode: bool = False):
         import jax
         import jax.numpy as jnp
         from repro.configs import get_config
@@ -97,6 +98,9 @@ class ServingEngine:
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        # Fused Pallas decode step (DESIGN.md §12): same tokens, one kernel
+        # launch per layer instead of separate rope/scatter/attend ops.
+        self.fused_decode = fused_decode
         self.mesh = make_host_mesh(*mesh_shape)
         self.dispatcher = MulticastDispatcher()
         self.sync = CreditCounterSync(self.mesh)
@@ -118,7 +122,7 @@ class ServingEngine:
                 "caches": caches_abs,
                 # Per-slot cache lengths: each row decodes at its own offset.
                 "cache_len": jax.ShapeDtypeStruct((max_batch,), jnp.int32),
-            })
+            }, fused=fused_decode)
             self._dec_jit = jax.jit(
                 dec.fn, in_shardings=dec.in_shardings,
                 out_shardings=dec.out_shardings,

@@ -12,9 +12,17 @@ is linear in its coefficients with features (1, N, N/M)).
 
 Guard rails:
 
-  * before ``min_samples`` observations — or while the window lacks M / N
-    diversity (the design matrix would be rank-deficient: with a single M
-    the N and N/M columns are collinear) — the calibrator serves its prior,
+  * before ``min_samples`` observations — or while the window lacks N
+    diversity — the calibrator serves its prior,
+  * a single-M window makes the (1, N, N/M) design rank-deficient (the N
+    and N/M columns are collinear), so the full fit is never attempted.
+    While the served model stays inside the Eq.-2 bar the prior keeps
+    serving; once it drifts past ``PIN_TRIGGER_MAPE_PCT`` the calibrator
+    falls back to a *pinned* fit (``runtime_model.fit_pinned``): the
+    window-identifiable level and at-M slope are refit, the cross-extent
+    gamma is inherited from the prior.  This rescues kernels whose
+    grid-fit prior mispredicts the serving regime (e.g. the fused decode
+    step's small-N jobs, DESIGN.md §12) when the planner pins one extent,
   * refits are batched (every ``refit_interval`` observations) so the
     scheduler's hot path stays O(1),
   * a fit whose window MAPE (Eq. 2) is worse than the prior's is discarded
@@ -37,7 +45,7 @@ class CalibrationSnapshot:
     alpha: float
     beta: float
     gamma: float
-    source: str            # "prior" | "fitted"
+    source: str            # "prior" | "fitted" | "pinned"
     n_samples: int
     n_observed: int        # total observations ever (window may have evicted)
     window_mape_pct: float | None
@@ -54,6 +62,11 @@ class CalibrationSnapshot:
                 "window_mape_pct": self.window_mape_pct,
                 "energy_mape_pct": self.energy_mape_pct,
                 "energy_n_samples": self.energy_n_samples}
+
+
+#: Eq.-2 bar past which a single-M window's prior is considered drifted and
+#: the pinned fallback fit engages (see module docstring).
+PIN_TRIGGER_MAPE_PCT = 2.0
 
 
 class OnlineCalibrator:
@@ -120,9 +133,25 @@ class OnlineCalibrator:
 
     def _refit(self, now: float = 0.0) -> None:
         self._since_refit = 0
-        if len(self._samples) < self.min_samples or not self._diverse():
+        if len(self._samples) < self.min_samples:
             return
-        fitted = runtime_model.fit(self._samples)
+        if self._diverse():
+            fitted = runtime_model.fit(self._samples)
+            source = "fitted"
+        else:
+            ns = {n for _, n, _ in self._samples}
+            ms = {m for m, _, _ in self._samples}
+            if len(ms) != 1 or len(ns) < 2:
+                return
+            # Single-M window: the full fit is rank-deficient.  Keep the
+            # prior while it stays inside the Eq.-2 bar; past that the
+            # pinned fallback refits the identifiable components (level +
+            # at-M slope) and inherits gamma from the prior.
+            served = runtime_model.mape(self._model, self._samples)
+            if served <= PIN_TRIGGER_MAPE_PCT:
+                return
+            fitted = runtime_model.fit_pinned(self._samples, self.prior)
+            source = "pinned"
         before = self._model
         # Accept only a model that explains the window at least as well as
         # whatever is currently being served (prior included).
@@ -131,7 +160,7 @@ class OnlineCalibrator:
         accepted = fitted_mape <= served_mape
         if accepted:
             self._model = fitted
-            self._source = "fitted"
+            self._source = source
             self.n_refits += 1
         if self.tracer is not None:
             self.tracer.instant(

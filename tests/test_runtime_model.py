@@ -48,6 +48,33 @@ def test_fit_requires_enough_samples():
         rm.fit([(1, 10, 5.0), (2, 10, 4.0)])
 
 
+@given(alpha=coeff, beta=coeff, gamma=coeff)
+@settings(max_examples=25)
+def test_fit_pinned_exact_at_observed_extent(alpha, beta, gamma):
+    """Single-extent window: the pinned fit matches the window exactly at
+    M0 (the identifiable level + at-M0 slope) whatever gamma the prior
+    contributes — the prior-gamma offset is absorbed into beta."""
+    truth = rm.OffloadModel(alpha, beta, gamma)
+    prior = rm.OffloadModel(alpha * 3 + 1, beta * 2 + 1, gamma * 5 + 1)
+    m0 = 8
+    samples = [(m0, n, float(truth.predict(m0, n)))
+               for n in (32, 64, 256, 1024)]
+    pinned = rm.fit_pinned(samples, prior)
+    assert pinned.gamma == prior.gamma
+    for _, n, t in samples:
+        assert float(pinned.predict(m0, n)) == pytest.approx(t, rel=1e-6)
+    # At-M0 slope is identified: beta + gamma/m0 is preserved.
+    assert pinned.beta + pinned.gamma / m0 == pytest.approx(
+        beta + gamma / m0, rel=1e-5, abs=1e-5)
+
+
+def test_fit_pinned_rejects_multi_extent_and_single_n():
+    with pytest.raises(ValueError):
+        rm.fit_pinned([(1, 10, 5.0), (2, 20, 4.0)], rm.PAPER_MODEL)
+    with pytest.raises(ValueError):
+        rm.fit_pinned([(4, 10, 5.0), (4, 10, 5.1)], rm.PAPER_MODEL)
+
+
 def test_mape_zero_on_self():
     model = rm.OffloadModel(367, 0.25, 0.325)
     samples = [(m, n, float(model.predict(m, n)))

@@ -104,15 +104,53 @@ def test_calibrator_converges_under_noise():
     assert snap.window_mape_pct <= 5.0
 
 
-def test_calibrator_serves_prior_without_m_diversity():
-    # A single M makes the (1, N, N/M) design rank-deficient: keep the prior.
+def test_calibrator_pins_single_m_window_when_prior_drifts():
+    """A single M makes the (1, N, N/M) design rank-deficient: the full
+    fit is never attempted.  Once the prior drifts past the Eq.-2 bar the
+    pinned fallback engages — level and at-M slope refit from the window,
+    gamma inherited from the prior — and is exact at the pinned extent."""
     truth = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
     cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=4,
                            refit_interval=1)
     for n in (256, 512, 768, 1024, 2048, 4096):
         cal.observe(8, n, float(truth.predict(8, n)))
+    snap = cal.snapshot()
+    assert snap.source == "pinned"
+    assert snap.gamma == PAPER_MODEL.gamma        # inherited, not fitted
+    assert snap.window_mape_pct < 1e-9
+    # The at-M slope absorbs the gamma misfit: predictions at the pinned
+    # extent are exact even at job sizes the window never saw.
+    for n in (37, 300, 5000):
+        assert float(cal.model.predict(8, n)) == \
+            pytest.approx(float(truth.predict(8, n)))
+
+
+def test_calibrator_keeps_healthy_prior_on_single_m_window():
+    """Pinning is a drift fallback, not an optimization: a prior inside
+    the Eq.-2 bar keeps serving without M diversity."""
+    rng = np.random.default_rng(0)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=4,
+                           refit_interval=1)
+    for n in (256, 512, 768, 1024, 2048, 4096):
+        t = float(PAPER_MODEL.predict(8, n)) * (1 + rng.normal(0.0, 0.005))
+        cal.observe(8, n, t)
     assert cal.snapshot().source == "prior"
     assert cal.model is PAPER_MODEL
+
+
+def test_calibrator_upgrades_pinned_fit_once_window_diversifies():
+    """M diversity arriving after a pinned fit unlocks the full refit,
+    which recovers the true cross-extent coefficients."""
+    truth = OffloadModel(alpha=400.0, beta=0.3, gamma=0.5)
+    cal = OnlineCalibrator(prior=PAPER_MODEL, min_samples=4,
+                           refit_interval=1)
+    for n in (256, 512, 768, 1024):
+        cal.observe(8, n, float(truth.predict(8, n)))
+    assert cal.snapshot().source == "pinned"
+    _observe_grid(cal, truth)
+    snap = cal.snapshot()
+    assert snap.source == "fitted"
+    assert snap.gamma == pytest.approx(0.5)
 
 
 def test_calibrator_sliding_window_tracks_drift():
