@@ -35,7 +35,7 @@ Prints human summaries and returns machine-readable records
 
 from __future__ import annotations
 
-from repro.serve import WorkloadSpec, serve_fleet
+from repro.serve import FleetConfig, WorkloadSpec, serve_fleet
 
 #: The heterogeneous A/B fleet (same shape as benchmarks/fleet_router.py).
 FT_FLEET = (32, 8, 8)
@@ -93,15 +93,16 @@ def main(fast: bool = False, smoke: bool = False) -> list[dict]:
     records: list[dict] = []
     spec = SMOKE_SPEC if smoke else FT_SPEC
 
-    baseline = serve_fleet(spec, fleet=FT_FLEET, router="model",
-                           pipeline=True)
+    baseline = serve_fleet(spec, config=FleetConfig(
+                   fleet=FT_FLEET, router="model", pipeline=True))
     print(f"--- fault-free baseline ({spec.num_requests} requests) ---")
     print(baseline["metrics"].format_summary())
 
     arms = {}
     for mode in ("restore", "drop"):
-        out = serve_fleet(spec, fleet=FT_FLEET, router="model",
-                          pipeline=True, faults=FT_FAULTS, recovery=mode)
+        out = serve_fleet(spec, config=FleetConfig(
+                  fleet=FT_FLEET, router="model", pipeline=True,
+                                    faults=FT_FAULTS, recovery=mode))
         arms[mode] = out
         s = out["metrics"].summary()
         ft = s["faults"]

@@ -33,7 +33,8 @@ import time
 
 from repro.dse.fleet import (FleetSpace, fleet_front, summarize_fleets,
                              sweep_fleets)
-from repro.serve import WorkloadSpec, serve_fleet, serve_workload
+from repro.serve import (FleetConfig, ServeConfig, WorkloadSpec,
+                         serve_fleet, serve_workload)
 
 #: The straggler trace of the single-fabric serving A/B — the identity
 #: check replays it through a 1x32 fleet (benchmarks/serve_scheduler.py).
@@ -66,7 +67,8 @@ def run_ab(spec: WorkloadSpec, records: list[dict]) -> dict:
     outs = {}
     for policy in POLICIES:
         t0 = time.perf_counter()
-        out = serve_fleet(spec, fleet=AB_FLEET, router=policy, pipeline=True)
+        out = serve_fleet(spec, config=FleetConfig(
+                  fleet=AB_FLEET, router=policy, pipeline=True))
         dt = time.perf_counter() - t0
         s = out["metrics"].summary()
         outs[policy] = s
@@ -131,8 +133,10 @@ def run_ab(spec: WorkloadSpec, records: list[dict]) -> dict:
 
 def run_identity(spec: WorkloadSpec, records: list[dict]) -> bool:
     """1x32 fleet vs the single-fabric pipelined path: must match exactly."""
-    single = serve_workload(spec, execute=False, pipeline=True)
-    fleet = serve_fleet(spec, fleet=(32,), router="model", pipeline=True)
+    single = serve_workload(spec, config=ServeConfig(
+                 execute=False, pipeline=True))
+    fleet = serve_fleet(spec, config=FleetConfig(
+                fleet=(32,), router="model", pipeline=True))
     ss = single["metrics"].summary()
     fs = fleet["lanes"][0]["metrics"].summary()
     identical = ss == fs and all(
@@ -146,8 +150,8 @@ def run_identity(spec: WorkloadSpec, records: list[dict]) -> bool:
     # Energy defaults are inert (DESIGN.md §11): leaving ``dvfs`` unset
     # must price exactly the nominal operating point — same joules, same
     # everything — so the energy axis cannot drift the default path.
-    nominal = serve_workload(spec, execute=False, pipeline=True,
-                             dvfs="nominal")
+    nominal = serve_workload(spec, config=ServeConfig(
+                  execute=False, pipeline=True, dvfs="nominal"))
     delta = abs(nominal["metrics"].energy_j - single["metrics"].energy_j)
     print(f"--- default vs explicit nominal DVFS: energy delta {delta:g} J "
           f"({single['metrics'].energy_j:.3e} J total) ---")

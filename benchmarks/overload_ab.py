@@ -1,0 +1,163 @@
+"""Overload A/B: session affinity + tenant classes under 2x overload.
+
+The DESIGN.md §13 headline experiment.  One bursty multi-tenant trace —
+MMPP arrivals, three tenants across the premium/standard/batch SLO
+classes, 4-turn sessions whose later prompts re-send the conversation
+context — is served on the heterogeneous (16, 8, 8) fleet at roughly
+twice its sustainable rate, three ways:
+
+  * **affinity** — model router with the session-affinity term: each
+    fabric keeps a prefix-KV ``PrefixStore``; warm hits skip the resident
+    context at prefill, cold-but-cached prefixes may be *handed off* as a
+    memcpy-priced KV pull.  Tenant classes are live: priority drain,
+    premium preemption, batch/standard shedding.
+  * **no-affinity** — identical config minus the prefix stores: every
+    turn re-prefills its full cumulative context.  The delta is pure
+    prefix reuse.
+  * **round-robin** — the placement-blind baseline: rr routing, no
+    affinity (same tenant-class machinery).
+
+Headline records (deterministic per seed, virtual-cycle domain):
+
+  * ``overload_affinity_goodput`` / ``overload_noaff_goodput`` /
+    ``overload_rr_goodput`` — goodput (SLO-met completions/s).  The smoke
+    gate requires affinity to *strictly dominate* no-affinity on goodput
+    AND p99 latency.
+  * ``overload_affinity_hit_rate`` — warm-hit fraction of session lookups
+    (gated >= 0.5: the affinity machinery is genuinely exercised).
+  * ``overload_premium_attainment`` vs ``overload_batch_attainment`` —
+    graceful degradation: under 2x overload the premium class stays near
+    its SLO while shed batch traffic absorbs the loss.
+  * ``overload_affinity_off_identity`` — 1.0 iff the no-affinity arm is
+    byte-identical when invoked through the deprecated kwarg shim (the
+    ServeConfig/FleetConfig redesign changes the API, never the numbers).
+
+Prints human summaries and returns machine-readable records
+(section, name, value, unit) for ``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+from repro.serve import FleetConfig, WorkloadSpec, serve_fleet
+
+#: Heterogeneous big+little fleet, deliberately smaller than the router
+#: A/B's (32, 8, 8) so the trace below genuinely overloads it.
+OV_FLEET = (16, 8, 8)
+#: Shed caps per tenant-class priority: batch beyond 4 waiting, standard
+#: beyond 24; premium is never shed.
+OV_SHED = {1: 24, 2: 4}
+#: Bursty multi-tenant session trace at ~2x the fleet's sustainable rate:
+#: MMPP bursts, 4-turn sessions (cumulative context), three tenants cycled
+#: over premium/standard/batch.
+OV_SPEC = WorkloadSpec(num_requests=288, rate_rps=1_200_000.0,
+                       prompt_lens=(256, 512, 768), gen_lens=(8, 16, 32),
+                       arrival="mmpp", turns=4,
+                       think_time_s=(2e-6, 8e-6), tenants=3,
+                       tenant_classes=("premium", "standard", "batch"),
+                       infeasible_fraction=0.0, seed=13)
+#: Tiny-extent variant for the CI smoke tier: same shape, fewer sessions,
+#: and a deeper (~4x) overload — with only 24 sessions the affinity delta
+#: must clear per-request noise, which it does when the queue is saturated.
+SMOKE_SPEC = WorkloadSpec(num_requests=96, rate_rps=2_400_000.0,
+                          prompt_lens=(256, 512, 768), gen_lens=(8, 16, 32),
+                          arrival="mmpp", turns=4,
+                          think_time_s=(2e-6, 8e-6), tenants=3,
+                          tenant_classes=("premium", "standard", "batch"),
+                          infeasible_fraction=0.0, seed=13)
+
+
+def _rec(records, name, value, unit):
+    records.append({"section": "overload_ab", "name": name,
+                    "value": float(value), "unit": unit})
+
+
+def _arm_config(*, affinity: bool, router: str = "model") -> FleetConfig:
+    return FleetConfig(fleet=OV_FLEET, router=router, pipeline=True,
+                       affinity=affinity, priority=True, preempt=True,
+                       shed_depth=OV_SHED)
+
+
+def _class_attainment(out) -> dict[int, float]:
+    """Completed share per tenant-class priority (0=premium .. 2=batch)."""
+    tot: dict[int, int] = {}
+    done: dict[int, int] = {}
+    for r in out["requests"]:
+        tot[r.priority] = tot.get(r.priority, 0) + 1
+        if r.t_done is not None:
+            done[r.priority] = done.get(r.priority, 0) + 1
+    return {p: done.get(p, 0) / tot[p] for p in sorted(tot)}
+
+
+def _identity(a, b) -> float:
+    """1.0 iff both runs completed the same requests at the same cycles."""
+    ka = [(r.rid, r.t_done, r.slo_met, r.state.value) for r in a["requests"]]
+    kb = [(r.rid, r.t_done, r.slo_met, r.state.value) for r in b["requests"]]
+    return 1.0 if ka == kb else 0.0
+
+
+def main(fast: bool = False, smoke: bool = False) -> list[dict]:
+    del fast  # every experiment here is simulated (no subprocess tier)
+    records: list[dict] = []
+    spec = SMOKE_SPEC if smoke else OV_SPEC
+
+    arms = {}
+    for name, cfg in [("affinity", _arm_config(affinity=True)),
+                      ("noaff", _arm_config(affinity=False)),
+                      ("rr", _arm_config(affinity=False, router="rr"))]:
+        out = serve_fleet(spec, config=cfg)
+        arms[name] = out
+        s = out["metrics"].summary()
+        print(f"--- {name}: router={cfg.router}, affinity={cfg.affinity} "
+              f"({spec.num_requests} requests @ {spec.rate_rps:.0f} rps) ---")
+        print(out["metrics"].format_summary())
+        _rec(records, f"overload_{name}_goodput", s["goodput_rps"], "rps")
+        _rec(records, f"overload_{name}_p99_us", s["latency_us"]["p99"],
+             "us")
+
+    sa = arms["affinity"]["metrics"].summary()
+    sn = arms["noaff"]["metrics"].summary()
+    pfx = sa["prefix"]
+    lookups = pfx["hits"] + pfx["misses"]
+    hit_rate = pfx["hits"] / lookups if lookups else 0.0
+    att = _class_attainment(arms["affinity"])
+    gain = (sa["goodput_rps"] / sn["goodput_rps"] - 1.0) * 100.0
+    p99_delta = (sa["latency_us"]["p99"] / sn["latency_us"]["p99"]
+                 - 1.0) * 100.0
+    print(f"--- affinity vs off: goodput {gain:+.1f}%, p99 {p99_delta:+.1f}%"
+          f"; hit rate {hit_rate:.2f} ({pfx['hit_tokens']} tokens skipped, "
+          f"{pfx['handoffs']} handoffs, {pfx['preempted']} preempted) ---")
+    print(f"--- class attainment under overload: "
+          + ", ".join(f"priority {p}: {v:.2f}" for p, v in att.items())
+          + " ---")
+
+    # The deprecated kwarg path must produce the identical run (satellite
+    # regression for the ServeConfig/FleetConfig shim).  The shim warns by
+    # design; the benchmark itself must stay DeprecationWarning-free, so
+    # the warning is captured locally.
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = serve_fleet(spec, fleet=OV_FLEET, router="model",
+                             pipeline=True, affinity=False, priority=True,
+                             preempt=True, shed_depth=OV_SHED)
+    identity = _identity(arms["noaff"], legacy)
+    print(f"--- kwarg-shim identity vs config path: "
+          f"{'OK' if identity else 'MISMATCH'} ---")
+
+    _rec(records, "overload_affinity_vs_off_gain_pct", gain, "pct")
+    _rec(records, "overload_affinity_vs_off_p99_delta", p99_delta, "pct")
+    _rec(records, "overload_affinity_hit_rate", hit_rate, "fraction")
+    _rec(records, "overload_affinity_handoffs", pfx["handoffs"], "jobs")
+    _rec(records, "overload_preempted", pfx["preempted"], "requests")
+    _rec(records, "overload_premium_attainment", att.get(0, 0.0),
+         "fraction")
+    _rec(records, "overload_standard_attainment", att.get(1, 0.0),
+         "fraction")
+    _rec(records, "overload_batch_attainment", att.get(2, 0.0), "fraction")
+    _rec(records, "overload_affinity_off_identity", identity, "bool")
+    return records
+
+
+if __name__ == "__main__":
+    main()

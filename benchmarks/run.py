@@ -118,6 +118,11 @@ def main(argv=None) -> None:
     from benchmarks import fault_tolerance
     records += fault_tolerance.main(fast=args.fast, smoke=args.smoke)
 
+    section("Overload A/B (repro.serve, DESIGN.md §13) — session affinity "
+            "+ tenant classes under 2x overload")
+    from benchmarks import overload_ab
+    records += overload_ab.main(fast=args.fast, smoke=args.smoke)
+
     if not args.fast:
         section("Measured dispatch/sync scaling on host devices (us)")
         from benchmarks import dispatch_microbench
@@ -241,6 +246,28 @@ def _smoke_gate(records: list[dict]) -> None:
         # The checkpoint-restore path is genuinely exercised (>= 1 Eq.-1
         # priced KV restore), not bypassed by all-queued orphans.
         ("ft restore exercised", by_name["ft_restore_jobs"] >= 1.0),
+        # Overload A/B (DESIGN.md §13): session affinity must STRICTLY
+        # dominate the affinity-off arm on both headline metrics of the
+        # bursty multi-tenant trace — goodput AND p99 latency.  Re-sent
+        # conversation context is real work; skipping it must show up.
+        ("overload affinity > off goodput",
+         by_name["overload_affinity_goodput"]
+         > by_name["overload_noaff_goodput"]),
+        ("overload affinity < off p99",
+         by_name["overload_affinity_p99_us"]
+         < by_name["overload_noaff_p99_us"]),
+        # The affinity machinery is genuinely exercised: at least half of
+        # the session lookups land a warm prefix hit.
+        ("overload affinity hit rate >= 0.5",
+         by_name["overload_affinity_hit_rate"] >= 0.5),
+        # Graceful degradation: under 2x overload the premium class still
+        # completes >= 90% of its traffic (shed falls on lower classes).
+        ("overload premium attainment >= 0.9",
+         by_name["overload_premium_attainment"] >= 0.9),
+        # API redesign invariant: the deprecated kwarg shim reproduces the
+        # config-object run byte-identically (affinity off on both sides).
+        ("overload kwarg-shim identity",
+         by_name["overload_affinity_off_identity"] == 1.0),
     ]
     failed = [name for name, ok in checks if not ok]
     print(f"smoke gate: {len(checks) - len(failed)}/{len(checks)} checks ok")

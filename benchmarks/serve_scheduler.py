@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import time
 
-from repro.serve import WorkloadSpec, serve_workload
+from repro.serve import ServeConfig, WorkloadSpec, serve_workload
 
 #: The A/B trace: heavy traffic with straggler-y generation lengths.
 AB_SPEC = WorkloadSpec(num_requests=512, rate_rps=2e6,
@@ -95,7 +95,7 @@ def main(fast: bool = False, smoke: bool = False) -> list[dict]:
     us_per_job = {}
     for prefix, mode, kwargs in AB_MODES:
         t0 = time.perf_counter()
-        out = serve_workload(spec, execute=False, **kwargs)
+        out = serve_workload(spec, config=ServeConfig(execute=False, **kwargs))
         dt = time.perf_counter() - t0
         print(f"--- {mode} ({spec.num_requests} requests, "
               "simulated fabric) ---")
@@ -146,8 +146,8 @@ def main(fast: bool = False, smoke: bool = False) -> list[dict]:
                                kernel_name="decode_attention",
                                buffering="double")
     t0 = time.perf_counter()
-    out = serve_workload(FUSED_SPEC, execute=False, pipeline=True,
-                         design=fused_design)
+    out = serve_workload(FUSED_SPEC, config=ServeConfig(
+              execute=False, pipeline=True, design=fused_design))
     dt = time.perf_counter() - t0
     print(f"--- pipelined on the fused decode_attention design point "
           f"({FUSED_SPEC.num_requests} requests, simulated fabric, "
@@ -164,8 +164,8 @@ def main(fast: bool = False, smoke: bool = False) -> list[dict]:
         spec = WorkloadSpec(num_requests=24, rate_rps=2e6,
                             gen_lens=(4, 8), seed=7)
         t0 = time.perf_counter()
-        out = serve_workload(spec, arch="chatglm3-6b", execute=True,
-                             max_batch=4)
+        out = serve_workload(spec, config=ServeConfig(
+                  arch="chatglm3-6b", execute=True, max_batch=4))
         dt = time.perf_counter() - t0
         print("--- engine-attached (24 requests, chatglm3-6b reduced, "
               "continuous) ---")

@@ -15,7 +15,7 @@
 
 from repro.dse import (DesignSpace, deadline_region, front, run_sweep,
                        summarize)
-from repro.serve import WorkloadSpec, serve_workload
+from repro.serve import ServeConfig, WorkloadSpec, serve_workload
 
 MS = [1, 2, 4, 8, 16, 32]
 DEADLINE, DEADLINE_N = 700.0, 1024
@@ -59,8 +59,8 @@ def main():
 
     # 4. Serve the winner with its own refitted model.
     print(f"\n== Serving the winner ({winner.point.name}) ==")
-    out = serve_workload(WorkloadSpec(num_requests=96, seed=5),
-                         execute=False, design=winner.point)
+    out = serve_workload(WorkloadSpec(num_requests=96, seed=5), config=ServeConfig(
+              execute=False, design=winner.point))
     snap = out["calibration"]
     print(out["metrics"].format_summary())
     print(f"scheduler model [{snap.source}]: t̂(M,N) = {snap.alpha:.1f} "

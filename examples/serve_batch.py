@@ -10,7 +10,7 @@ on the same open-loop trace (DESIGN.md §6).
 """
 
 from repro.launch.serve import serve
-from repro.serve import WorkloadSpec, serve_workload
+from repro.serve import ServeConfig, WorkloadSpec, serve_workload
 
 
 def main():
@@ -31,8 +31,8 @@ def main():
                         gen_lens=(4, 16, 64), seed=7)
     print("\ncontinuous batching A/B (256 requests, simulated fabric):")
     for wave_boundary, name in ((True, "wave-boundary"), (False, "mid-wave")):
-        s = serve_workload(spec, execute=False,
-                           wave_boundary=wave_boundary)["metrics"].summary()
+        s = serve_workload(spec, config=ServeConfig(
+                execute=False, wave_boundary=wave_boundary))["metrics"].summary()
         print(f"  {name:>13}: {s['throughput_rps']:,.0f} req/s, "
               f"p99 {s['latency_us']['p99']:.1f} us, "
               f"occupancy {100 * s['slot_occupancy']['mean']:.0f}%, "

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Iterator, Sequence
 
 from repro.core import simulator as sim
+from repro.serve import FleetConfig
 from repro.serve.fleet import ROUTER_POLICIES, serve_fleet
 from repro.serve.workload import WorkloadSpec
 
@@ -205,9 +206,9 @@ def evaluate_fleet(design: FleetDesign, spec: WorkloadSpec, *,
                    pipeline: bool = True,
                    jitter_pct: float = 1.0) -> FleetResult:
     """Serve one composition on the trace; extract the fleet objectives."""
-    out = serve_fleet(spec, fleet=design.sizes, router=design.router,
-                      dvfs=design.dvfs,
-                      pipeline=pipeline, jitter_pct=jitter_pct)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=design.sizes, router=design.router, dvfs=design.dvfs,
+                            pipeline=pipeline, jitter_pct=jitter_pct))
     s = out["metrics"].summary()
     mapes = [snap.window_mape_pct for snap in out["calibrations"]
              if snap.window_mape_pct is not None]

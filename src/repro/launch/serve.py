@@ -146,33 +146,87 @@ def _fault_report(out) -> None:
               f"{len(out.get('dropped', []))} undeliverable dropped")
 
 
+def _parse_shed(spec: str | None) -> dict | None:
+    """``'1:8,2:2'`` -> ``{1: 8, 2: 2}`` (tenant-class priority -> backlog
+    cap at which the class is shed under overload, DESIGN.md §13)."""
+    if not spec:
+        return None
+    out = {}
+    for kv in spec.split(","):
+        k, _, v = kv.partition(":")
+        out[int(k)] = int(v)
+    return out
+
+
+def build_spec(args):
+    """The ONE place argv becomes a ``WorkloadSpec`` (trace shape only —
+    serving knobs go through :func:`build_serve_config` /
+    :func:`build_fleet_config`)."""
+    from repro.serve import WorkloadSpec
+    return WorkloadSpec(
+        num_requests=args.requests,
+        rate_rps=args.rate,
+        slo_fraction=args.slo_fraction,
+        seed=args.seed,
+        arrival=args.workload,
+        cv=args.cv,
+        length_dist=args.length_dist,
+        turns=args.sessions,
+        think_time_s=tuple(args.think_time),
+        tenants=args.tenants,
+        tenant_classes=tuple(
+            s for s in args.tenant_classes.split(",") if s),
+    )
+
+
+def build_serve_config(args, tracer=None, residuals=None):
+    """The ONE place argv becomes a ``ServeConfig`` (single-fabric mode)."""
+    from repro.serve import ServeConfig
+    return ServeConfig(
+        arch=args.arch, reduced=args.reduced,
+        execute=not args.no_execute, max_batch=args.max_batch,
+        fabric=args.fabric, wave_boundary=args.wave_boundary,
+        pipeline=args.pipeline, buffering=args.buffering, dvfs=args.dvfs,
+        tracer=tracer, residuals=residuals,
+        faults=args.faults, fault_seed=args.fault_seed,
+        fused_decode=args.fused_decode,
+        affinity=args.affinity, prefix_capacity=args.prefix_capacity,
+        priority=args.priority, preempt=args.preempt,
+        shed_depth=_parse_shed(args.shed))
+
+
+def build_fleet_config(args, tracer=None, residuals=None):
+    """The ONE place argv becomes a ``FleetConfig`` (``--fleet`` mode)."""
+    from repro.serve import FleetConfig
+    return FleetConfig(
+        fleet=tuple(int(s) for s in args.fleet.split(",") if s),
+        router=args.router, objective=args.router_objective,
+        arch=args.arch, reduced=args.reduced,
+        execute=not args.no_execute, max_batch=args.max_batch,
+        wave_boundary=args.wave_boundary, pipeline=args.pipeline,
+        buffering=args.buffering, dvfs=args.dvfs,
+        tracer=tracer, residuals=residuals,
+        faults=args.faults, fault_seed=args.fault_seed,
+        recovery=args.recovery, tie_seed=args.tie_seed,
+        affinity=args.affinity, prefix_capacity=args.prefix_capacity,
+        priority=args.priority, preempt=args.preempt,
+        shed_depth=_parse_shed(args.shed))
+
+
 def serve_fleet_stream(args) -> dict:
     """Drive the multi-fabric fleet (DESIGN.md §8) on the open-loop trace."""
-    from repro.serve import WorkloadSpec, serve_fleet
+    from repro.serve import serve_fleet
 
-    sizes = tuple(int(s) for s in args.fleet.split(",") if s)
     if args.fabric != "simulated":
         raise SystemExit(
             "--fleet serves on the simulated cycle domain only: routing "
             "scores per-fabric cycle models, which a wallclock fabric does "
             "not have (drop --fabric wallclock or --fleet)")
-    spec = WorkloadSpec(
-        num_requests=args.requests,
-        rate_rps=args.rate,
-        slo_fraction=args.slo_fraction,
-        seed=args.seed,
-    )
+    spec = build_spec(args)
     tracer, residuals = _make_obs(args)
-    out = serve_fleet(spec, fleet=sizes, router=args.router,
-                      objective=args.router_objective, arch=args.arch,
-                      reduced=args.reduced, execute=not args.no_execute,
-                      max_batch=args.max_batch,
-                      wave_boundary=args.wave_boundary,
-                      pipeline=args.pipeline, buffering=args.buffering,
-                      dvfs=args.dvfs,
-                      tracer=tracer, residuals=residuals,
-                      faults=args.faults, fault_seed=args.fault_seed,
-                      recovery=args.recovery, tie_seed=args.tie_seed)
+    cfg = build_fleet_config(args, tracer, residuals)
+    sizes = cfg.fleet
+    out = serve_fleet(spec, config=cfg)
     _fault_report(out)
 
     lane_hist: dict[int, int] = {}
@@ -204,25 +258,13 @@ def serve_fleet_stream(args) -> dict:
 
 
 def serve_stream(args) -> dict:
-    """Drive repro.serve on the synthetic open-loop workload (default mode)."""
-    from repro.serve import WorkloadSpec, serve_workload
+    """Drive repro.serve on the trace-driven open-loop workload (default)."""
+    from repro.serve import serve_workload
 
-    spec = WorkloadSpec(
-        num_requests=args.requests,
-        rate_rps=args.rate,
-        slo_fraction=args.slo_fraction,
-        seed=args.seed,
-    )
+    spec = build_spec(args)
     tracer, residuals = _make_obs(args)
-    out = serve_workload(spec, arch=args.arch, reduced=args.reduced,
-                         execute=not args.no_execute,
-                         max_batch=args.max_batch, fabric=args.fabric,
-                         wave_boundary=args.wave_boundary,
-                         pipeline=args.pipeline, buffering=args.buffering,
-                         dvfs=args.dvfs,
-                         tracer=tracer, residuals=residuals,
-                         faults=args.faults, fault_seed=args.fault_seed,
-                         fused_decode=args.fused_decode)
+    out = serve_workload(spec, config=build_serve_config(args, tracer,
+                                                         residuals))
     _fault_report(out)
 
     if args.verbose:
@@ -280,6 +322,53 @@ def main(argv=None):
     ap.add_argument("--slo-fraction", type=float, default=0.7)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    # Trace-driven workload family + tenancy (DESIGN.md §13).
+    ap.add_argument("--workload", choices=("poisson", "gamma", "mmpp"),
+                    default="poisson",
+                    help="arrival process: memoryless Poisson (default), "
+                         "burstier Gamma renewals (--cv), or a two-state "
+                         "MMPP whose ON state fires bursts")
+    ap.add_argument("--cv", type=float, default=3.0,
+                    help="inter-arrival coefficient of variation for "
+                         "--workload gamma (1.0 degenerates to Poisson)")
+    ap.add_argument("--length-dist", choices=("choice", "lognormal", "zipf"),
+                    default="choice",
+                    help="prompt/gen length law: the legacy discrete grid "
+                         "(default) or heavy-tailed lognormal/Zipf")
+    ap.add_argument("--sessions", type=int, default=1, metavar="TURNS",
+                    help="multi-turn sessions: each arrival opens a session "
+                         "of TURNS requests whose later prompts re-send the "
+                         "conversation context (enables prefix-KV reuse; "
+                         "default 1 = the historical single-turn trace)")
+    ap.add_argument("--think-time", type=float, nargs=2, default=(0.0, 0.0),
+                    metavar=("LO", "HI"),
+                    help="uniform think-time range in seconds between a "
+                         "session's turns")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="tenants sharing the trace; each maps onto a "
+                         "--tenant-classes SLO class round-robin")
+    ap.add_argument("--tenant-classes", default="standard",
+                    metavar="C1[,C2,...]",
+                    help="SLO classes tenants cycle through: "
+                         "premium/standard/batch (priority 0/1/2)")
+    ap.add_argument("--affinity", action="store_true",
+                    help="session-affine serving: per-fabric prefix-KV "
+                         "stores; warm hits skip prefill, the fleet router "
+                         "prices hit-vs-miss-vs-handoff (DESIGN.md §13)")
+    ap.add_argument("--prefix-capacity", type=int, default=65536,
+                    help="per-fabric prefix-KV store capacity in tokens "
+                         "(LRU eviction)")
+    ap.add_argument("--priority", action="store_true",
+                    help="drain the arrived backlog premium-first under "
+                         "overload (tenant-class queue ordering)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict a running lower-class request when a "
+                         "premium request finds every slot busy")
+    ap.add_argument("--shed", default=None, metavar="P:CAP[,P:CAP...]",
+                    help="overload shedding: per class priority, the max "
+                         "backlog at which it is still admitted, e.g. "
+                         "'2:4,1:16' sheds batch beyond 4 waiting and "
+                         "standard beyond 16")
     ap.add_argument("--wave-boundary", action="store_true",
                     help="disable mid-wave admission (legacy iteration-level "
                          "batching; the A/B baseline for the slot-managed "

@@ -4,8 +4,12 @@ Instead of one offline offload decision per batch driver run
 (repro.launch.serve's one-shot path), this package serves a *stream* of
 generation requests:
 
-    workload.synthetic_workload  -> open-loop Poisson request trace
+    workload.WorkloadSpec.build  -> trace-driven request stream (Poisson /
+                                    Gamma / MMPP arrivals, heavy-tail
+                                    lengths, multi-turn sessions, tenant
+                                    SLO classes — DESIGN.md §13)
     queue.RequestQueue           -> arrival-ordered admission bookkeeping
+                                    (tenant-priority ordering under overload)
     scheduler.OffloadAwareScheduler
                                  -> Eq.-3 admission control + per-batch
                                     parallel extent M from the fitted model
@@ -21,23 +25,33 @@ generation requests:
                                     fabric protocol — refill prefills
                                     overlap in-flight decode work on a
                                     double-buffered fabric (DESIGN.md §7)
+    prefix.PrefixStore           -> per-fabric prefix-KV residency with LRU
+                                    capacity: warm hits skip prefill, cold
+                                    handoffs pull KV as a memcpy offload
     metrics.ServeMetrics         -> throughput / p99 latency / SLO
                                     attainment / queue delay / occupancy /
-                                    goodput
+                                    goodput / prefix hit accounting
     fleet.FabricFleet            -> N independent fabrics (each with its own
                                     scaled HWParams, calibrator, scheduler)
                                     behind a model-driven Router
-                                    (model|rr|lql) — the horizontal scaling
+                                    (model|rr|lql) with an optional session
+                                    affinity term — the horizontal scaling
                                     layer (DESIGN.md §8)
 
 ``serve_workload`` wires the single-fabric stack together; ``serve_fleet``
-is its fleet counterpart.  They are what the ``python -m repro.launch.serve``
-CLI and the serve_scheduler / fleet_router benchmarks call.
+is its fleet counterpart.  Both take their knobs as one frozen config
+object — ``serve_workload(spec, config=ServeConfig(...))`` /
+``serve_fleet(spec, config=FleetConfig(...))`` — which is what the
+``python -m repro.launch.serve`` CLI and the serving benchmarks build.  The
+historical keyword-argument sprawl still works through a shim that emits a
+``DeprecationWarning`` and produces byte-identical results (regression-
+tested in tests/test_serve.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 from repro.runtime.fault import FaultEvent, FaultInjector
 
@@ -48,48 +62,135 @@ from .fleet import (RECOVERY_MODES, ROUTER_OBJECTIVES, ROUTER_POLICIES,
                     FabricFleet, FleetLane, RouteDecision, Router,
                     fabric_prior, serve_fleet)
 from .metrics import FleetMetrics, ServeMetrics
+from .prefix import DEFAULT_CAPACITY_TOKENS, PrefixStore
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import AdmissionDecision, BatchPlan, OffloadAwareScheduler
-from .workload import (CYCLES_PER_SECOND, WorkloadSpec, derive_seed,
-                       synthetic_workload)
+from .workload import (ARRIVALS, CYCLES_PER_SECOND, LENGTH_DISTS,
+                       TENANT_CLASSES, TenantClass, Workload, WORKLOADS,
+                       WorkloadSpec, derive_seed, synthetic_workload,
+                       workload_for)
 
 __all__ = [
-    "AdmissionDecision", "BatchPlan", "CalibrationSnapshot", "CompletedJob",
-    "ContinuousBatcher", "CYCLES_PER_SECOND", "FabricFleet", "FaultEvent",
-    "FaultInjector", "FleetLane", "FleetMetrics", "OffloadAwareScheduler",
-    "OnlineCalibrator", "PendingStep", "RECOVERY_MODES", "Request",
-    "RequestQueue", "RequestState", "ROUTER_OBJECTIVES", "ROUTER_POLICIES",
-    "RouteDecision",
-    "Router", "ServeMetrics", "ServingEngine", "SimulatedFabric",
-    "WallClockFabric", "WorkloadSpec", "derive_seed", "fabric_prior",
-    "serve_fleet", "serve_workload", "synthetic_workload",
+    "AdmissionDecision", "ARRIVALS", "BatchPlan", "CalibrationSnapshot",
+    "CompletedJob", "ContinuousBatcher", "CYCLES_PER_SECOND",
+    "DEFAULT_CAPACITY_TOKENS", "FabricFleet", "FaultEvent",
+    "FaultInjector", "FleetConfig", "FleetLane", "FleetMetrics",
+    "LENGTH_DISTS", "OffloadAwareScheduler",
+    "OnlineCalibrator", "PendingStep", "PrefixStore", "RECOVERY_MODES",
+    "Request", "RequestQueue", "RequestState", "ROUTER_OBJECTIVES",
+    "ROUTER_POLICIES", "RouteDecision", "Router", "ServeConfig",
+    "ServeMetrics", "ServingEngine", "SimulatedFabric", "TenantClass",
+    "TENANT_CLASSES", "WallClockFabric", "Workload", "WORKLOADS",
+    "WorkloadSpec", "derive_seed", "fabric_prior",
+    "serve_fleet", "serve_workload", "synthetic_workload", "workload_for",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every knob of the single-fabric serving stack, as one frozen value.
+
+    ``serve_workload(spec, config=ServeConfig(...))`` replaces the
+    keyword-argument sprawl the entry point accreted over PRs 1–9; field
+    names and defaults are exactly the historical kwargs, so
+    ``dataclasses.replace`` on a default config is the migration.  The
+    final block is the DESIGN.md §13 session-affinity/tenant layer — all
+    default-off (bit-identity with PR 9).
+    """
+
+    arch: str = "chatglm3-6b"
+    reduced: bool = True
+    execute: bool = True
+    max_batch: int = 4
+    mesh_shape: tuple = (1, 1)
+    jitter_pct: float = 1.0
+    fabric: str = "simulated"
+    calibrator: OnlineCalibrator | None = None
+    available_m: tuple = (1, 2, 4, 8, 16, 32)
+    design: object | None = None
+    wave_boundary: bool = False
+    pipeline: bool = False
+    buffering: str | None = None
+    dvfs: object = None
+    tracer: object = None
+    residuals: object = None
+    faults: object = None
+    fault_seed: int | None = None
+    fused_decode: bool = False
+    # --- session affinity + tenant classes (DESIGN.md §13) ---
+    affinity: bool = False                      # warm-hit prefill skipping
+    prefix_capacity: int = DEFAULT_CAPACITY_TOKENS
+    priority: bool = False                      # tenant-class queue ordering
+    preempt: bool = False                       # evict for higher classes
+    shed_depth: dict | None = None              # priority -> backlog cap
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Every knob of the fleet serving stack (:func:`serve_fleet`).
+
+    Same redesign as :class:`ServeConfig` — field names and defaults are
+    the historical ``serve_fleet`` kwargs plus the DESIGN.md §13 affinity
+    layer, all default-off.
+    """
+
+    fleet: tuple = (32,)                        # cluster count per fabric
+    router: str = "model"
+    objective: str = "latency"
+    arch: str = "chatglm3-6b"
+    reduced: bool = True
+    execute: bool = False
+    max_batch: int = 4
+    mesh_shape: tuple = (1, 1)
+    jitter_pct: float = 1.0
+    wave_boundary: bool = False
+    pipeline: bool = False
+    buffering: str | None = None
+    dvfs: object = None
+    tracer: object = None
+    residuals: object = None
+    faults: object = None
+    fault_seed: int | None = None
+    recovery: str = "restore"
+    ckpt_every: int = 4
+    tie_seed: int | None = None
+    # --- session affinity + tenant classes (DESIGN.md §13) ---
+    affinity: bool = False                      # router affinity term + hits
+    prefix_capacity: int = DEFAULT_CAPACITY_TOKENS
+    priority: bool = False
+    preempt: bool = False
+    shed_depth: dict | None = None
+
+
+def _config_from_kwargs(config, cls, kwargs: dict, fn_name: str):
+    """The deprecation shim behind both serving entry points.
+
+    Legacy keyword call sites keep working — each kwarg overrides the
+    matching config field via ``dataclasses.replace``, so the result is
+    byte-identical to passing the equivalent config — but they now warn:
+    the config object is the API (unknown names still raise ``TypeError``,
+    exactly like the old signature did).
+    """
+    if kwargs:
+        warnings.warn(
+            f"passing {fn_name}() options as keyword arguments is "
+            f"deprecated; pass config={cls.__name__}(...) instead",
+            DeprecationWarning, stacklevel=3)
+        return dataclasses.replace(config or cls(), **kwargs)
+    return config or cls()
 
 
 def serve_workload(
     spec: WorkloadSpec | None = None,
     *,
-    arch: str = "chatglm3-6b",
-    reduced: bool = True,
-    execute: bool = True,
-    max_batch: int = 4,
-    mesh_shape=(1, 1),
-    jitter_pct: float = 1.0,
-    fabric: str = "simulated",
-    calibrator: OnlineCalibrator | None = None,
-    available_m=(1, 2, 4, 8, 16, 32),
-    design=None,
-    wave_boundary: bool = False,
-    pipeline: bool = False,
-    buffering: str | None = None,
-    dvfs=None,
-    tracer=None,
-    residuals=None,
-    faults=None,
-    fault_seed: int | None = None,
-    fused_decode: bool = False,
+    config: ServeConfig | None = None,
+    **kwargs,
 ) -> dict:
-    """Run the full serving stack on a synthetic open-loop workload.
+    """Run the full serving stack on a trace-driven open-loop workload.
+
+    All options ride in ``config`` (:class:`ServeConfig`); passing them as
+    keyword arguments still works via a ``DeprecationWarning`` shim with
+    byte-identical results.  Field semantics:
 
     ``fused_decode=True`` compiles the engine's decode step on the fused
     Pallas decode-attention kernel (one launch per layer; bit-identical
@@ -137,31 +238,41 @@ def serve_workload(
     prediction with its measured outcome (DESIGN.md §9).  The trace process
     is named like a one-lane fleet's lane 0 (``f0:{clusters}c``), so a 1x32
     fleet trace is event-identical to this path modulo routing.
+
+    ``affinity=True`` attaches a :class:`PrefixStore` (DESIGN.md §13):
+    admission resolves each session request's warm-hit length against the
+    fabric's KV residency and prefill jobs skip the resident tokens.
+    ``priority`` orders the arrived backlog by tenant class, ``preempt``
+    evicts running lower classes for premium arrivals, and ``shed_depth``
+    rejects over-backlog classes at admission — all default-off.
     """
+    cfg = _config_from_kwargs(config, ServeConfig, kwargs, "serve_workload")
     spec = spec or WorkloadSpec()
-    if design is not None and fabric != "simulated":
+    calibrator = cfg.calibrator
+    buffering = cfg.buffering
+    if cfg.design is not None and cfg.fabric != "simulated":
         raise ValueError("design= requires the simulated fabric")
     if buffering is None:
-        buffering = (getattr(design, "buffering", None)
-                     or ("double" if pipeline else "single"))
+        buffering = (getattr(cfg.design, "buffering", None)
+                     or ("double" if cfg.pipeline else "single"))
     if calibrator is None:
-        if design is not None:
+        if cfg.design is not None:
             from repro.dse.runner import refit_design
-            prior, _ = refit_design(design, force_eq1=True)
+            prior, _ = refit_design(cfg.design, force_eq1=True)
             calibrator = OnlineCalibrator(prior=prior)
         else:
             calibrator = OnlineCalibrator()
-    if fabric == "simulated":
-        if design is not None:
-            fabric_src = SimulatedFabric.for_design(design,
-                                                    jitter_pct=jitter_pct,
+    if cfg.fabric == "simulated":
+        if cfg.design is not None:
+            fabric_src = SimulatedFabric.for_design(cfg.design,
+                                                    jitter_pct=cfg.jitter_pct,
                                                     seed=spec.seed)
-            if buffering != fabric_src.buffering or dvfs is not None:
+            if buffering != fabric_src.buffering or cfg.dvfs is not None:
                 fabric_src = SimulatedFabric(
                     hw=fabric_src.hw, kernel=fabric_src.kernel,
                     dispatch=fabric_src.dispatch, sync=fabric_src.sync,
-                    jitter_pct=jitter_pct, seed=spec.seed,
-                    buffering=buffering, dvfs=dvfs)
+                    jitter_pct=cfg.jitter_pct, seed=spec.seed,
+                    buffering=buffering, dvfs=cfg.dvfs)
             # Plan host fallbacks against the design's own hardware/kernel.
             from repro.core import simulator as _sim
             host_model = lambda n: float(_sim.host_runtime(  # noqa: E731
@@ -170,13 +281,13 @@ def serve_workload(
             # The fabric is sized to the configured extent grid: interconnect
             # parameters scale with the cluster count (simulator.scaled_hw;
             # identity at the paper's 32-cluster reference).
-            fabric_src = SimulatedFabric(jitter_pct=jitter_pct,
+            fabric_src = SimulatedFabric(jitter_pct=cfg.jitter_pct,
                                          seed=spec.seed,
-                                         num_clusters=max(available_m),
-                                         buffering=buffering, dvfs=dvfs)
+                                         num_clusters=max(cfg.available_m),
+                                         buffering=buffering, dvfs=cfg.dvfs)
             host_model = None  # Manticore host fallback (same cycle domain)
-    elif fabric == "wallclock":
-        if not execute:
+    elif cfg.fabric == "wallclock":
+        if not cfg.execute:
             raise ValueError("fabric='wallclock' needs execute=True: the "
                              "engine's measurements are the job runtimes")
         fabric_src = WallClockFabric()
@@ -185,49 +296,66 @@ def serve_workload(
         # (comparing wall cycles against simulator cycles is meaningless).
         host_model = lambda n: float("inf")  # noqa: E731
     else:
-        raise ValueError(f"unknown fabric {fabric!r}")
-    proc = f"f0:{max(available_m)}c"
-    if tracer is not None:
-        calibrator.tracer = tracer
+        raise ValueError(f"unknown fabric {cfg.fabric!r}")
+    proc = f"f0:{max(cfg.available_m)}c"
+    if cfg.tracer is not None:
+        calibrator.tracer = cfg.tracer
         calibrator.proc = proc
         if isinstance(fabric_src, SimulatedFabric):
             fabric_src.proc = proc
-            fabric_src.engine.tracer = tracer
+            fabric_src.engine.tracer = cfg.tracer
             fabric_src.engine.proc = proc
-    scheduler = OffloadAwareScheduler(calibrator, available_m=available_m,
+    scheduler = OffloadAwareScheduler(calibrator,
+                                      available_m=cfg.available_m,
                                       host_model=host_model,
-                                      tracer=tracer, proc=proc)
+                                      tracer=cfg.tracer, proc=proc,
+                                      shed_depth=cfg.shed_depth)
 
-    engine = None
-    if execute:
+    if cfg.execute:
         from repro.configs import get_config
         from repro.models import scaled_down
-        cfg = get_config(arch)
-        if reduced:
-            cfg = scaled_down(cfg)
-        spec = dataclasses.replace(spec, vocab_size=cfg.vocab_size)
-        max_len = max(spec.prompt_lens) + max(spec.gen_lens)
-        engine = ServingEngine(arch, reduced=reduced, max_batch=max_batch,
-                               max_len=max_len, mesh_shape=mesh_shape,
-                               fused_decode=fused_decode)
-        if fabric == "wallclock":
-            # Compile outliers must not enter the measured step times the
-            # calibrator fits (see ServingEngine.warmup).
-            engine.warmup(spec.prompt_lens, slots=not wave_boundary)
+        mcfg = get_config(cfg.arch)
+        if cfg.reduced:
+            mcfg = scaled_down(mcfg)
+        spec = dataclasses.replace(spec, vocab_size=mcfg.vocab_size)
 
-    requests = synthetic_workload(spec, with_tokens=execute)
+    requests = spec.build(with_tokens=cfg.execute)
+
+    engine = None
+    if cfg.execute:
+        # Size the decode cache from the *generated* trace, not the spec's
+        # nominal length mix: multi-turn sessions carry cumulative context
+        # (DESIGN.md §13.1), so a later turn's prompt can exceed
+        # max(prompt_lens) by the whole conversation so far.
+        max_len = max((r.prompt_len + r.gen_len for r in requests),
+                      default=max(spec.prompt_lens) + max(spec.gen_lens))
+        engine = ServingEngine(cfg.arch, reduced=cfg.reduced,
+                               max_batch=cfg.max_batch, max_len=max_len,
+                               mesh_shape=cfg.mesh_shape,
+                               fused_decode=cfg.fused_decode)
+        if cfg.fabric == "wallclock":
+            # Compile outliers must not enter the measured step times the
+            # calibrator fits (see ServingEngine.warmup).  Session traces
+            # realize prompt lengths beyond the spec mix, so warm the
+            # lengths actually present.
+            engine.warmup(sorted({r.prompt_len for r in requests}),
+                          slots=not cfg.wave_boundary)
+    faults = cfg.faults
     if isinstance(faults, str):
         horizon = max((r.arrival for r in requests), default=0.0)
         faults = FaultInjector.parse(
             faults, horizon=horizon, num_lanes=1,
             seed=(derive_seed(spec.seed, "faults")
-                  if fault_seed is None else fault_seed))
+                  if cfg.fault_seed is None else cfg.fault_seed))
+    prefix_store = PrefixStore(cfg.prefix_capacity) if cfg.affinity else None
     batcher = ContinuousBatcher(scheduler, calibrator, fabric=fabric_src,
-                                engine=engine, max_batch=max_batch,
-                                wave_boundary=wave_boundary,
-                                pipeline=pipeline, tracer=tracer,
-                                residuals=residuals, proc=proc,
-                                faults=faults, fault_lane=0)
+                                engine=engine, max_batch=cfg.max_batch,
+                                wave_boundary=cfg.wave_boundary,
+                                pipeline=cfg.pipeline, tracer=cfg.tracer,
+                                residuals=cfg.residuals, proc=proc,
+                                faults=faults, fault_lane=0,
+                                prefix_store=prefix_store,
+                                priority=cfg.priority, preempt=cfg.preempt)
     out = batcher.run(requests)
     if out["orphans"]:
         # No fleet behind this path: a crash's orphans have nowhere to go.
@@ -236,7 +364,8 @@ def serve_workload(
             batcher.metrics.dropped += 1
         out["requests"] = sorted(out["requests"] + out["orphans"],
                                  key=lambda r: r.rid)
-    out["arch"] = arch
+    out["arch"] = cfg.arch
     out["spec"] = spec
     out["faults"] = faults
+    out["config"] = cfg
     return out

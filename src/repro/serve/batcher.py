@@ -51,9 +51,13 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import simulator as sim
+from repro.kernels.ops import get_kernel
+
 from .calibrator import OnlineCalibrator
 from .fabric import SimulatedFabric, WallClockFabric
 from .metrics import ServeMetrics
+from .prefix import PrefixStore
 from .queue import Request, RequestQueue, RequestState
 from .scheduler import BatchPlan, OffloadAwareScheduler
 
@@ -322,7 +326,9 @@ class ContinuousBatcher:
                  tracer=None, residuals=None,
                  proc: str = "fabric", flow: bool = False,
                  faults=None, fault_lane: int = 0,
-                 ckpt=None, ckpt_every: int = 4):
+                 ckpt=None, ckpt_every: int = 4,
+                 prefix_store: PrefixStore | None = None,
+                 priority: bool = False, preempt: bool = False):
         self.scheduler = scheduler
         self.calibrator = calibrator
         self.fabric = fabric or SimulatedFabric(
@@ -367,6 +373,18 @@ class ContinuousBatcher:
         self.fault_lane = fault_lane
         self.ckpt = ckpt
         self.ckpt_every = max(1, ckpt_every)
+        # Session affinity + tenant classes (DESIGN.md §13) — all optional,
+        # default-off, zero-cost when unset (the PR 1–9 bit-identity).
+        #   prefix_store  this lane's KV residency map; when set, admission
+        #                 resolves each request's warm-hit length and prefill
+        #                 jobs skip the resident tokens;
+        #   priority      order the arrived backlog by tenant class;
+        #   preempt       evict a running lower-priority request when a
+        #                 higher class arrives and no slot is free
+        #                 (continuous loop only; resumes via a restore job).
+        self.prefix_store = prefix_store
+        self.priority = priority
+        self.preempt = preempt
         self.orphans: list[Request] = []
         self._decode_count = 0
         self._ckpt_max_gen = 1
@@ -396,9 +414,12 @@ class ContinuousBatcher:
         wave: list[Request] = []
         wave_n = 0
         wave_deadline: float | None = None
-        for req in list(queue.arrived(clock)):
+        arrived = queue.arrived(clock)
+        for req in list(arrived):
             if req.t_admitted is None:  # admission control runs once
-                verdict = self.scheduler.admit(req, now=clock)
+                self._resolve_prefix(req)
+                verdict = self.scheduler.admit(req, now=clock,
+                                               backlog=len(arrived))
                 if not verdict.admitted:
                     queue.reject(req, verdict.reason)
                     self.metrics.rejected += 1
@@ -413,12 +434,15 @@ class ContinuousBatcher:
             # Same-prompt-length bucketing: one compiled prefill shape per
             # job.  Admitted requests of another length (or beyond the free
             # slots, or breaking the batch deadline) stay queued for a later
-            # job.
+            # job.  Prefix hits bucket too: a wave's members must share the
+            # skipped-token count so the job keeps one uniform shape.
             if wave and (req.prompt_len != wave[0].prompt_len
                          or req.restore_len != wave[0].restore_len
+                         or req.prefix_hit != wave[0].prefix_hit
+                         or req.prefix_handoff != wave[0].prefix_handoff
                          or len(wave) >= limit):
                 continue
-            cand_n = wave_n + req.n_prompt_elems
+            cand_n = wave_n + req.n_prompt_elems - req.prefix_hit
             cand_deadline = wave_deadline
             if req.slo_cycles is not None:
                 cand_deadline = (req.slo_cycles if cand_deadline is None
@@ -431,6 +455,118 @@ class ContinuousBatcher:
             queue.pop(req)
             req.state = RequestState.RUNNING
         return wave
+
+    def _resolve_prefix(self, req: Request) -> None:
+        """Bind the request's warm-hit length at admission (DESIGN.md §13).
+
+        ``prefix_hit`` is the portion of the prompt resident in this lane's
+        KV store — those tokens are skipped by the prefill job (the Eq.-1
+        saving of a cache hit).  The resolution happens once, *before* the
+        Eq.-3 admission verdict, so a warm hit shrinks the N the deadline is
+        checked against.  A router that already staged a cross-lane handoff
+        marked ``prefix_handoff``; the hit then additionally prices a memcpy
+        pull (:meth:`_serve_handoff`).  No store attached => no-op.
+        """
+        if req.prefix_id is None:
+            return
+        if self.prefix_store is not None and not req.prefix_resolved:
+            hit = self.prefix_store.hit(req.prefix_id, req.prefix_len)
+            req.prefix_hit = hit
+            if hit == 0:
+                req.prefix_handoff = False
+            req.prefix_resolved = True
+        if not req.prefix_resolved:
+            return                     # affinity off: fields stay inert
+        m = self.metrics
+        if req.prefix_hit > 0:
+            m.prefix_hits += 1
+            m.prefix_hit_tokens += req.prefix_hit
+            if req.prefix_handoff:
+                m.prefix_handoffs += 1
+        elif req.prefix_len > 0:       # turn 0 has nothing to hit
+            m.prefix_misses += 1
+
+    def _serve_handoff(self, batch: list[Request], clock: float) -> float:
+        """Price a handoff wave's cross-lane KV pull (DESIGN.md §13).
+
+        The hit portion of a handed-off prefix is copied from the peer lane
+        as a pure-streaming ``memcpy`` offload at the full fabric — the same
+        Eq.-1 closed form that prices crash restores (DESIGN.md §10), with
+        the compute term nearly gone.  The copy is its own restore-kind job:
+        it never feeds the calibrator (different kernel than the serve jobs)
+        and draws no jitter, so affinity-off streams — which have no
+        handoffs — stay bit-identical trivially.
+        """
+        n_copy = sum(r.prefix_hit for r in batch if r.prefix_handoff)
+        if n_copy == 0:
+            return clock
+        m = self.scheduler.m_max
+        hw = getattr(self.fabric, "hw", None)
+        t_copy = float(sim.offload_runtime(
+            m, n_copy,
+            dispatch=getattr(self.fabric, "dispatch", "multicast"),
+            sync=getattr(self.fabric, "sync", "credit"),
+            kernel=get_kernel("memcpy"),
+            **({"hw": hw} if hw is not None else {})))
+        plan = BatchPlan(kind="restore", n_elems=n_copy, offload=True, m=m,
+                         m_min=None, deadline=None, t_pred=t_copy,
+                         slo_at_risk=False,
+                         reason=f"prefix handoff: memcpy {n_copy} KV tokens")
+        self.metrics.restore_jobs += 1
+        self.metrics.job_cycles.add(t_copy)
+        self._trace_job(plan, clock, t_copy)
+        return clock + t_copy
+
+    # ------------------------------------------------------------------ #
+    # Priority preemption (DESIGN.md §13) — continuous loop only, gated
+    # behind ``preempt=True``; the default path never reaches these.
+    # ------------------------------------------------------------------ #
+    def _preempt_victim(self, slots, emitted, queue: RequestQueue,
+                        clock: float) -> int | None:
+        """Pick the slot to evict for a strictly higher-priority arrival.
+
+        Deterministic: the victim is the occupied slot with the largest
+        (priority number, remaining tokens, slot index) — the least
+        important request that has the most work left.  ``None`` when no
+        arrived request outranks every running one.
+        """
+        arr = queue.arrived(clock)
+        if not arr:
+            return None
+        best = min(r.priority for r in arr)
+        occ = [i for i, s in enumerate(slots) if s is not None]
+        if not occ:
+            return None
+        victim = max(occ, key=lambda i: (slots[i].priority,
+                                         slots[i].gen_len - emitted[i], i))
+        return victim if slots[victim].priority > best else None
+
+    def _preempt_slot(self, i: int, slots, emitted, gen_buf,
+                      queue: RequestQueue, clock: float) -> None:
+        """Evict a running request back to the queue, progress intact.
+
+        The slot's decode position rides out through the PR 7 restore
+        fields (``restored_tokens`` / ``restore_len``): when re-admitted the
+        request resumes as a restore-kind prefill instead of regenerating
+        from scratch — preemption costs one restore job, not lost work.
+        (Its resume therefore also counts in the ``recovered`` /
+        ``recovery_delay`` metrics, same as a crash-orphan requeue.)
+        """
+        r = slots[i]
+        r.restored_tokens = np.asarray(gen_buf[i], np.int64)
+        r.restore_len = emitted[i]
+        r.t_enqueued = clock
+        r.requeues += 1
+        r.preemptions += 1
+        r.state = RequestState.QUEUED
+        queue.push(r)
+        slots[i] = None
+        self.metrics.preempted += 1
+        if self.tracer is not None:
+            self.tracer.instant(self.proc, "requests", "preempted", clock,
+                                args={"rid": r.rid,
+                                      "restore_len": r.restore_len,
+                                      "priority": r.priority})
 
     def _job_runtime(self, plan: BatchPlan, wall_s: float | None) -> float:
         """Measured runtime (cycles) of one job from the timing source.
@@ -470,6 +606,11 @@ class ContinuousBatcher:
         if self.engine is not None and gen_buf is not None:
             r.generated = np.asarray(gen_buf, np.int32)
         queue.finish(r, now)
+        if self.prefix_store is not None and r.prefix_id is not None:
+            # The finished turn's full context (prompt + generated) is what
+            # the session's next turn can reuse — the workload generator
+            # sets the next turn's prefix_len to exactly this (§13).
+            self.prefix_store.insert(r.prefix_id, r.prompt_len + r.gen_len)
         m = self.metrics
         m.completed += 1
         m.latency_cycles.add(r.latency())
@@ -732,7 +873,7 @@ class ContinuousBatcher:
         the clock resumes from ``start_clock`` (this lane's previous
         ``t_end``), never from zero.
         """
-        queue = RequestQueue(requests)
+        queue = RequestQueue(requests, priority=self.priority)
         m = self.metrics
         if requeued:
             m.requeued += len(requests)
@@ -804,6 +945,12 @@ class ContinuousBatcher:
                 return self._abort_crash(
                     queue, [slots[i] for i in occupied()], clock)
             free = [i for i in range(nb) if slots[i] is None]
+            if self.preempt and not free:
+                i = self._preempt_victim(slots, emitted, queue, clock)
+                if i is not None:
+                    self._preempt_slot(i, slots, emitted, gen_buf, queue,
+                                       clock)
+                    free = [i]
             occ_before = len(occupied())
             if free and queue.arrived(clock):
                 batch = self._form_wave(queue, clock, limit=len(free))
@@ -869,7 +1016,11 @@ class ContinuousBatcher:
         """
         prompt_len = batch[0].prompt_len
         restore = batch[0].restore_len > 0
-        n_job = sum(r.n_prompt_elems + r.restore_len for r in batch)
+        # A warm prefix hit skips its resident tokens (DESIGN.md §13);
+        # prefix_hit is 0 unless a PrefixStore is attached, so the default
+        # job size is byte-identical to the PR 1–9 accounting.
+        n_job = sum(r.n_prompt_elems - r.prefix_hit + r.restore_len
+                    for r in batch)
         slos = ([] if restore else
                 [r.slo_cycles for r in batch if r.slo_cycles is not None])
         deadline = min(slos) if slos else None
@@ -944,6 +1095,7 @@ class ContinuousBatcher:
         Returns ``(clock, caches)`` — the advanced virtual clock and the
         (merged) live caches.
         """
+        clock = self._serve_handoff(batch, clock)
         plan, prompt_len = self._plan_prefill(batch, clock)
         wall = None
         next_tok = None
@@ -1015,6 +1167,7 @@ class ContinuousBatcher:
                 if free and queue.arrived(clock):
                     batch = self._form_wave(queue, clock, limit=len(free))
                     if batch:
+                        clock = self._serve_handoff(batch, clock)
                         inflight = self._submit_prefill(
                             batch, free[:len(batch)], clock,
                             bool(occupied()))
@@ -1159,6 +1312,7 @@ class ContinuousBatcher:
         m = self.metrics
 
         # --- prefill: one offload job for the whole wave ----------------
+        clock = self._serve_handoff(wave, clock)
         plan, prompt_len = self._plan_prefill(wave, clock)
         caches = None
         next_tok = None

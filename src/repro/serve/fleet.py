@@ -48,14 +48,16 @@ import numpy as np
 
 from repro.core import runtime_model, simulator as sim
 from repro.core.runtime_model import PAPER_MODEL, OffloadModel
+from repro.kernels.ops import get_kernel
 
 from .batcher import ContinuousBatcher
 from .calibrator import OnlineCalibrator
 from .fabric import SimulatedFabric
 from .metrics import FleetMetrics, ServeMetrics
+from .prefix import DEFAULT_CAPACITY_TOKENS, PrefixStore
 from .queue import Request, RequestState
 from .scheduler import OffloadAwareScheduler
-from .workload import WorkloadSpec, derive_seed, synthetic_workload
+from .workload import WorkloadSpec, derive_seed
 
 #: Router policies (DESIGN.md §8.2).
 ROUTER_POLICIES = ("model", "rr", "lql")
@@ -121,7 +123,7 @@ class FleetLane:
     def name(self) -> str:
         return f"f{self.index}:{self.num_clusters}c"
 
-    def preview(self, req: Request) -> float:
+    def preview(self, req: Request, *, skip: int = 0) -> float:
         """Predicted service cycles for ``req`` on this fabric.
 
         Prefill via the lane scheduler's side-effect-free preview (same
@@ -129,12 +131,27 @@ class FleetLane:
         single-token decode step per generated token — a lower bound on the
         decode share (decode jobs batch across slots), but the same bound on
         every fabric, so the *comparison* the router makes is fair.
+        ``skip`` is a warm prefix hit: those prompt tokens are resident in
+        the lane's KV store and skip prefill (DESIGN.md §13).
         """
-        t = self.scheduler.preview(req.n_prompt_elems,
+        t = self.scheduler.preview(req.n_prompt_elems - skip,
                                    deadline=req.slo_cycles)
         if req.gen_len > 1:
             t += (req.gen_len - 1) * self.scheduler.preview(1)
         return t
+
+    def handoff_cycles(self, n_copy: int) -> float:
+        """Closed-form memcpy pull of ``n_copy`` KV tokens (DESIGN.md §13).
+
+        The same pure-streaming Eq.-1 shape the batcher prices an actual
+        handoff with — dispatch + copy + sync at the full fabric, compute
+        term nearly gone — so the router's hit-vs-miss delta and the served
+        cost agree.
+        """
+        return float(sim.offload_runtime(
+            self.scheduler.m_max, n_copy, dispatch=self.fabric.dispatch,
+            sync=self.fabric.sync, kernel=get_kernel("memcpy"),
+            hw=self.fabric.hw))
 
     def preview_energy(self, req: Request) -> float:
         """Predicted joules for ``req`` on this fabric (DESIGN.md §11).
@@ -166,6 +183,8 @@ class RouteDecision:
     requeued: bool = False           # crash-recovery re-route (second pass)
     objective: str = "latency"       # what the model policy minimized
     energy: tuple[float, ...] | None = None  # predicted joules per lane
+    prefix_hit: int = 0              # warm-hit tokens on the chosen lane
+    prefix_handoff: bool = False     # hit staged via a cross-lane KV pull
 
 
 class Router:
@@ -186,7 +205,8 @@ class Router:
 
     def __init__(self, lanes: list[FleetLane], policy: str = "model", *,
                  objective: str = "latency", tracer=None,
-                 tie_seed: int | None = None):
+                 tie_seed: int | None = None,
+                 prefix_stores: list[PrefixStore] | None = None):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"router policy must be one of "
                              f"{ROUTER_POLICIES}, got {policy!r}")
@@ -215,6 +235,15 @@ class Router:
         # to the historical min() behavior.
         self._tie_rng = (None if tie_seed is None
                          else np.random.default_rng(tie_seed))
+        # Session affinity (DESIGN.md §13): one predictive PrefixStore per
+        # lane.  The router walks the trace in arrival order — virtual-time
+        # order — so residency evolves exactly as the shared clock would
+        # have it, and the resolution it binds onto each request
+        # (prefix_hit / prefix_handoff) is authoritative for the lane's
+        # batcher.  None (default) keeps routing bit-identical to PR 9.
+        self._prefix_stores = prefix_stores
+        if prefix_stores is not None and len(prefix_stores) != len(lanes):
+            raise ValueError("prefix_stores must match the lane count")
         # Optional span tracer (repro.obs): each decision becomes an instant
         # on the "router" process carrying its evidence, plus a flow arrow
         # the chosen lane's batcher closes at the serving prefill.
@@ -269,6 +298,55 @@ class Router:
         for fl in self._inflight:
             fl[:] = [t for t in fl if t > now]
 
+    # ------------------------------------------------------------------ #
+    # Session affinity (DESIGN.md §13)
+    # ------------------------------------------------------------------ #
+    def _affinity_service(self, req: Request):
+        """Per-lane predicted service with the hit-vs-miss Eq.-1 delta.
+
+        A lane holding the session's prefix skips those prompt tokens; a
+        cold lane may instead *pull* the best peer copy as a memcpy handoff
+        when that beats re-prefilling the context — the router compares
+        both, so affinity never makes a placement strictly worse than the
+        affinity-blind score.
+        """
+        stores = self._prefix_stores
+        resident = [min(s.resident(req.prefix_id), req.prefix_len)
+                    for s in stores]
+        best = max(resident)
+        service, hits, handoffs = [], [], []
+        for i, lane in enumerate(self.lanes):
+            h, ho = resident[i], False
+            t = lane.preview(req, skip=h)
+            if h == 0 and best > 0:
+                t_pull = lane.handoff_cycles(best) + lane.preview(req,
+                                                                  skip=best)
+                if t_pull < t:
+                    t, h, ho = t_pull, best, True
+            service.append(t)
+            hits.append(h)
+            handoffs.append(ho)
+        return service, hits, handoffs
+
+    def _commit_affinity(self, req: Request, choice: int,
+                         hits: list[int], handoffs: list[bool]) -> None:
+        """Bind the chosen lane's hit/handoff onto the request and evolve
+        that lane's residency: a handoff stages the pulled copy, and after
+        serving the lane holds this turn's full context (which is exactly
+        the next turn's ``prefix_len``).  The resolution is authoritative —
+        the lane's batcher prices it as bound here."""
+        req.prefix_hit = hits[choice]
+        req.prefix_handoff = handoffs[choice]
+        req.prefix_resolved = True
+        store = self._prefix_stores[choice]
+        if hits[choice] > 0:
+            if handoffs[choice]:
+                store.insert(req.prefix_id, hits[choice])
+            store.hit(req.prefix_id, req.prefix_len)
+        elif req.prefix_len > 0:
+            store.hit(req.prefix_id, req.prefix_len)   # counts the miss
+        store.insert(req.prefix_id, req.prompt_len + req.gen_len)
+
     def route(self, req: Request, *, requeued: bool = False) -> int:
         """Pick the lane for one request; returns its index.
 
@@ -284,7 +362,11 @@ class Router:
                                f"t={now:.0f} (dead={self.dead_lanes}, "
                                f"quarantined={self.quarantined_lanes})")
         pending = tuple(len(fl) for fl in self._inflight)
-        service = [lane.preview(req) for lane in self.lanes]
+        hits = handoffs = None
+        if self._prefix_stores is not None and req.prefix_id is not None:
+            service, hits, handoffs = self._affinity_service(req)
+        else:
+            service = [lane.preview(req) for lane in self.lanes]
         scores = tuple(max(self._t_free[i], now) + service[i]
                        for i in range(len(self.lanes)))
         # Per-lane Eq.-3 feasibility of the request's SLO: a little fabric
@@ -352,10 +434,14 @@ class Router:
             done = max(self._t_free[choice], now) + service[choice]
             self._t_free[choice] = done
             self._inflight[choice].append(done)
+        if hits is not None:
+            self._commit_affinity(req, choice, hits, handoffs)
         self.decisions.append(RouteDecision(
             rid=req.rid, lane=choice, policy=self.policy, scores=scores,
             pending=pending, feasible=feasible, guarded=guarded,
-            requeued=requeued, objective=self.objective, energy=energy))
+            requeued=requeued, objective=self.objective, energy=energy,
+            prefix_hit=req.prefix_hit,
+            prefix_handoff=req.prefix_handoff))
         if self.tracer is not None:
             args = {"rid": req.rid, "lane": self.lanes[choice].name,
                     "scores": [s if np.isfinite(s) else None
@@ -396,7 +482,11 @@ class FabricFleet:
                  faults=None, recovery: str = "restore",
                  ckpt_every: int = 4, quarantine_mape_pct: float = 10.0,
                  release_mape_pct: float = 2.0,
-                 tie_seed: int | None = None):
+                 tie_seed: int | None = None,
+                 affinity: bool = False,
+                 prefix_capacity: int = DEFAULT_CAPACITY_TOKENS,
+                 priority: bool = False, preempt: bool = False,
+                 shed_depth: dict[int, int] | None = None):
         sizes = tuple(int(s) for s in sizes)
         if not sizes:
             raise ValueError("a fleet needs at least one fabric")
@@ -427,6 +517,14 @@ class FabricFleet:
         # tracker keys drift series by the same lane names.
         self.tracer = tracer
         self.residuals = residuals
+        # Session affinity + tenant classes (DESIGN.md §13) — default-off:
+        # no stores, no priority ordering, no shedding, bit-identical to
+        # the PR 9 fleet.
+        self.affinity = affinity
+        self.priority = priority
+        self.preempt = preempt
+        self.prefix_stores = ([PrefixStore(prefix_capacity)
+                               for _ in sizes] if affinity else None)
         self.lanes: list[FleetLane] = []
         for i, clusters in enumerate(sizes):
             proc = f"f{i}:{clusters}c"
@@ -434,7 +532,7 @@ class FabricFleet:
                                           tracer=tracer, proc=proc)
             scheduler = OffloadAwareScheduler(
                 calibrator, available_m=sim.extent_grid(clusters),
-                tracer=tracer, proc=proc)
+                tracer=tracer, proc=proc, shed_depth=shed_depth)
             fabric = SimulatedFabric(jitter_pct=jitter_pct, seed=seed + i,
                                      num_clusters=clusters,
                                      buffering=buffering, dvfs=dvfs,
@@ -444,7 +542,8 @@ class FabricFleet:
                 calibrator=calibrator, scheduler=scheduler,
                 engine=None if engines is None else engines[i]))
         self.router = Router(self.lanes, router, objective=objective,
-                             tracer=tracer, tie_seed=tie_seed)
+                             tracer=tracer, tie_seed=tie_seed,
+                             prefix_stores=self.prefix_stores)
         # Per-lane checkpoint managers, only where they can matter: a lane
         # with a scheduled crash snapshots its decode state so "restore"
         # recovery can resume orphans elsewhere.  The backing directory
@@ -509,7 +608,8 @@ class FabricFleet:
                 proc=lane.name, flow=True,
                 faults=self.faults, fault_lane=lane.index,
                 ckpt=self._ckpts.get(lane.index),
-                ckpt_every=self.ckpt_every)
+                ckpt_every=self.ckpt_every,
+                priority=self.priority, preempt=self.preempt)
             batchers.append(batcher)
             out = batcher.run(reqs)
             # An unused lane still reports an honest (empty) summary.
@@ -756,73 +856,78 @@ class FabricFleet:
 def serve_fleet(
     spec: WorkloadSpec | None = None,
     *,
-    fleet=(sim.REFERENCE_CLUSTERS,),
-    router: str = "model",
-    objective: str = "latency",
-    arch: str = "chatglm3-6b",
-    reduced: bool = True,
-    execute: bool = False,
-    max_batch: int = 4,
-    mesh_shape=(1, 1),
-    jitter_pct: float = 1.0,
-    wave_boundary: bool = False,
-    pipeline: bool = False,
-    buffering: str | None = None,
-    dvfs=None,
-    tracer=None,
-    residuals=None,
-    faults=None,
-    fault_seed: int | None = None,
-    recovery: str = "restore",
-    ckpt_every: int = 4,
-    tie_seed: int | None = None,
+    config=None,
+    **kwargs,
 ) -> dict:
-    """Run the fleet serving stack on a synthetic open-loop workload.
+    """Run the fleet serving stack on a trace-driven open-loop workload.
 
     The fleet analogue of :func:`repro.serve.serve_workload` — same
     workload generator, same per-lane machinery, with routing in front
-    (DESIGN.md §8).  ``fleet`` is the cluster count per fabric (``(32,)``
-    is the single-fabric reference; ``(16, 8, 8)`` a big+2xlittle fleet).
-    Fleet timing is always the simulated cycle domain: routing is a
-    cycle-model decision, and a wall-clock fabric has no per-fabric model
-    to score with.  ``execute=True`` compiles one real ``ServingEngine``
-    per fabric (expensive — one XLA compile set per lane; benchmarks use
-    the default ``execute=False``).
+    (DESIGN.md §8).  All options ride in ``config``
+    (:class:`repro.serve.FleetConfig`); legacy keyword arguments still work
+    via a ``DeprecationWarning`` shim with byte-identical results.
+    ``fleet`` is the cluster count per fabric (``(32,)`` is the
+    single-fabric reference; ``(16, 8, 8)`` a big+2xlittle fleet).  Fleet
+    timing is always the simulated cycle domain: routing is a cycle-model
+    decision, and a wall-clock fabric has no per-fabric model to score
+    with.  ``execute=True`` compiles one real ``ServingEngine`` per fabric
+    (expensive — one XLA compile set per lane; benchmarks use the default
+    ``execute=False``).  ``affinity=True`` gives every fabric a
+    :class:`PrefixStore` and turns on the router's session-affinity term
+    (DESIGN.md §13).
     """
+    # Late import: repro.serve.__init__ imports this module, so the config
+    # machinery it defines is only reachable at call time.
+    from repro.serve import FleetConfig, _config_from_kwargs
+    cfg = _config_from_kwargs(config, FleetConfig, kwargs, "serve_fleet")
     spec = spec or WorkloadSpec()
-    engines = None
-    if execute:
+    if cfg.execute:
         from repro.configs import get_config
         from repro.models import scaled_down
+        mcfg = get_config(cfg.arch)
+        if cfg.reduced:
+            mcfg = scaled_down(mcfg)
+        spec = dataclasses.replace(spec, vocab_size=mcfg.vocab_size)
 
+    requests = spec.build(with_tokens=cfg.execute)
+
+    engines = None
+    if cfg.execute:
         from .batcher import ServingEngine
-        cfg = get_config(arch)
-        if reduced:
-            cfg = scaled_down(cfg)
-        spec = dataclasses.replace(spec, vocab_size=cfg.vocab_size)
-        max_len = max(spec.prompt_lens) + max(spec.gen_lens)
-        engines = [ServingEngine(arch, reduced=reduced, max_batch=max_batch,
-                                 max_len=max_len, mesh_shape=mesh_shape)
-                   for _ in fleet]
-
-    requests = synthetic_workload(spec, with_tokens=execute)
+        # Size decode caches from the generated trace — multi-turn sessions
+        # carry cumulative context past max(prompt_lens) (DESIGN.md §13.1).
+        max_len = max((r.prompt_len + r.gen_len for r in requests),
+                      default=max(spec.prompt_lens) + max(spec.gen_lens))
+        engines = [ServingEngine(cfg.arch, reduced=cfg.reduced,
+                                 max_batch=cfg.max_batch,
+                                 max_len=max_len, mesh_shape=cfg.mesh_shape)
+                   for _ in cfg.fleet]
+    faults = cfg.faults
     if isinstance(faults, str):
         from repro.runtime.fault import FaultInjector
         horizon = max((r.arrival for r in requests), default=0.0)
         faults = FaultInjector.parse(
-            faults, horizon=horizon, num_lanes=len(fleet),
+            faults, horizon=horizon, num_lanes=len(cfg.fleet),
             seed=(derive_seed(spec.seed, "faults")
-                  if fault_seed is None else fault_seed))
-    fleet_obj = FabricFleet(fleet, router=router, objective=objective,
-                            jitter_pct=jitter_pct,
-                            seed=spec.seed, max_batch=max_batch,
-                            wave_boundary=wave_boundary, pipeline=pipeline,
-                            buffering=buffering, dvfs=dvfs, engines=engines,
-                            tracer=tracer, residuals=residuals,
-                            faults=faults, recovery=recovery,
-                            ckpt_every=ckpt_every, tie_seed=tie_seed)
+                  if cfg.fault_seed is None else cfg.fault_seed))
+    fleet_obj = FabricFleet(cfg.fleet, router=cfg.router,
+                            objective=cfg.objective,
+                            jitter_pct=cfg.jitter_pct,
+                            seed=spec.seed, max_batch=cfg.max_batch,
+                            wave_boundary=cfg.wave_boundary,
+                            pipeline=cfg.pipeline,
+                            buffering=cfg.buffering, dvfs=cfg.dvfs,
+                            engines=engines,
+                            tracer=cfg.tracer, residuals=cfg.residuals,
+                            faults=faults, recovery=cfg.recovery,
+                            ckpt_every=cfg.ckpt_every, tie_seed=cfg.tie_seed,
+                            affinity=cfg.affinity,
+                            prefix_capacity=cfg.prefix_capacity,
+                            priority=cfg.priority, preempt=cfg.preempt,
+                            shed_depth=cfg.shed_depth)
     out = fleet_obj.run(requests)
-    out["arch"] = arch
+    out["arch"] = cfg.arch
     out["spec"] = spec
     out["faults"] = faults
+    out["config"] = cfg
     return out

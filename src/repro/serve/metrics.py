@@ -115,6 +115,13 @@ class ServeMetrics:
     recovered: int = 0            # requeued requests actually re-served here
     restore_jobs: int = 0         # Eq.-1-priced KV-restore offloads
     dropped: int = 0              # orphans never recovered (naive drop)
+    # Session-affinity counters (DESIGN.md §13).  All zero unless prefix
+    # reuse is enabled — the affinity-off identity checks rely on that.
+    prefix_hits: int = 0          # prefill waves that reused warm KV
+    prefix_misses: int = 0        # warm-capable requests served cold
+    prefix_hit_tokens: int = 0    # prompt tokens whose prefill was skipped
+    prefix_handoffs: int = 0      # hits served via a cross-fabric KV copy
+    preempted: int = 0            # running slots evicted for higher priority
     # Fabric-cycle recorders.
     latency_cycles: Recorder = field(default_factory=Recorder)
     ttft_cycles: Recorder = field(default_factory=Recorder)
@@ -215,6 +222,13 @@ class ServeMetrics:
                 "overlap_mean_cycles": self.overlap_cycles.mean(),
                 "bubble_total_cycles": self.bubble_cycles.total(),
             },
+            "prefix": {
+                "hits": self.prefix_hits,
+                "misses": self.prefix_misses,
+                "hit_tokens": self.prefix_hit_tokens,
+                "handoffs": self.prefix_handoffs,
+                "preempted": self.preempted,
+            },
             "energy": {
                 "joules": self.energy_j,
                 "watts": self.energy_j / span_s,
@@ -273,6 +287,12 @@ class ServeMetrics:
             if tpj is not None:
                 line += f", {tpj:.0f} tok/J"
             lines.append(line)
+        if self.prefix_hits or self.prefix_misses or self.preempted:
+            lines.append(
+                f"prefix: {self.prefix_hits} hits / {self.prefix_misses} "
+                f"misses ({self.prefix_hit_tokens} tokens skipped, "
+                f"{self.prefix_handoffs} handoffs); "
+                f"{self.preempted} preempted")
         if s["slo_attainment"] is not None:
             lines.append(f"SLO attainment: {100 * s['slo_attainment']:.1f}% "
                          f"({self.slo_met}/{self.slo_met + self.slo_missed})")
@@ -378,6 +398,13 @@ class FleetMetrics:
                 "recovered": self._total("recovered"),
                 "dropped": self._total("dropped"),
                 "restore_jobs": self._total("restore_jobs"),
+            },
+            "prefix": {
+                "hits": self._total("prefix_hits"),
+                "misses": self._total("prefix_misses"),
+                "hit_tokens": self._total("prefix_hit_tokens"),
+                "handoffs": self._total("prefix_handoffs"),
+                "preempted": self._total("preempted"),
             },
             "imbalance": self.imbalance(),
             "load_cv": self.load_cv(),

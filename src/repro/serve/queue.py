@@ -54,6 +54,23 @@ class Request:
     restore_len: int = 0
     restored_tokens: np.ndarray | None = None
     requeues: int = 0
+    # Session / tenant / prefix metadata (DESIGN.md §13).  All inert by
+    # default: a single-turn, single-tenant trace carries exactly the PR 1–9
+    # request shape.  ``prefix_len`` is the reusable context a warm KV cache
+    # holds for this session; ``prefix_hit`` is the portion the batcher
+    # actually skipped (set at admission when affinity is on);
+    # ``prefix_handoff`` marks a hit whose KV must first be copied from a
+    # peer lane (priced as a restore-kind memcpy offload).
+    session: int | None = None
+    turn: int = 0
+    tenant: int = 0
+    priority: int = 1                  # TenantClass priority (0 = highest)
+    prefix_id: int | None = None
+    prefix_len: int = 0
+    prefix_hit: int = 0
+    prefix_handoff: bool = False
+    prefix_resolved: bool = False      # hit/handoff already bound (router)
+    preemptions: int = 0
 
     @property
     def n_prompt_elems(self) -> int:
@@ -83,11 +100,20 @@ class Request:
 
 
 class RequestQueue:
-    """Arrival-ordered queue with admission bookkeeping."""
+    """Arrival-ordered queue with admission bookkeeping.
 
-    def __init__(self, requests: list[Request] | None = None):
+    With ``priority=True`` the *arrived* view is additionally ordered by
+    tenant class (lower ``Request.priority`` first): under overload the
+    batcher drains premium traffic before standard before batch.  Waiting
+    order (and therefore ``next_arrival``) stays purely temporal — priority
+    cannot make a request arrive earlier, only jump the backlog.
+    """
+
+    def __init__(self, requests: list[Request] | None = None, *,
+                 priority: bool = False):
         self._waiting: list[Request] = sorted(
             requests or [], key=lambda r: (r.effective_arrival, r.rid))
+        self.priority = priority
         self.rejected: list[Request] = []
         self.finished: list[Request] = []
 
@@ -117,6 +143,8 @@ class RequestQueue:
             if r.effective_arrival > now:
                 break
             out.append(r)
+        if self.priority:
+            out.sort(key=lambda r: (r.priority, r.effective_arrival, r.rid))
         return out
 
     def drain(self) -> list[Request]:

@@ -74,7 +74,8 @@ class OffloadAwareScheduler:
     def __init__(self, calibrator: OnlineCalibrator | OffloadModel, *,
                  available_m: Sequence[int] = (1, 2, 4, 8, 16, 32),
                  host_model: Callable[[int], float] | None = None,
-                 tracer=None, proc: str = "fabric"):
+                 tracer=None, proc: str = "fabric",
+                 shed_depth: dict[int, int] | None = None):
         if not available_m:
             raise ValueError("no cluster configurations available")
         if isinstance(calibrator, LinearDispatchModel):
@@ -92,6 +93,10 @@ class OffloadAwareScheduler:
         self.host_model = host_model or simulator.host_runtime
         self.admissions: list[AdmissionDecision] = []
         self.plans: list[BatchPlan] = []
+        # Priority overload shedding (DESIGN.md §13): per tenant-class
+        # priority, the max queue backlog at which the class is still
+        # admitted.  None (default) disables shedding entirely.
+        self.shed_depth = shed_depth
         # Optional span tracer (repro.obs): plan/admission instants carrying
         # the prediction and the Eq.-3 verdict, on this lane's tracks.
         self.tracer = tracer
@@ -102,18 +107,34 @@ class OffloadAwareScheduler:
         return self.available_m[-1]
 
     # ------------------------------------------------------------------ #
-    def admit(self, req: Request, *,
-              now: float | None = None) -> AdmissionDecision:
+    def admit(self, req: Request, *, now: float | None = None,
+              backlog: int = 0) -> AdmissionDecision:
         """Eq.-3 feasibility of the request's own prefill deadline.
 
         ``now`` is the virtual-clock time of the decision — trace-event
-        timestamp only, never an input to the verdict.
+        timestamp only, never an input to the verdict.  ``backlog`` is the
+        arrived-waiting depth at decision time: with ``shed_depth``
+        configured, a tenant class whose backlog cap is exceeded is shed
+        (rejected) before its Eq.-3 math is even consulted — under overload
+        the queue's capacity is spent on the classes that pay for it
+        (DESIGN.md §13).
         """
         model = self.calibrator.model
-        if req.slo_cycles is None:
+        shed_cap = (self.shed_depth.get(req.priority)
+                    if self.shed_depth is not None else None)
+        if shed_cap is not None and backlog > shed_cap:
+            d = AdmissionDecision(
+                req.rid, False, None,
+                f"overload shed: class priority {req.priority} backlog "
+                f"{backlog} > {shed_cap}")
+        elif req.slo_cycles is None:
             d = AdmissionDecision(req.rid, True, None, "no SLO")
         else:
-            n = req.n_prompt_elems
+            # A resolved warm prefix hit (batcher, DESIGN.md §13) shrinks
+            # the N the deadline is checked against — affinity can make an
+            # otherwise-infeasible turn admissible.  prefix_hit is 0 unless
+            # a PrefixStore is attached.
+            n = req.n_prompt_elems - req.prefix_hit
             m_min = decision.m_min_for_deadline(model, n, req.slo_cycles,
                                                 m_max=self.m_max)
             if m_min is None:

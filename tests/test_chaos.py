@@ -24,7 +24,7 @@ try:
 except ImportError:                               # pragma: no cover
     from proptest_fallback import given, settings, strategies as st
 
-from repro.serve import WorkloadSpec, serve_fleet
+from repro.serve import FleetConfig, WorkloadSpec, serve_fleet
 
 FLEET = (16, 8)
 
@@ -39,12 +39,14 @@ def _spec(seed: int) -> WorkloadSpec:
 def _baseline(seed: int) -> dict:
     """Fault-free reference run for one workload seed (cached: several
     examples share a seed and the baseline is deterministic)."""
-    return serve_fleet(_spec(seed), fleet=FLEET, pipeline=True)
+    return serve_fleet(_spec(seed), config=FleetConfig(
+               fleet=FLEET, pipeline=True))
 
 
 def _chaos(seed: int, lane: int, frac: float, recovery: str) -> dict:
-    return serve_fleet(_spec(seed), fleet=FLEET, pipeline=True,
-                       faults=f"crash@{lane}:{frac}", recovery=recovery)
+    return serve_fleet(_spec(seed), config=FleetConfig(
+               fleet=FLEET, pipeline=True, faults=f"crash@{lane}:{frac}",
+                              recovery=recovery))
 
 
 @settings(max_examples=12, deadline=None)

@@ -332,13 +332,13 @@ def test_run_sweep_point_list_honors_base_hw():
 
 
 def test_serve_workload_with_design_prior():
-    from repro.serve import WorkloadSpec, serve_workload
+    from repro.serve import ServeConfig, WorkloadSpec, serve_workload
     wide = DesignPoint(
         dispatch="multicast", sync="credit",
         hw=dataclasses.replace(sim.HWParams(), bus_bytes_per_cycle=192))
     assert wide.hw_overrides == (("bus_bytes_per_cycle", 192),)  # derived
-    out = serve_workload(WorkloadSpec(num_requests=24, seed=1),
-                         execute=False, design=wide)
+    out = serve_workload(WorkloadSpec(num_requests=24, seed=1), config=ServeConfig(
+              execute=False, design=wide))
     snap = out["calibration"]
     # The prior (and anything refit from this fabric) reflects the design's
     # 192 B/cycle bus: beta ~ 24/192, far from the paper's 0.25.
@@ -347,11 +347,12 @@ def test_serve_workload_with_design_prior():
 
 
 def test_serve_workload_design_requires_simulated_fabric():
-    from repro.serve import serve_workload
+    from repro.serve import ServeConfig, serve_workload
     with pytest.raises(ValueError, match="simulated"):
-        serve_workload(execute=False, fabric="wallclock",
-                       design=DesignPoint(dispatch="multicast",
-                                          sync="credit"))
+        serve_workload(config=ServeConfig(
+            execute=False, fabric="wallclock",
+                        design=DesignPoint(dispatch="multicast",
+                                                      sync="credit")))
 
 
 # --------------------------------------------------------------------------- #

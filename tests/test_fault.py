@@ -21,8 +21,9 @@ from repro.ckpt import (CheckpointManager, latest_step, list_steps,
                         restore_checkpoint, save_checkpoint)
 from repro.core.engine import FabricHalted, OffloadEngine
 from repro.runtime.fault import (DETECTION_CYCLES, FaultEvent, FaultInjector)
-from repro.serve import (RECOVERY_MODES, WorkloadSpec, derive_seed,
-                         serve_fleet, serve_workload)
+from repro.serve import (FleetConfig, RECOVERY_MODES, ServeConfig,
+                         WorkloadSpec, derive_seed, serve_fleet,
+                         serve_workload)
 
 #: Saturating mixed trace against a big+little fleet: the crashed lane holds
 #: queued AND in-flight work at crash time (same shape as the benchmark).
@@ -188,8 +189,9 @@ def test_engine_halt_aborts_future_jobs_and_refuses_submits():
 # Fleet recovery: crash, stall, skew
 # --------------------------------------------------------------------------- #
 def _chaos(recovery="restore", faults="crash@1:0.45", spec=CHAOS_SPEC):
-    return serve_fleet(spec, fleet=CHAOS_FLEET, router="model",
-                       pipeline=True, faults=faults, recovery=recovery)
+    return serve_fleet(spec, config=FleetConfig(
+               fleet=CHAOS_FLEET, router="model", pipeline=True, faults=faults,
+                              recovery=recovery))
 
 
 def test_crash_recovery_conserves_requests_and_beats_drop():
@@ -230,8 +232,8 @@ def test_crash_recovery_requeues_after_detection():
 
 
 def test_pre_detection_completions_bit_identical_to_fault_free():
-    base = serve_fleet(CHAOS_SPEC, fleet=CHAOS_FLEET, router="model",
-                       pipeline=True)
+    base = serve_fleet(CHAOS_SPEC, config=FleetConfig(
+               fleet=CHAOS_FLEET, router="model", pipeline=True))
     rec = _chaos("restore")
     detect = rec["faults"].detect_time(1)
     bmap = {r.rid: r for r in base["requests"]}
@@ -262,16 +264,17 @@ def test_reprefill_recovery_mode_completes_without_restores():
     assert ft["restore_jobs"] == 0        # no checkpoint restore priced
     assert RECOVERY_MODES == ("restore", "reprefill", "drop")
     with pytest.raises(ValueError):
-        serve_fleet(CHAOS_SPEC, fleet=(8, 8), recovery="resurrect")
+        serve_fleet(CHAOS_SPEC, config=FleetConfig(
+            fleet=(8, 8), recovery="resurrect"))
 
 
 def test_stall_delays_but_loses_nothing():
     spec = WorkloadSpec(num_requests=32, rate_rps=1_500_000.0,
                         prompt_lens=(512, 1024), gen_lens=(8, 16),
                         slo_fraction=0.0, seed=3)
-    base = serve_fleet(spec, fleet=(16, 16), pipeline=True)
-    out = serve_fleet(spec, fleet=(16, 16), pipeline=True,
-                      faults="stall@0:0.4+0.2")
+    base = serve_fleet(spec, config=FleetConfig(fleet=(16, 16), pipeline=True))
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(16, 16), pipeline=True, faults="stall@0:0.4+0.2"))
     m = dict(out["metrics"].lanes)["f0:16c"]
     assert m.stalls >= 1 and m.stall_cycles > 0.0
     s, bs = out["metrics"].summary(), base["metrics"].summary()
@@ -289,8 +292,8 @@ def test_skew_quarantines_lane_and_probation_releases_it():
     spec = WorkloadSpec(num_requests=64, rate_rps=1_500_000.0,
                         prompt_lens=(512, 1024, 2048), gen_lens=(8, 16),
                         slo_fraction=0.0, seed=5)
-    out = serve_fleet(spec, fleet=(16, 16), pipeline=True,
-                      faults="skew@1:0.3+0.5x4.0")
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(16, 16), pipeline=True, faults="skew@1:0.3+0.5x4.0"))
     m = dict(out["metrics"].lanes)["f1:16c"]
     assert m.skewed_jobs > 0
     assert out["quarantined_lanes"] == [1]
@@ -312,8 +315,8 @@ def test_single_fabric_crash_drops_orphans():
     spec = WorkloadSpec(num_requests=24, rate_rps=1_500_000.0,
                         prompt_lens=(512, 1024), gen_lens=(8, 16),
                         slo_fraction=0.0, seed=2)
-    out = serve_workload(spec, execute=False, pipeline=True,
-                         faults="crash@0:0.5")
+    out = serve_workload(spec, config=ServeConfig(
+              execute=False, pipeline=True, faults="crash@0:0.5"))
     s = out["metrics"].summary()
     assert s["faults"]["crashes"] == 1
     assert s["recovery"]["dropped"] > 0          # nowhere to recover to
@@ -327,8 +330,9 @@ def test_fault_free_run_unchanged_by_fault_plumbing():
     timeline exactly (guards the zero-cost claim of DESIGN.md §10)."""
     spec = WorkloadSpec(num_requests=48, rate_rps=2e6, seed=7,
                         gen_lens=(4, 16, 64))
-    a = serve_fleet(spec, fleet=(32, 8), pipeline=True)
-    b = serve_fleet(spec, fleet=(32, 8), pipeline=True, faults=None)
+    a = serve_fleet(spec, config=FleetConfig(fleet=(32, 8), pipeline=True))
+    b = serve_fleet(spec, config=FleetConfig(
+            fleet=(32, 8), pipeline=True, faults=None))
     assert a["metrics"].summary() == b["metrics"].summary()
     for ra, rb in zip(a["requests"], b["requests"]):
         assert (ra.rid, ra.t_done, ra.slo_met) == (rb.rid, rb.t_done,
@@ -356,9 +360,11 @@ def test_chaos_run_reproducible_from_one_seed():
 def test_router_tie_seed_only_breaks_exact_ties():
     spec = WorkloadSpec(num_requests=48, rate_rps=2e6, seed=7,
                         gen_lens=(4, 16, 64))
-    base = serve_fleet(spec, fleet=(32, 8), pipeline=True)
-    tied = serve_fleet(spec, fleet=(32, 8), pipeline=True, tie_seed=123)
-    again = serve_fleet(spec, fleet=(32, 8), pipeline=True, tie_seed=123)
+    base = serve_fleet(spec, config=FleetConfig(fleet=(32, 8), pipeline=True))
+    tied = serve_fleet(spec, config=FleetConfig(
+               fleet=(32, 8), pipeline=True, tie_seed=123))
+    again = serve_fleet(spec, config=FleetConfig(
+                fleet=(32, 8), pipeline=True, tie_seed=123))
     # Seeded tie-breaks are reproducible...
     assert [d.lane for d in tied["routes"]] == \
         [d.lane for d in again["routes"]]
@@ -399,10 +405,11 @@ def test_tokens_bit_identical_under_crash_with_real_engine():
     spec = WorkloadSpec(num_requests=10, rate_rps=2_000_000.0,
                         prompt_lens=(8, 16), gen_lens=(4, 6),
                         slo_fraction=0.0, seed=11)
-    base = serve_fleet(spec, fleet=(8, 8), pipeline=True, execute=True,
-                       max_batch=3)
-    rec = serve_fleet(spec, fleet=(8, 8), pipeline=True, execute=True,
-                      max_batch=3, faults="crash@1:0.5", recovery="restore")
+    base = serve_fleet(spec, config=FleetConfig(
+               fleet=(8, 8), pipeline=True, execute=True, max_batch=3))
+    rec = serve_fleet(spec, config=FleetConfig(
+              fleet=(8, 8), pipeline=True, execute=True, max_batch=3,
+                            faults="crash@1:0.5", recovery="restore"))
     ft = rec["metrics"].summary()["faults"]
     assert ft["orphaned"] > 0 and ft["recovered"] == ft["orphaned"]
     bmap = {r.rid: r for r in base["requests"]}

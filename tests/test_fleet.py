@@ -23,9 +23,10 @@ from repro.core.runtime_model import PAPER_MODEL
 from repro.dse.fleet import (DEFAULT_COMPOSITIONS, FleetDesign, FleetSpace,
                              composition_name, fabric_cost, fleet_cost,
                              fleet_front, silicon_area, sweep_fleets)
-from repro.serve import (FabricFleet, OffloadAwareScheduler, OnlineCalibrator,
-                         Request, WorkloadSpec, fabric_prior, serve_fleet,
-                         serve_workload, synthetic_workload)
+from repro.serve import (FabricFleet, FleetConfig, OffloadAwareScheduler,
+                         OnlineCalibrator, Request, ServeConfig,
+                         WorkloadSpec, fabric_prior, serve_fleet,
+                         serve_workload)
 
 STRAGGLER = WorkloadSpec(num_requests=96, rate_rps=2e6, gen_lens=(4, 16, 64),
                          seed=7)
@@ -81,9 +82,10 @@ def test_scheduler_preview_matches_plan_without_recording():
 @pytest.mark.parametrize("pipeline", [False, True])
 @pytest.mark.parametrize("router", ["model", "rr", "lql"])
 def test_one_fabric_fleet_identical_to_single_path(pipeline, router):
-    single = serve_workload(STRAGGLER, execute=False, pipeline=pipeline)
-    fleet = serve_fleet(STRAGGLER, fleet=(32,), router=router,
-                        pipeline=pipeline)
+    single = serve_workload(STRAGGLER, config=ServeConfig(
+                 execute=False, pipeline=pipeline))
+    fleet = serve_fleet(STRAGGLER, config=FleetConfig(
+                fleet=(32,), router=router, pipeline=pipeline))
     assert (single["metrics"].summary()
             == fleet["lanes"][0]["metrics"].summary())
     for a, b in zip(single["requests"], fleet["requests"]):
@@ -104,10 +106,11 @@ def test_one_fabric_fleet_tokens_identical_with_real_engine():
     """Bit-identical generated tokens through the fleet layer (real JAX)."""
     spec = WorkloadSpec(num_requests=6, rate_rps=2e6, prompt_lens=(4, 8),
                         gen_lens=(2, 3), slo_fraction=0.0, seed=3)
-    single = serve_workload(spec, arch="chatglm3-6b", execute=True,
-                            max_batch=3, pipeline=True)
-    fleet = serve_fleet(spec, fleet=(32,), arch="chatglm3-6b", execute=True,
-                        max_batch=3, pipeline=True)
+    single = serve_workload(spec, config=ServeConfig(
+                 arch="chatglm3-6b", execute=True, max_batch=3, pipeline=True))
+    fleet = serve_fleet(spec, config=FleetConfig(
+                fleet=(32,), arch="chatglm3-6b", execute=True, max_batch=3,
+                                pipeline=True))
     for a, b in zip(single["requests"], fleet["requests"]):
         assert a.rid == b.rid
         np.testing.assert_array_equal(a.generated, b.generated)
@@ -124,7 +127,8 @@ def test_router_work_conserving_on_seeded_traces(seed, policy):
     at every decision with an idle feasible lane, an idle lane is chosen."""
     spec = WorkloadSpec(num_requests=64, rate_rps=3e6, gen_lens=(4, 16, 64),
                         seed=seed)
-    out = serve_fleet(spec, fleet=(32, 8, 8), router=policy, pipeline=True)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(32, 8, 8), router=policy, pipeline=True))
     checked = 0
     for d in out["routes"]:
         idle_feasible = [i for i in range(3)
@@ -140,7 +144,8 @@ def test_router_work_conserving_on_seeded_traces(seed, policy):
 def test_router_model_prefers_feasible_lanes(seed):
     """While a lane that can meet the SLO exists, the request goes there."""
     spec = WorkloadSpec(num_requests=64, rate_rps=3e6, seed=seed)
-    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True))
     for d in out["routes"]:
         if any(d.feasible):
             assert d.feasible[d.lane], d
@@ -161,15 +166,15 @@ def test_globally_infeasible_request_charges_no_backlog():
 
 
 def test_router_rr_cycles_lanes():
-    out = serve_fleet(STRAGGLER, fleet=(16, 16, 16), router="rr",
-                      pipeline=True)
+    out = serve_fleet(STRAGGLER, config=FleetConfig(
+              fleet=(16, 16, 16), router="rr", pipeline=True))
     lanes = [d.lane for d in out["routes"]]
     assert lanes[:6] == [0, 1, 2, 0, 1, 2]
 
 
 def test_fleet_routes_cover_trace_and_preserve_requests():
-    out = serve_fleet(STRAGGLER, fleet=(32, 8, 8), router="model",
-                      pipeline=True)
+    out = serve_fleet(STRAGGLER, config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True))
     assert len(out["routes"]) == STRAGGLER.num_requests
     assert [r.rid for r in out["requests"]] == \
         list(range(STRAGGLER.num_requests))
@@ -191,7 +196,8 @@ def test_fleet_per_fabric_calibrators_learn_their_own_hardware():
     an online refit needs."""
     spec = WorkloadSpec(num_requests=128, rate_rps=4e6,
                         gen_lens=(4, 16, 64), seed=7)
-    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True))
     snaps = out["calibrations"]
     assert all(s.source == "fitted" for s in snaps)
     assert abs(snaps[0].beta - 0.25) < 0.03
@@ -204,8 +210,8 @@ def test_fleet_prior_only_trace_keeps_per_fabric_priors():
     """Without SLOs every plan picks the same (best) extent, the window
     lacks M diversity, and each lane keeps serving its own fabric's prior —
     which already fits that fabric's scaled hardware within the Eq.-2 bar."""
-    out = serve_fleet(PREFILL_HEAVY, fleet=(32, 8, 8), router="model",
-                      pipeline=True)
+    out = serve_fleet(PREFILL_HEAVY, config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True))
     snaps = out["calibrations"]
     assert all(s.source == "prior" for s in snaps)
     assert snaps[0].alpha == PAPER_MODEL.alpha
@@ -215,8 +221,8 @@ def test_fleet_prior_only_trace_keeps_per_fabric_priors():
 def test_heterogeneous_model_routing_beats_round_robin():
     """The acceptance A/B at test scale: model-driven routing wins both
     headline metrics on the big+little fleet, same completion set."""
-    outs = {p: serve_fleet(PREFILL_HEAVY, fleet=(32, 8, 8), router=p,
-                           pipeline=True)
+    outs = {p: serve_fleet(PREFILL_HEAVY, config=FleetConfig(
+                   fleet=(32, 8, 8), router=p, pipeline=True))
             for p in ("model", "rr")}
     ms = outs["model"]["metrics"].summary()
     rs = outs["rr"]["metrics"].summary()
@@ -231,7 +237,8 @@ def test_idle_lane_does_not_poison_imbalance():
     must not report near-total imbalance because of it."""
     spec = WorkloadSpec(num_requests=16, rate_rps=2e4,
                         prompt_lens=(4096, 8192), slo_fraction=0.0, seed=3)
-    out = serve_fleet(spec, fleet=(32, 8), router="model", pipeline=True)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(32, 8), router="model", pipeline=True))
     hist = {d.lane for d in out["routes"]}
     assert hist == {0}      # light load, long prompts: big lane only
     s = out["metrics"].summary()
@@ -260,7 +267,8 @@ def test_all_rejected_composition_scores_worst_not_crash():
 
 
 def test_fleet_metrics_summary_shapes():
-    out = serve_fleet(STRAGGLER, fleet=(16, 8, 8), router="model")
+    out = serve_fleet(STRAGGLER, config=FleetConfig(
+              fleet=(16, 8, 8), router="model"))
     fm = out["metrics"]
     s = fm.summary()
     assert s["fabrics"] == 3 and len(s["per_fabric"]) == 3
@@ -355,10 +363,10 @@ def test_single_request_goes_to_fastest_feasible_fabric():
 
 
 def test_workload_reuse_across_policies_does_not_mutate_requests():
-    reqs = synthetic_workload(STRAGGLER, with_tokens=False)
+    reqs = STRAGGLER.build(with_tokens=False)
     arrivals = [r.arrival for r in reqs]
     FabricFleet((16, 8), router="model").run(
-        synthetic_workload(STRAGGLER, with_tokens=False))
+        STRAGGLER.build(with_tokens=False))
     assert [r.arrival for r in reqs] == arrivals
 
 
@@ -375,9 +383,11 @@ def test_router_objective_latency_default_is_bit_identical():
     historical router exactly — summaries, routes, and no energy previews
     computed on the default path."""
     spec = PREFILL_HEAVY
-    base = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True)
-    explicit = serve_fleet(spec, fleet=(32, 8, 8), router="model",
-                           pipeline=True, objective="latency")
+    base = serve_fleet(spec, config=FleetConfig(
+               fleet=(32, 8, 8), router="model", pipeline=True))
+    explicit = serve_fleet(spec, config=FleetConfig(
+                   fleet=(32, 8, 8), router="model", pipeline=True,
+                                      objective="latency"))
     assert base["metrics"].summary() == explicit["metrics"].summary()
     assert [d.lane for d in base["routes"]] == \
         [d.lane for d in explicit["routes"]]
@@ -404,9 +414,8 @@ def test_router_objective_energy_prefers_cheaper_joules():
 
 
 def test_router_objective_edp_records_previews():
-    out = serve_fleet(WorkloadSpec(num_requests=24, rate_rps=2e6, seed=7),
-                      fleet=(32, 8, 8), router="model", pipeline=True,
-                      objective="edp")
+    out = serve_fleet(WorkloadSpec(num_requests=24, rate_rps=2e6, seed=7), config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True, objective="edp"))
     assert all(d.objective == "edp" for d in out["routes"])
     assert all(d.energy is not None and len(d.energy) == 3
                for d in out["routes"])
@@ -417,9 +426,10 @@ def test_fleet_dvfs_rescales_energy_never_cycles():
     """A fleet pinned to turbo serves the identical cycle-domain trace —
     same throughput, p99, routes — with different joules (DESIGN.md §11.2)."""
     spec = WorkloadSpec(num_requests=32, rate_rps=2e6, seed=7)
-    base = serve_fleet(spec, fleet=(16, 8), router="model", pipeline=True)
-    turbo = serve_fleet(spec, fleet=(16, 8), router="model", pipeline=True,
-                        dvfs="turbo")
+    base = serve_fleet(spec, config=FleetConfig(
+               fleet=(16, 8), router="model", pipeline=True))
+    turbo = serve_fleet(spec, config=FleetConfig(
+                fleet=(16, 8), router="model", pipeline=True, dvfs="turbo"))
     bs, ts = base["metrics"].summary(), turbo["metrics"].summary()
     assert bs["throughput_rps"] == ts["throughput_rps"]
     assert bs["latency_us"] == ts["latency_us"]

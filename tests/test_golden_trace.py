@@ -31,15 +31,16 @@ def generate_trace(path) -> dict:
     horizon, recover with checkpoint restore.  Must stay in lockstep with
     benchmarks/fault_tolerance.py's smoke tier."""
     from repro.obs import ResidualTracker, Tracer, write_chrome_trace
-    from repro.serve import WorkloadSpec, serve_fleet
+    from repro.serve import FleetConfig, WorkloadSpec, serve_fleet
 
     spec = WorkloadSpec(num_requests=96, rate_rps=1_500_000.0,
                         prompt_lens=(512, 1024, 2048), gen_lens=(64, 128),
                         slo_fraction=0.5, infeasible_fraction=0.0, seed=11)
     tracer, residuals = Tracer(), ResidualTracker()
-    out = serve_fleet(spec, fleet=(32, 8, 8), router="model", pipeline=True,
-                      faults="crash@1:0.45", recovery="restore",
-                      tracer=tracer, residuals=residuals)
+    out = serve_fleet(spec, config=FleetConfig(
+              fleet=(32, 8, 8), router="model", pipeline=True,
+                            faults="crash@1:0.45", recovery="restore",
+                            tracer=tracer, residuals=residuals))
     write_chrome_trace(tracer, path)
     return out
 

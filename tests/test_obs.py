@@ -34,7 +34,7 @@ from repro.core import engine as eng
 from repro.core import simulator as sim
 from repro.obs import (NULL, ResidualTracker, Tracer, read_jsonl, to_chrome,
                        write_chrome_trace, write_jsonl)
-from repro.serve import serve_workload
+from repro.serve import FleetConfig, ServeConfig, serve_workload
 from repro.serve.fleet import serve_fleet
 from repro.serve.metrics import Recorder, ServeMetrics
 from repro.serve.workload import WorkloadSpec
@@ -206,9 +206,8 @@ def test_jsonl_roundtrip(tmp_path):
 # --------------------------------------------------------------------------- #
 def _serve_traced(num_requests=16, **kw):
     tr, res = Tracer(), ResidualTracker()
-    out = serve_workload(WorkloadSpec(num_requests=num_requests),
-                         execute=False, pipeline=True,
-                         tracer=tr, residuals=res, **kw)
+    out = serve_workload(WorkloadSpec(num_requests=num_requests), config=ServeConfig(
+              execute=False, pipeline=True, tracer=tr, residuals=res, **kw))
     return tr, res, out
 
 
@@ -272,11 +271,13 @@ def test_trace_report_renders_both_formats(tmp_path):
 def test_fleet_1x32_trace_event_identical_to_single_fabric():
     spec = WorkloadSpec(num_requests=24)
     tr_fleet = Tracer()
-    serve_fleet(spec, fleet=(32,), pipeline=True, tracer=tr_fleet,
-                residuals=ResidualTracker())
+    serve_fleet(spec, config=FleetConfig(
+        fleet=(32,), pipeline=True, tracer=tr_fleet,
+                residuals=ResidualTracker()))
     tr_single = Tracer()
-    serve_workload(spec, execute=False, pipeline=True, tracer=tr_single,
-                   residuals=ResidualTracker())
+    serve_workload(spec, config=ServeConfig(
+        execute=False, pipeline=True, tracer=tr_single,
+                residuals=ResidualTracker()))
     lane = tr_single.lane_events("f0:32c")
     assert len(lane) > 100
     assert tr_fleet.lane_events("f0:32c") == lane
@@ -286,7 +287,8 @@ def test_fleet_1x32_trace_event_identical_to_single_fabric():
 
 def test_tracing_disabled_leaves_summary_bit_identical():
     spec = WorkloadSpec(num_requests=24)
-    plain = serve_workload(spec, execute=False, pipeline=True)
+    plain = serve_workload(spec, config=ServeConfig(
+                execute=False, pipeline=True))
     tr, res, traced = _serve_traced(num_requests=24)
     assert traced["metrics"].summary() == plain["metrics"].summary()
     assert len(tr) > 0 and len(res) > 0
@@ -322,8 +324,8 @@ def test_residual_tracker_windowed_mape():
 
 def test_fleet_residual_mape_tracks_calibrator_within_1pp():
     tr, res = Tracer(), ResidualTracker()
-    out = serve_fleet(WorkloadSpec(num_requests=96), fleet=(32, 8, 8),
-                      pipeline=True, tracer=tr, residuals=res)
+    out = serve_fleet(WorkloadSpec(num_requests=96), config=FleetConfig(
+              fleet=(32, 8, 8), pipeline=True, tracer=tr, residuals=res))
     lanes = [f"f{i}:{c}c" for i, c in enumerate((32, 8, 8))]
     checked = 0
     for lane, calib in zip(lanes, out["calibrations"]):

@@ -6,8 +6,8 @@ import pytest
 from repro.core import decision
 from repro.core.runtime_model import OffloadModel, PAPER_MODEL
 from repro.serve import (ContinuousBatcher, OffloadAwareScheduler,
-                         OnlineCalibrator, Request, SimulatedFabric,
-                         WorkloadSpec, serve_workload, synthetic_workload)
+                         OnlineCalibrator, Request, ServeConfig,
+                         SimulatedFabric, WorkloadSpec, serve_workload)
 
 AVAILABLE = (1, 2, 4, 8, 16, 32)
 
@@ -170,8 +170,8 @@ def test_calibrator_sliding_window_tracks_drift():
 # --------------------------------------------------------------------------- #
 def test_workload_deterministic_and_mixed():
     spec = WorkloadSpec(num_requests=64, seed=3)
-    a = synthetic_workload(spec)
-    b = synthetic_workload(spec)
+    a = spec.build()
+    b = spec.build()
     assert [r.arrival for r in a] == [r.arrival for r in b]
     assert [r.slo_cycles for r in a] == [r.slo_cycles for r in b]
     assert all(np.array_equal(x.tokens, y.tokens) for x, y in zip(a, b))
@@ -192,8 +192,8 @@ def test_workload_deterministic_and_mixed():
 # End-to-end (dry: no JAX engine)
 # --------------------------------------------------------------------------- #
 def test_dry_serving_loop_end_to_end():
-    out = serve_workload(WorkloadSpec(num_requests=80, seed=11),
-                         execute=False)
+    out = serve_workload(WorkloadSpec(num_requests=80, seed=11), config=ServeConfig(
+              execute=False))
     m = out["metrics"]
     assert m.completed + m.rejected == m.submitted == 80
     assert m.rejected > 0                       # admission control fired
@@ -276,8 +276,9 @@ STRAGGLER_SPEC = WorkloadSpec(num_requests=256, rate_rps=2e6,
 
 def test_midwave_admission_beats_wave_boundary_on_same_trace():
     """The acceptance A/B: same Poisson trace, higher rps + no worse p99."""
-    wave = serve_workload(STRAGGLER_SPEC, execute=False, wave_boundary=True)
-    cont = serve_workload(STRAGGLER_SPEC, execute=False)
+    wave = serve_workload(STRAGGLER_SPEC, config=ServeConfig(
+               execute=False, wave_boundary=True))
+    cont = serve_workload(STRAGGLER_SPEC, config=ServeConfig(execute=False))
     ws, cs = wave["metrics"].summary(), cont["metrics"].summary()
     assert cs["throughput_rps"] > ws["throughput_rps"]
     assert cs["latency_us"]["p99"] <= ws["latency_us"]["p99"]
@@ -293,8 +294,8 @@ def test_midwave_admission_beats_wave_boundary_on_same_trace():
 
 
 def test_continuous_metrics_series_and_goodput():
-    out = serve_workload(WorkloadSpec(num_requests=64, seed=11),
-                         execute=False)
+    out = serve_workload(WorkloadSpec(num_requests=64, seed=11), config=ServeConfig(
+              execute=False))
     m = out["metrics"]
     # One queue-delay sample per served request; delays are non-negative.
     assert len(m.queue_delay_cycles) == m.completed
@@ -313,8 +314,8 @@ def test_continuous_metrics_series_and_goodput():
 
 
 def test_wave_boundary_flag_reproduces_legacy_wave_metrics():
-    out = serve_workload(WorkloadSpec(num_requests=80, seed=11),
-                         execute=False, wave_boundary=True)
+    out = serve_workload(WorkloadSpec(num_requests=80, seed=11), config=ServeConfig(
+              execute=False, wave_boundary=True))
     m = out["metrics"]
     assert m.completed + m.rejected == m.submitted == 80
     assert m.mid_wave_admissions == 0
@@ -404,8 +405,9 @@ def test_simulated_fabric_calibration_uses_planned_job_size():
 def test_pipelined_beats_midwave_on_same_trace():
     """The tentpole A/B: hiding refill-prefill dispatch/sync under in-flight
     decode work buys throughput on top of mid-wave admission."""
-    cont = serve_workload(STRAGGLER_SPEC, execute=False)
-    pipe = serve_workload(STRAGGLER_SPEC, execute=False, pipeline=True)
+    cont = serve_workload(STRAGGLER_SPEC, config=ServeConfig(execute=False))
+    pipe = serve_workload(STRAGGLER_SPEC, config=ServeConfig(
+               execute=False, pipeline=True))
     cs, ps = cont["metrics"].summary(), pipe["metrics"].summary()
     assert ps["throughput_rps"] > cs["throughput_rps"]
     assert ps["latency_us"]["p99"] <= cs["latency_us"]["p99"]
@@ -420,15 +422,16 @@ def test_pipelined_beats_midwave_on_same_trace():
 
 
 def test_pipelined_calibration_stays_under_2pct_mape():
-    out = serve_workload(STRAGGLER_SPEC, execute=False, pipeline=True)
+    out = serve_workload(STRAGGLER_SPEC, config=ServeConfig(
+              execute=False, pipeline=True))
     snap = out["calibration"]
     assert snap.source == "fitted"
     assert snap.window_mape_pct is not None and snap.window_mape_pct <= 2.0
 
 
 def test_pipelined_metrics_overlap_and_bubble_series():
-    out = serve_workload(WorkloadSpec(num_requests=64, seed=11),
-                         execute=False, pipeline=True)
+    out = serve_workload(WorkloadSpec(num_requests=64, seed=11), config=ServeConfig(
+              execute=False, pipeline=True))
     m = out["metrics"]
     # One overlap/bubble point per job (prefills + decodes).
     assert len(m.overlap_cycles) == len(out["plans"])
@@ -442,8 +445,8 @@ def test_pipelined_metrics_overlap_and_bubble_series():
 
 
 def test_sequential_modes_record_no_overlap_series():
-    out = serve_workload(WorkloadSpec(num_requests=16, seed=3),
-                         execute=False)
+    out = serve_workload(WorkloadSpec(num_requests=16, seed=3), config=ServeConfig(
+              execute=False))
     m = out["metrics"]
     assert len(m.overlap_cycles) == 0 and m.pipelined_prefills == 0
     assert "pipeline:" not in m.format_summary()

@@ -1,0 +1,336 @@
+"""Trace-driven workload family + session affinity + config API (§13).
+
+Covers the DESIGN.md §13 layer end to end:
+
+  * every ``WORKLOADS`` member is seed-deterministic, and the degenerate
+    configs reproduce the historical PR 1–9 Poisson trace bit for bit;
+  * multi-turn sessions carry cumulative context (prompt = prefix + new),
+    tenant classes map onto priorities and SLO sampling;
+  * ``PrefixStore`` LRU residency + checkpoint-backed KV pages;
+  * warm-hit prefill skipping, priority draining, preemption, shedding;
+  * the frozen ``ServeConfig`` / ``FleetConfig`` API and its deprecated
+    kwarg/alias shims (byte-identical, warning on the legacy path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serve import (ContinuousBatcher, FleetConfig, OffloadAwareScheduler,
+                         OnlineCalibrator, PrefixStore, Request, ServeConfig,
+                         SimulatedFabric, TENANT_CLASSES, WORKLOADS,
+                         WorkloadSpec, serve_fleet, serve_workload,
+                         synthetic_workload, workload_for)
+
+#: Single-turn smoke trace (the PR 9 shape) for the inertness identities.
+SINGLE_TURN = WorkloadSpec(num_requests=64, rate_rps=2e6, seed=7)
+#: Bursty multi-tenant session trace for the affinity paths.
+SESSIONS = WorkloadSpec(num_requests=48, rate_rps=1e6, arrival="mmpp",
+                        turns=4, think_time_s=(1e-6, 5e-6), tenants=3,
+                        tenant_classes=("premium", "standard", "batch"),
+                        seed=7)
+
+
+def _trace_key(reqs):
+    return [(r.rid, r.arrival, r.prompt_len, r.gen_len, r.slo_cycles,
+             r.session, r.turn, r.tenant, r.priority, r.prefix_id,
+             r.prefix_len) for r in reqs]
+
+
+def _served_key(out):
+    return [(r.rid, r.t_done, r.slo_met, r.state.value)
+            for r in out["requests"]]
+
+
+# --------------------------------------------------------------------------- #
+# Workload family
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arrival", sorted(WORKLOADS))
+def test_every_family_member_is_seed_deterministic(arrival):
+    spec = WorkloadSpec(num_requests=48, arrival=arrival, turns=3,
+                        tenants=2, think_time_s=(1e-6, 2e-6), seed=5)
+    a, b = spec.build(), spec.build()
+    assert _trace_key(a) == _trace_key(b)
+    assert all(np.array_equal(x.tokens, y.tokens) for x, y in zip(a, b))
+    other = dataclasses.replace(spec, seed=6).build()
+    assert _trace_key(a) != _trace_key(other)
+
+
+def test_degenerate_session_spec_is_bitidentical_to_poisson():
+    """turns=1 + zero think-time + one tenant == the historical stream:
+    the session machinery must consume no extra rng state."""
+    base = SINGLE_TURN.build()
+    degenerate = dataclasses.replace(SINGLE_TURN, turns=1,
+                                     think_time_s=(0.0, 0.0),
+                                     tenants=1).build()
+    assert _trace_key(base) == _trace_key(degenerate)
+    assert all(np.array_equal(x.tokens, y.tokens)
+               for x, y in zip(base, degenerate))
+    # Single-turn requests carry exactly the PR 1-9 shape: no session
+    # metadata, default priority, zero prefix.
+    assert all(r.session is None and r.prefix_id is None
+               and r.prefix_len == 0 and r.priority == 1 for r in base)
+
+
+def test_gamma_and_mmpp_are_burstier_than_poisson():
+    n = 4096
+    cvs = {}
+    for arrival in WORKLOADS:
+        spec = WorkloadSpec(num_requests=n, arrival=arrival, seed=3)
+        gaps = np.diff([r.arrival for r in spec.build(with_tokens=False)])
+        cvs[arrival] = gaps.std() / gaps.mean()
+    assert cvs["poisson"] == pytest.approx(1.0, abs=0.1)
+    assert cvs["gamma"] > 1.5          # cv=3 renewal process
+    assert cvs["mmpp"] > 1.1           # ON/OFF bursts (default 20% duty)
+    # Same mean rate across families (the traces are burstier, not heavier).
+    for arrival in ("gamma", "mmpp"):
+        spec = WorkloadSpec(num_requests=n, arrival=arrival, seed=3)
+        reqs = spec.build(with_tokens=False)
+        mean_rate = (len(reqs) - 1) / (reqs[-1].arrival / 1e9)
+        assert mean_rate == pytest.approx(spec.rate_rps, rel=0.2)
+
+
+def test_heavy_tail_lengths_are_clipped_to_the_mix():
+    for dist in ("lognormal", "zipf"):
+        spec = WorkloadSpec(num_requests=256, length_dist=dist, seed=2)
+        reqs = spec.build(with_tokens=False)
+        lens = {r.prompt_len for r in reqs}
+        assert len(lens) > 3
+        assert max(lens) <= max(spec.prompt_lens)
+        assert min(lens) >= 1
+
+
+def test_sessions_carry_cumulative_context():
+    reqs = SESSIONS.build(with_tokens=False)
+    by_session: dict[int, list] = {}
+    for r in reqs:
+        by_session.setdefault(r.session, []).append(r)
+    assert len(by_session) == 12               # 48 requests / 4 turns
+    for turns in by_session.values():
+        turns.sort(key=lambda r: r.turn)
+        ctx = 0
+        for r in turns:
+            assert r.prefix_len == ctx         # warm cache could skip this
+            assert r.prompt_len > ctx          # context re-sent + new tokens
+            assert r.prefix_id == r.session
+            ctx = r.prompt_len + r.gen_len
+        # Turn arrivals are ordered by think time.
+        arr = [r.arrival for r in turns]
+        assert arr == sorted(arr)
+
+
+def test_tenant_classes_drive_priority_and_slo_sampling():
+    reqs = SESSIONS.build(with_tokens=False)
+    by_prio: dict[int, list] = {}
+    for r in reqs:
+        by_prio.setdefault(r.priority, []).append(r)
+    assert set(by_prio) == {0, 1, 2}
+    # Premium always carries a deadline; batch never does.
+    assert all(r.slo_cycles is not None for r in by_prio[0])
+    assert all(r.slo_cycles is None for r in by_prio[2])
+    assert TENANT_CLASSES["premium"].priority == 0
+    assert workload_for(SESSIONS).kind == "mmpp"
+
+
+def test_unknown_family_knobs_are_rejected():
+    with pytest.raises(ValueError):
+        WorkloadSpec(arrival="pareto")
+    with pytest.raises(ValueError):
+        WorkloadSpec(length_dist="cauchy")
+    with pytest.raises(ValueError):
+        WorkloadSpec(tenant_classes=("gold",))
+    with pytest.raises(ValueError):
+        WorkloadSpec(turns=0)
+
+
+# --------------------------------------------------------------------------- #
+# PrefixStore
+# --------------------------------------------------------------------------- #
+def test_prefix_store_lru_capacity_and_counters():
+    store = PrefixStore(capacity_tokens=1000)
+    assert store.insert(1, 400) == []
+    assert store.insert(2, 400) == []
+    assert store.hit(1, 400) == 400            # touches 1: LRU order 2, 1
+    assert store.insert(3, 400) == [2]         # evicts the cold prefix
+    assert store.resident(2) == 0
+    assert store.hit(2, 400) == 0              # miss, counted
+    assert store.hit(1, 600) == 400            # partial hit: min(resident, want)
+    assert store.insert(4, 5000) == []         # oversized: simply not retained
+    assert store.resident(4) == 0
+    assert store.resident(1) == 400 and store.resident(3) == 400
+    assert store.hits == 2 and store.misses == 1
+    assert store.hit_tokens == 800 and store.evictions == 1
+
+
+def test_prefix_store_checkpoint_backed_kv(tmp_path):
+    store = PrefixStore(capacity_tokens=10_000, ckpt_dir=str(tmp_path))
+    kv = {"k": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    store.insert(7, 64)
+    store.attach_kv(7, kv)
+    back = store.fetch_kv(7, {"k": np.zeros((3, 4), np.float32)})
+    assert np.array_equal(back["k"], kv["k"])
+    store.drop(7)
+    assert store.resident(7) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Affinity, priority, preemption, shedding
+# --------------------------------------------------------------------------- #
+def test_affinity_is_inert_on_sessionless_traces():
+    """PR 9 identity: with no sessions there are no prefix ids, so turning
+    the whole §13 layer on must not move a single cycle."""
+    base = serve_fleet(SINGLE_TURN, config=FleetConfig(fleet=(16, 8)))
+    on = serve_fleet(SINGLE_TURN, config=FleetConfig(fleet=(16, 8),
+                                                     affinity=True))
+    assert _served_key(base) == _served_key(on)
+    assert on["metrics"].summary()["prefix"]["hits"] == 0
+
+
+def test_affinity_dominates_on_session_traces():
+    """Warm prefix hits skip re-prefilled context: strictly more goodput,
+    no worse p99 — on both the fleet and the single-fabric paths."""
+    off = serve_fleet(SESSIONS, config=FleetConfig(fleet=(16, 8)))
+    on = serve_fleet(SESSIONS, config=FleetConfig(fleet=(16, 8),
+                                                  affinity=True))
+    s_on, s_off = on["metrics"].summary(), off["metrics"].summary()
+    assert s_on["prefix"]["hits"] > 0
+    assert s_on["goodput_rps"] > s_off["goodput_rps"]
+    assert s_on["latency_us"]["p99"] <= s_off["latency_us"]["p99"]
+
+    one_off = serve_workload(SESSIONS, config=ServeConfig(execute=False))
+    one_on = serve_workload(SESSIONS, config=ServeConfig(execute=False,
+                                                         affinity=True))
+    m_on, m_off = one_on["metrics"], one_off["metrics"]
+    assert m_on.prefix_hits > 0 and m_on.prefix_hit_tokens > 0
+    assert m_on.summary()["goodput_rps"] >= m_off.summary()["goodput_rps"]
+
+
+def test_warm_hit_shrinks_admission_and_prefill_n():
+    """A turn whose deadline is infeasible for the full cumulative context
+    becomes admissible once the resident prefix is skipped."""
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=(1, 2, 4, 8, 16, 32))
+    model = cal.model
+    # Deadline feasible for N=1024 at M=32 but not for N=4096.
+    t_max = float(model.predict(32, 1024)) * 1.1
+    req = Request(rid=0, arrival=0.0, prompt_len=4096, gen_len=1,
+                  slo_cycles=t_max, prefix_id=5, prefix_len=3072)
+    assert not sched.admit(req).admitted
+    store = PrefixStore(capacity_tokens=100_000)
+    store.insert(5, 3072)
+    fabric = SimulatedFabric(jitter_pct=0.0)
+    batcher = ContinuousBatcher(sched, cal, fabric=fabric, max_batch=4,
+                                prefix_store=store)
+    out = batcher.run([Request(rid=1, arrival=0.0, prompt_len=4096,
+                               gen_len=1, slo_cycles=t_max, prefix_id=5,
+                               prefix_len=3072)])
+    r = out["requests"][0]
+    assert r.t_done is not None and r.prefix_hit == 3072
+    prefills = [p for p in out["plans"] if p.kind == "prefill"]
+    assert prefills[0].n_elems == 4096 - 3072
+
+
+def test_priority_drains_premium_first_and_preempts():
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=(1, 2, 4, 8, 16, 32))
+    fabric = SimulatedFabric(jitter_pct=0.0)
+    batcher = ContinuousBatcher(sched, cal, fabric=fabric, max_batch=1,
+                                priority=True, preempt=True)
+    # A long batch-class request occupies the only slot; a premium request
+    # arrives mid-decode and must evict it.
+    batch_req = Request(rid=0, arrival=0.0, prompt_len=1024, gen_len=512,
+                        priority=2)
+    prem = Request(rid=1, arrival=1_000.0, prompt_len=256, gen_len=4,
+                   priority=0)
+    out = batcher.run([batch_req, prem])
+    assert batcher.metrics.preempted == 1
+    assert batch_req.preemptions == 1
+    assert prem.t_done is not None and batch_req.t_done is not None
+    assert prem.t_done < batch_req.t_done     # premium overtook the victim
+    # The victim resumed from its emitted tokens as a restore-priced job,
+    # not a from-scratch regeneration.
+    assert any(p.kind == "restore" for p in out["plans"])
+    assert batcher.metrics.recovered == 1
+
+
+def test_shed_depth_rejects_over_backlog_classes():
+    sched = OffloadAwareScheduler(OnlineCalibrator(),
+                                  available_m=(1, 2, 4, 8, 16, 32),
+                                  shed_depth={2: 2})
+    batch_req = Request(rid=0, arrival=0.0, prompt_len=256, gen_len=4,
+                        priority=2)
+    prem = Request(rid=1, arrival=0.0, prompt_len=256, gen_len=4,
+                   priority=0)
+    assert sched.admit(batch_req, backlog=2).admitted      # at the cap
+    d = sched.admit(batch_req, backlog=3)                  # beyond it
+    assert not d.admitted and "shed" in d.reason
+    assert sched.admit(prem, backlog=50).admitted          # premium uncapped
+
+
+def test_bound_handoff_prices_a_memcpy_pull():
+    """Fleet mode: the router binds hit/handoff (prefix_resolved=True) and
+    the lane's batcher honors the binding — the pulled KV is priced as a
+    restore-kind memcpy job before the (shrunken) prefill."""
+    cal = OnlineCalibrator()
+    sched = OffloadAwareScheduler(cal, available_m=(1, 2, 4, 8, 16, 32))
+    batcher = ContinuousBatcher(sched, cal,
+                                fabric=SimulatedFabric(jitter_pct=0.0),
+                                max_batch=4)
+    req = Request(rid=0, arrival=0.0, prompt_len=4096, gen_len=1,
+                  prefix_id=9, prefix_len=3072, prefix_hit=3072,
+                  prefix_handoff=True, prefix_resolved=True)
+    out = batcher.run([req])
+    assert req.t_done is not None
+    assert batcher.metrics.restore_jobs == 1      # the cross-lane KV pull
+    assert batcher.metrics.prefix_handoffs == 1
+    prefills = [p for p in out["plans"] if p.kind == "prefill"]
+    assert prefills[0].n_elems == 4096 - 3072     # pulled tokens skipped
+
+
+# --------------------------------------------------------------------------- #
+# Config API + deprecation shims
+# --------------------------------------------------------------------------- #
+def test_serve_config_kwarg_shim_is_byte_identical_and_warns():
+    spec = WorkloadSpec(num_requests=24, seed=3)
+    new = serve_workload(spec, config=ServeConfig(execute=False,
+                                                  pipeline=True))
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        old = serve_workload(spec, execute=False, pipeline=True)
+    assert _served_key(new) == _served_key(old)
+    assert old["config"] == ServeConfig(execute=False, pipeline=True)
+    # Kwargs override an explicit config through the same replace path.
+    with pytest.warns(DeprecationWarning):
+        mixed = serve_workload(spec, config=ServeConfig(pipeline=True),
+                               execute=False)
+    assert _served_key(mixed) == _served_key(new)
+
+
+def test_fleet_config_kwarg_shim_is_byte_identical_and_warns():
+    spec = WorkloadSpec(num_requests=24, seed=3)
+    new = serve_fleet(spec, config=FleetConfig(fleet=(16, 8)))
+    with pytest.warns(DeprecationWarning, match="FleetConfig"):
+        old = serve_fleet(spec, fleet=(16, 8))
+    assert _served_key(new) == _served_key(old)
+
+
+def test_unknown_kwargs_still_raise_type_error():
+    with pytest.raises(TypeError):
+        with pytest.warns(DeprecationWarning):
+            serve_workload(WorkloadSpec(num_requests=4), exectue=False)
+
+
+def test_synthetic_workload_is_a_deprecated_alias():
+    spec = WorkloadSpec(num_requests=16, seed=1)
+    with pytest.warns(DeprecationWarning, match="WorkloadSpec.build"):
+        old = synthetic_workload(spec, with_tokens=False)
+    assert _trace_key(old) == _trace_key(spec.build(with_tokens=False))
+
+
+def test_configs_are_frozen():
+    with pytest.raises(Exception):
+        ServeConfig().execute = False
+    with pytest.raises(Exception):
+        FleetConfig().fleet = (8,)
